@@ -1,0 +1,62 @@
+"""Paper Table 3: I/O time of the four HDF5 access patterns.
+
+random access / sequential-stride / chunk-cycle / full-chunk, identical total
+payload.  Reports both real wall-clock against the local store and the PFS
+cost model (which reproduces the paper's ~200x random->full-chunk spread; the
+local page cache compresses the real-time spread).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import cost_model, emit, get_store
+
+
+def run(num_samples: int = 8192, processes: int = 8):
+    store = get_store()
+    cm = cost_model(store)
+    n = num_samples
+    per = n // processes
+    rng = np.random.default_rng(0)
+
+    patterns = {}
+    # (1) random: each process reads its samples in random order, one by one.
+    order = rng.permutation(n)
+    patterns["random"] = [(int(s), 1) for s in order]
+    # (2) sequential stride: process p reads p, p+P, p+2P, ... (stride reads)
+    patterns["seq_stride"] = [
+        (p + i * processes, 1) for p in range(processes) for i in range(per)
+    ]
+    # (3) chunk-cycle: process p owns chunk [p*per, (p+1)*per), reads one by one
+    patterns["chunk_cycle"] = [
+        (p * per + i, 1) for p in range(processes) for i in range(per)
+    ]
+    # (4) full chunk: process p reads its whole chunk in one ranged call
+    patterns["full_chunk"] = [(p * per, per) for p in range(processes)]
+
+    results = {}
+    for name, trace in patterns.items():
+        store.reset_counters()
+        t0 = time.perf_counter()
+        for off, k in trace:
+            store.read_range(off, off + k)
+        wall = time.perf_counter() - t0
+        offs = np.asarray([t[0] for t in trace])
+        lens = np.asarray([t[1] for t in trace])
+        modeled = cm.trace_time(offs, lens) / processes  # parallel processes
+        results[name] = (wall, modeled)
+        emit(f"table3/{name}/wall", wall / n * 1e6, f"total_s={wall:.4f}")
+        emit(f"table3/{name}/modeled", modeled / n * 1e6,
+             f"modeled_s={modeled:.3f}")
+
+    base = results["random"][1]
+    for name, (_, modeled) in results.items():
+        emit(f"table3/{name}/speedup_vs_random", 0.0,
+             f"{base / modeled:.1f}x")
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,42 @@
+"""Paper Fig. 12: per-node PFS loads before/after load balancing.
+
+The sync-barrier metric is the per-step MAX over nodes (all nodes wait for
+the slowest loader); balancing shrinks max toward mean.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, get_store
+from repro.core.scheduler import SolarConfig
+from repro.data import make_loader
+
+
+def run(num_epochs: int = 4, nodes: int = 16, local_batch: int = 32,
+        buffer: int = 768):
+    store = get_store()
+    out = {}
+    for label, balance in (("imbalanced", False), ("balanced", True)):
+        store.reset_counters()
+        cfg = SolarConfig(num_nodes=nodes, local_batch=local_batch,
+                          buffer_size=buffer, enable_balance=balance,
+                          enable_chunking=False)
+        ld = make_loader("solar", store, nodes, local_batch, num_epochs,
+                         buffer, 0, solar_config=cfg)
+        for _ in ld:
+            pass
+        miss = np.asarray(ld.report.miss_counts)  # [steps, nodes]
+        steady = miss[miss.shape[0] // 2:]
+        out[label] = steady
+        emit(f"fig12/{label}/per_node_mean", 0.0,
+             " ".join(str(int(x)) for x in steady.mean(axis=0)[:8]) + " ...")
+        emit(f"fig12/{label}/sync_barrier", 0.0,
+             f"max={steady.max(axis=1).mean():.1f} mean={steady.mean():.1f}")
+    speedup = out["imbalanced"].max(axis=1).mean() / max(
+        out["balanced"].max(axis=1).mean(), 1e-9)
+    emit("fig12/barrier_speedup", 0.0, f"{speedup:.2f}x")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,30 @@
+"""Paper Fig. 16: distribution of per-node training batch sizes after the
+compute-balance <-> load-balance trade-off."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, get_store
+from repro.data import make_loader
+
+
+def run(num_epochs: int = 3, nodes: int = 16, local_batch: int = 512 // 16,
+        buffer: int = 2048):
+    store = get_store()
+    ld = make_loader("solar", store, nodes, local_batch, num_epochs, buffer, 0)
+    for _ in ld:
+        pass
+    sizes = np.asarray(ld.report.batch_sizes, dtype=np.float64)  # [steps, nodes]
+    steady = sizes[sizes.shape[0] // 3:]
+    emit("fig16/nominal_local_batch", 0.0, str(local_batch))
+    emit("fig16/mean", 0.0, f"{steady.mean():.2f}")
+    emit("fig16/std", 0.0, f"{steady.std():.2f}")
+    emit("fig16/p01_p99", 0.0,
+         f"{np.percentile(steady, 1):.0f}..{np.percentile(steady, 99):.0f}")
+    emit("fig16/capacity_overhead", 0.0,
+         f"{(steady.max() / local_batch - 1) * 100:.1f}%")
+    return steady
+
+
+if __name__ == "__main__":
+    run()

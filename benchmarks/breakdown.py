@@ -1,0 +1,76 @@
+"""Paper Fig. 3 / Table 1: training-time breakdown (load vs compute).
+
+Trains the reduced PtychoNN surrogate for real on CPU with the naive loader
+vs SOLAR; wall-clock load/compute split comes from the Trainer counters.
+The paper's 98% load fraction needs a remote PFS — we report both the real
+split against the local store AND the modeled split under the PFS cost model.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import cost_model, emit, get_store
+from repro.configs.surrogates import SURROGATES
+from repro.data import make_loader
+from repro.models import cnn
+from repro.optim.adamw import AdamWConfig
+from repro.train.step import init_train_state, make_train_step
+from repro.train.trainer import Trainer
+
+
+class _Cfg:
+    grad_accum = 1
+    grad_accum_dtype = "float32"
+
+
+def run(steps: int = 24, nodes: int = 4, local_batch: int = 16,
+        buffer: int = 4096):
+    cfg = SURROGATES["ptychonn"].reduced()
+    store = get_store(num_samples=8192, sample_floats=int(np.prod(cfg.input_shape)))
+    cm = cost_model(store)
+    key = jax.random.PRNGKey(0)
+
+    def make_batch_fn(capacity):
+        def mk(sb):
+            data, weights = sb.to_global(capacity)
+            data = data.reshape((data.shape[0],) + cfg.input_shape)
+            pooled = data.reshape(data.shape[0], -1).mean(axis=1)
+            y = np.broadcast_to(
+                pooled.reshape((-1,) + (1,) * len(cfg.output_shape)),
+                (data.shape[0],) + cfg.output_shape,
+            ).astype(np.float32)
+            return {"x": data, "y": y, "weights": weights}
+        return mk
+
+    out = {}
+    for name in ("naive", "solar"):
+        store.reset_counters()
+        ld = make_loader(name, store, nodes, local_batch, 3, buffer, 0,
+                         collect_data=True, cost_model=cm)
+        params = cnn.init_surrogate(key, cfg)
+        opt = AdamWConfig(lr=1e-3)
+        step = jax.jit(make_train_step(
+            _Cfg(), opt, lambda p, b: cnn.surrogate_loss(p, b, cfg)))
+        t = Trainer(loader=ld, step_fn=step,
+                    state=init_train_state(params, opt),
+                    make_batch=make_batch_fn(getattr(ld, "capacity", local_batch + 8)),
+                    prefetch_depth=2)
+        t.run(max_steps=steps)
+        bd = t.breakdown()
+        modeled_load = ld.report.modeled_time_s
+        compute = bd["compute_s"]
+        frac = modeled_load / (modeled_load + compute)
+        out[name] = (modeled_load, compute)
+        emit(f"fig3/{name}/real_load_s", bd["load_s"] / steps * 1e6,
+             f"{bd['load_s']:.3f}s ({bd['load_frac']*100:.1f}%)")
+        emit(f"fig3/{name}/compute_s", compute / steps * 1e6, f"{compute:.3f}s")
+        emit(f"fig3/{name}/modeled_pfs_load", 0.0,
+             f"{modeled_load:.2f}s -> load fraction {frac*100:.1f}%")
+    emit("fig3/modeled_speedup_total", 0.0,
+         f"{(out['naive'][0] + out['naive'][1]) / (out['solar'][0] + out['solar'][1]):.2f}x")
+    return out
+
+
+if __name__ == "__main__":
+    run()

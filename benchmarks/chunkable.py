@@ -1,0 +1,30 @@
+"""Paper Fig. 13: fraction of PFS samples that ride in multi-sample chunks
+across training runs (different seeds)."""
+from __future__ import annotations
+
+from benchmarks.common import emit, get_store
+from repro.data import make_loader
+
+
+def run(num_epochs: int = 3, nodes: int = 8, local_batch: int = 64,
+        buffer: int = 3072, runs: int = 5):
+    store = get_store()
+    fracs = []
+    for seed in range(runs):
+        store.reset_counters()
+        ld = make_loader("solar", store, nodes, local_batch, num_epochs,
+                         buffer, seed)
+        for _ in ld:
+            pass
+        # stats from the schedule itself
+        st = ld.schedule.stats()
+        fracs.append(st.chunked_fraction)
+        emit(f"fig13/run{seed}/chunked_fraction", 0.0,
+             f"{st.chunked_fraction:.4f}")
+    emit("fig13/mean", 0.0, f"{sum(fracs) / len(fracs):.4f}")
+    emit("fig13/best", 0.0, f"{max(fracs):.4f}")
+    return fracs
+
+
+if __name__ == "__main__":
+    run()

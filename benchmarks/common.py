@@ -1,0 +1,41 @@
+"""Shared benchmark fixtures: synthetic stores + standard configs.
+
+All benchmarks print ``name,us_per_call,derived`` CSV rows (one per
+measurement) so ``python -m benchmarks.run`` output is machine-readable.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+
+import numpy as np
+
+from repro.core.costmodel import PFSCostModel
+from repro.data.storage import ChunkStore, create_synthetic_store
+
+_STORES: dict = {}
+
+
+def get_store(num_samples: int = 32768, sample_floats: int = 1024) -> ChunkStore:
+    """Cached synthetic dataset: ``num_samples`` x 4 KiB float32 samples."""
+    key = (num_samples, sample_floats)
+    if key not in _STORES:
+        path = os.path.join(
+            tempfile.gettempdir(), f"solar_bench_{num_samples}_{sample_floats}.bin"
+        )
+        if not (os.path.exists(path) and os.path.exists(path + ".header.json")):
+            create_synthetic_store(
+                path, num_samples=num_samples, sample_shape=(sample_floats,),
+                dtype=np.float32, kind="arange",
+            )
+        _STORES[key] = ChunkStore(path)
+    _STORES[key].reset_counters()
+    return _STORES[key]
+
+
+def cost_model(store: ChunkStore) -> PFSCostModel:
+    return PFSCostModel(sample_bytes=store.sample_bytes)
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.3f},{derived}")

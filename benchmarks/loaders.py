@@ -1,0 +1,43 @@
+"""Paper Fig. 9: loader speedups across buffer tiers.
+
+Three buffer scenarios (paper §5.1): (1) dataset <= local buffer,
+(2) local < dataset <= total buffer, (3) dataset > total buffer.
+Reports modeled-PFS-time speedups of LRU/NoPFS/DeepIO/SOLAR over the
+PyTorch-DataLoader analog (naive).
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, get_store
+from repro.data import make_loader
+
+SCENARIOS = {
+    # name: (buffer per node, in samples); dataset = 32768, nodes = 8
+    "low":  1024,    # total 8k  << 32k  (scenario 3)
+    "mid":  3072,    # total 24k <~ 32k  (scenario 3/2 boundary)
+    "high": 6144,    # total 48k >= 32k  (scenario 2)
+}
+
+
+def run(num_epochs: int = 6, nodes: int = 8, local_batch: int = 32):
+    store = get_store()
+    out = {}
+    for tier, buf in SCENARIOS.items():
+        times = {}
+        for name in ("naive", "lru", "nopfs", "deepio", "solar"):
+            store.reset_counters()
+            ld = make_loader(name, store, nodes, local_batch, num_epochs, buf, 0)
+            for _ in ld:
+                pass
+            times[name] = ld.report.modeled_time_s
+            emit(f"fig9/{tier}/{name}/modeled_s", 0.0,
+                 f"{ld.report.modeled_time_s:.3f}s "
+                 f"numPFS={ld.report.total_pfs} hit={ld.report.hit_rate:.3f}")
+        for name in ("lru", "nopfs", "deepio", "solar"):
+            emit(f"fig9/{tier}/{name}/speedup", 0.0,
+                 f"{times['naive'] / max(times[name], 1e-9):.2f}x")
+        out[tier] = times
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,47 @@
+"""Paper Fig. 11: per-iteration PFS loads (max over nodes), naive vs SOLAR."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, get_store
+from repro.data import make_loader
+
+
+def run(num_epochs: int = 6, nodes: int = 8, local_batch: int = 64,
+        buffer: int | None = None):
+    out = {}
+    for tier in ([buffer] if buffer else [1536, 3072]):
+        out[tier] = _run_tier(num_epochs, nodes, local_batch, tier)
+    return out
+
+
+def _run_tier(num_epochs: int, nodes: int, local_batch: int, buffer: int):
+    from repro.core.scheduler import SolarConfig
+
+    store = get_store()
+    out = {}
+    for name in ("naive", "solar"):
+        store.reset_counters()
+        kw = {}
+        if name == "solar":
+            # Fig. 11 isolates the access-order effect: count true misses
+            # (chunk-prefetch waste would shift loads between steps).
+            kw["solar_config"] = SolarConfig(
+                num_nodes=nodes, local_batch=local_batch, buffer_size=buffer,
+                enable_chunking=False,
+            )
+        ld = make_loader(name, store, nodes, local_batch, num_epochs, buffer,
+                         0, **kw)
+        for _ in ld:
+            pass
+        mx = np.asarray(ld.report.miss_counts).max(axis=1)
+        out[name] = mx
+        emit(f"fig11/buf{buffer}/{name}/mean_max_numPFS", 0.0,
+             f"{mx.mean():.1f} (min {mx.min()} max {mx.max()})")
+    red = out["naive"].mean() / max(out["solar"][len(out["solar"]) // 2:].mean(), 1e-9)
+    emit(f"fig11/buf{buffer}/steady_state_reduction", 0.0, f"{red:.2f}x")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,49 @@
+"""Paper Fig. 10: cumulative contribution of each SOLAR optimization.
+
+naive -> +LRU buffer -> +O1 (epoch order + locality, Belady) -> +O2 (load
+balancing) -> +O3 (aggregated chunking), modeled PFS time.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, get_store
+from repro.core.scheduler import SolarConfig
+from repro.data import make_loader
+
+STEPS = [
+    ("naive", "naive", {}),
+    ("+LRU", "lru", {}),
+    ("+O1_access_order", "solar",
+     dict(enable_balance=False, enable_chunking=False)),
+    ("+O2_load_balance", "solar", dict(enable_chunking=False)),
+    ("+O3_chunking", "solar", {}),
+]
+
+
+def run(num_epochs: int = 6, nodes: int = 8, local_batch: int = 32,
+        buffer: int = 3072):
+    store = get_store()
+    base = None
+    results = {}
+    for label, name, toggles in STEPS:
+        store.reset_counters()
+        kw = {}
+        if name == "solar":
+            kw["solar_config"] = SolarConfig(
+                num_nodes=nodes, local_batch=local_batch, buffer_size=buffer,
+                **toggles,
+            )
+        ld = make_loader(name, store, nodes, local_batch, num_epochs, buffer,
+                         0, **kw)
+        for _ in ld:
+            pass
+        t = ld.report.modeled_time_s
+        base = base or t
+        results[label] = t
+        emit(f"fig10/{label}", 0.0,
+             f"{t:.3f}s cum_speedup={base / t:.2f}x "
+             f"numPFS={ld.report.total_pfs}")
+    return results
+
+
+if __name__ == "__main__":
+    run()

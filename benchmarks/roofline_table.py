@@ -1,0 +1,49 @@
+"""Render the dry-run JSON into the EXPERIMENTS.md roofline tables.
+
+    PYTHONPATH=src python -m benchmarks.roofline_table results/dryrun_final.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def fmt_s(x):
+    if x == 0:
+        return "0"
+    if x < 0.1:
+        return f"{x * 1e3:.2f}ms"
+    return f"{x:.2f}s"
+
+
+def main(path: str, mesh_filter: str | None = "16x16"):
+    rows = json.load(open(path))
+    print("| arch | shape | mesh | HBM/dev | fits | compute | memory | "
+          "mem (kernel-adj) | collective | bound | useful | MFU bound |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        if mesh_filter and r.get("mesh") != mesh_filter:
+            continue
+        if r["status"] == "skipped":
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | "
+                  f"SKIP: {r['reason']} |||||||")
+            continue
+        if r["status"] != "ok":
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | ERROR "
+                  f"{r.get('error', '')} |||||||||")
+            continue
+        rf = r["roofline"]
+        m = r["memory"]
+        ka = r["hlo_stats"].get("kernel_adjusted_memory_s", rf["memory_s"])
+        print(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {m['per_device_gb']:.1f} GB | {'Y' if m['fits_16gb'] else 'N'} "
+            f"| {fmt_s(rf['compute_s'])} | {fmt_s(rf['memory_s'])} "
+            f"| {fmt_s(ka)} | {fmt_s(rf['collective_s'])} "
+            f"| {rf['bottleneck']} | {rf['useful_ratio']:.3f} "
+            f"| {rf['mfu_bound']:.3f} |"
+        )
+
+
+if __name__ == "__main__":
+    main(sys.argv[1], sys.argv[2] if len(sys.argv) > 2 else "16x16")

@@ -1,0 +1,61 @@
+"""Benchmark harness: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig9,table3]
+
+Output: ``name,us_per_call,derived`` CSV rows per measurement.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks import (
+    access_patterns,
+    balance,
+    batch_dist,
+    breakdown,
+    chunkable,
+    epoch_order,
+    loaders,
+    numpfs,
+    optim_breakdown,
+)
+
+SUITES = {
+    "table3": access_patterns.run,      # access-pattern I/O microbenchmark
+    "fig3": breakdown.run,              # training-time breakdown
+    "fig9": loaders.run,                # loader speedups by buffer tier
+    "fig10": optim_breakdown.run,       # per-optimization contribution
+    "fig11": numpfs.run,                # PFS loads per iteration
+    "fig12": balance.run,               # load balance across nodes
+    "fig13": chunkable.run,             # chunkable fraction
+    "fig16": batch_dist.run,            # batch-size distribution
+    "eoo": epoch_order.run,             # path-TSP solver comparison
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite names (default: all)")
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else list(SUITES)
+    print("suite,us_per_call,derived")
+    failures = 0
+    for name in names:
+        t0 = time.perf_counter()
+        try:
+            SUITES[name]()
+            print(f"{name}/_elapsed,{(time.perf_counter() - t0) * 1e6:.0f},ok")
+        except Exception as e:  # pragma: no cover
+            failures += 1
+            print(f"{name}/_error,0,{type(e).__name__}: {e}")
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

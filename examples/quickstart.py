@@ -1,0 +1,41 @@
+"""Quickstart: SOLAR in 60 seconds.
+
+Builds a synthetic scientific dataset, runs the offline scheduler, and
+compares SOLAR against the PyTorch-DataLoader analog on hit rate, PFS loads,
+and modeled loading time.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import tempfile
+
+import numpy as np
+
+from repro.core import OfflineScheduler, SolarConfig
+from repro.data import create_synthetic_store, make_loader
+
+# 1. A "terabyte-scale" dataset, miniaturized: 16k samples of 4 KiB.
+store = create_synthetic_store(
+    tempfile.mktemp(suffix=".bin"), num_samples=16384,
+    sample_shape=(1024,), dtype=np.float32, kind="arange",
+)
+
+# 2. The offline scheduler alone: epoch-order + locality + balance + chunking.
+cfg = SolarConfig(num_nodes=8, local_batch=32, buffer_size=1024)
+schedule = OfflineScheduler(cfg).build(num_samples=16384, num_epochs=6)
+print("SOLAR schedule:", schedule.stats().summary())
+
+# 3. Head-to-head as data loaders (counting mode: no actual reads).
+for name in ("naive", "lru", "nopfs", "solar"):
+    ld = make_loader(name, store, 8, 32, 6, 1024, 0)
+    for _ in ld:
+        pass
+    r = ld.report
+    print(f"{name:6s} numPFS={r.total_pfs:7d} hit_rate={r.hit_rate:.3f} "
+          f"modeled_load={r.modeled_time_s:8.2f}s")
+
+# 4. SOLAR with real reads, feeding padded SPMD batches.
+ld = make_loader("solar", store, 8, 32, 1, 1024, 0, collect_data=True)
+sb = next(iter(ld))
+data, weights = sb.to_global(ld.capacity)
+print(f"global batch {data.shape}, real rows {int(weights.sum())} "
+      f"(padding rows carry zero loss weight -> identical gradients)")

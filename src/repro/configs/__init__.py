@@ -1,0 +1,39 @@
+"""Architecture registry: importing this package registers every assigned
+architecture (``--arch <id>``) plus the paper's surrogate models."""
+from repro.configs.base import (
+    SHAPES,
+    ModelConfig,
+    ShapeConfig,
+    get_config,
+    list_configs,
+    register,
+)
+
+# Importing each module registers its CONFIG.
+from repro.configs import (  # noqa: F401  (import side effects)
+    deepseek_7b,
+    falcon_mamba_7b,
+    hymba_1_5b,
+    llama3_405b,
+    llava_next_mistral_7b,
+    minitron_8b,
+    phi3_5_moe,
+    qwen2_0_5b,
+    qwen2_moe_a2_7b,
+    whisper_medium,
+)
+from repro.configs.surrogates import SURROGATES, SurrogateConfig
+
+ARCH_IDS = list_configs()
+
+__all__ = [
+    "SHAPES",
+    "ModelConfig",
+    "ShapeConfig",
+    "SurrogateConfig",
+    "SURROGATES",
+    "ARCH_IDS",
+    "get_config",
+    "list_configs",
+    "register",
+]

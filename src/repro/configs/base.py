@@ -1,0 +1,230 @@
+"""Config schema: model architectures × input shapes.
+
+Every assigned architecture is a :class:`ModelConfig`; the four assigned
+input-shape cells are :class:`ShapeConfig`.  ``reduced()`` produces the
+CPU-smoke-test variant of any architecture (same family and wiring, tiny
+dimensions).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+__all__ = ["ModelConfig", "ShapeConfig", "SHAPES", "register", "get_config", "list_configs"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    #: 'dense' | 'moe' | 'ssm' | 'hybrid' | 'encdec' | 'vlm'
+    family: str
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                 # 0 -> d_model // num_heads
+    qkv_bias: bool = False
+    tie_embeddings: bool = False
+    rope_theta: float = 1e4
+    norm_eps: float = 1e-6
+
+    # MoE
+    num_experts: int = 0
+    num_shared_experts: int = 0
+    top_k: int = 0
+    router_aux_coef: float = 0.01
+    expert_capacity_factor: float = 1.25
+
+    # SSM (Mamba-1)
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    ssm_dt_rank: int = 0              # 0 -> ceil(d_model / 16)
+
+    # Hybrid (Hymba-style): sliding-window attention everywhere; SSM branch
+    # in parallel with attention in every layer.
+    sliding_window: int = 0           # 0 -> full attention
+
+    # Encoder-decoder (Whisper-style)
+    encoder_layers: int = 0
+    source_len: int = 0               # precomputed frame embeddings length
+
+    # VLM stub frontend
+    num_patches: int = 0              # precomputed patch embeddings per sample
+
+    # numerics / memory policy (overridable per dry-run cell)
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+    opt_state_dtype: str = "float32"
+    #: dtype of the gradient-accumulation buffer (bf16 at 400B scale to fit HBM).
+    grad_accum_dtype: str = "float32"
+    remat: bool = True
+    #: two-level layer scan: outer scan over L/scan_block checkpointed blocks,
+    #: inner scan over scan_block layers — residual memory ~ 2*sqrt(L)*carry
+    #: instead of L*carry (0 = single-level).
+    scan_block: int = 0
+    #: cross-entropy sequence chunk: logits materialize [B, ce_chunk, V] at a
+    #: time (checkpointed scan), never the full [B, S, V].
+    ce_chunk: int = 256
+    #: decode KV-cache storage: 'bfloat16' or 'int8' (symmetric per-row
+    #: scales; halves cache HBM, the decode bottleneck).
+    kv_cache_dtype: str = "bfloat16"
+    #: microbatches for gradient accumulation in train_step.
+    grad_accum: int = 1
+
+    # ---- derived -----------------------------------------------------------
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def ssm_d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def resolved_dt_rank(self) -> int:
+        return self.ssm_dt_rank or math.ceil(self.d_model / 16)
+
+    @property
+    def attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Can this arch serve 500k-token contexts? (SSM state or window cache)"""
+        return self.family == "ssm" or (
+            self.family == "hybrid" and self.sliding_window > 0
+        )
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    def num_params(self) -> int:
+        """Analytic parameter count (embeddings included once if tied)."""
+        d, hd = self.d_model, self.resolved_head_dim
+        h, k = self.num_heads, self.num_kv_heads
+        p = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        per_layer = 0
+        if self.family != "ssm":
+            attn = d * h * hd + 2 * d * k * hd + h * hd * d
+            if self.qkv_bias:
+                attn += (h + 2 * k) * hd
+        else:
+            attn = 0
+        if self.family in ("dense", "vlm", "encdec", "hybrid"):
+            mlp = 3 * d * self.d_ff if self.family != "encdec" else 2 * d * self.d_ff
+        elif self.family == "moe":
+            mlp = (self.num_experts + self.num_shared_experts) * 3 * d * self.d_ff
+            mlp += d * self.num_experts  # router
+        else:
+            mlp = 0
+        ssm = 0
+        if self.family in ("ssm", "hybrid"):
+            di, n, r = self.ssm_d_inner, self.ssm_state, self.resolved_dt_rank
+            ssm = d * 2 * di + di * self.ssm_conv + di * (r + 2 * n) + r * di + di * n + di + di * d
+        norms = 2 * d
+        per_layer = attn + mlp + ssm + norms
+        p += self.num_layers * per_layer
+        if self.family == "encdec":
+            enc_attn = d * h * hd * 2 + 2 * d * k * hd * 0 + h * hd * d  # self-attn
+            cross = d * h * hd + 2 * d * k * hd + h * hd * d
+            p += self.encoder_layers * (attn + 2 * d * self.d_ff + 2 * d)
+            p += self.num_layers * cross  # decoder cross-attention blocks
+        p += d  # final norm
+        return int(p)
+
+    def num_active_params(self) -> int:
+        """Params touched per token (MoE: top-k + shared experts only)."""
+        if self.family != "moe":
+            return self.num_params()
+        d = self.d_model
+        dense_like = self.num_params() - self.num_layers * (
+            self.num_experts + self.num_shared_experts
+        ) * 3 * d * self.d_ff
+        active = self.num_layers * (
+            self.top_k + self.num_shared_experts
+        ) * 3 * d * self.d_ff
+        return int(dense_like + active)
+
+    # ---- smoke-test reduction ------------------------------------------------
+
+    def reduced(self) -> "ModelConfig":
+        """Same family/wiring, tiny dims — used by per-arch CPU smoke tests."""
+        h = min(self.num_heads, 4)
+        k = max(1, min(self.num_kv_heads, 2))
+        h = max(h, k)
+        h = (h // k) * k  # keep GQA divisibility
+        return self.replace(
+            num_layers=2,
+            d_model=64,
+            num_heads=h,
+            num_kv_heads=k,
+            head_dim=16,
+            d_ff=128,
+            vocab_size=256,
+            num_experts=min(self.num_experts, 4),
+            num_shared_experts=min(self.num_shared_experts, 1),
+            top_k=min(self.top_k, 2),
+            # no token dropping at smoke scale: keeps decode == full forward
+            # bit-comparable (dropping depends on group length).
+            expert_capacity_factor=4.0,
+            ssm_state=min(self.ssm_state, 8),
+            ssm_dt_rank=4 if self.family in ("ssm", "hybrid") else 0,
+            sliding_window=min(self.sliding_window, 32) if self.sliding_window else 0,
+            encoder_layers=2 if self.encoder_layers else 0,
+            source_len=16 if self.source_len else 0,
+            num_patches=8 if self.num_patches else 0,
+            param_dtype="float32",
+            compute_dtype="float32",
+            grad_accum=1,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    #: 'train' lowers train_step; 'prefill' lowers prefill; 'decode' lowers
+    #: serve_step with a seq_len-deep KV cache.
+    kind: str
+
+    def reduced(self) -> "ShapeConfig":
+        return dataclasses.replace(
+            self, seq_len=min(self.seq_len, 64), global_batch=min(self.global_batch, 4)
+        )
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+_REGISTRY: dict[str, ModelConfig] = {}
+
+
+def register(cfg: ModelConfig) -> ModelConfig:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_config(name: str) -> ModelConfig:
+    # importing the package populates the registry.
+    import repro.configs  # noqa: F401
+
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown arch {name!r}; have {sorted(_REGISTRY)}") from None
+
+
+def list_configs() -> list[str]:
+    import repro.configs  # noqa: F401
+
+    return sorted(_REGISTRY)

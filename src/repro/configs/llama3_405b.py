@@ -1,0 +1,28 @@
+"""llama3-405b — dense GQA, 128k vocab [arXiv:2407.21783; unverified].
+
+126L d_model=16384 128H (GQA kv=8) d_ff=53248 vocab=128256.
+Full attention ⇒ long_500k skipped (DESIGN.md §4).  Training uses heavy
+gradient accumulation + remat; optimizer states in bf16 to fit v5e HBM at
+256 chips (see EXPERIMENTS.md §Dry-run memory table).
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(
+    ModelConfig(
+        name="llama3-405b",
+        family="dense",
+        num_layers=126,
+        d_model=16384,
+        num_heads=128,
+        num_kv_heads=8,
+        head_dim=128,
+        d_ff=53248,
+        vocab_size=128256,
+        rope_theta=5e5,
+        opt_state_dtype="bfloat16",
+        grad_accum_dtype="bfloat16",
+        grad_accum=16,      # microbatch = 1 seq/device at 256 global batch
+        scan_block=14,      # two-level scan: (9 + 14) residuals vs 126
+        ce_chunk=256,
+    )
+)

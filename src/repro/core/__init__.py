@@ -1,0 +1,29 @@
+"""SOLAR core: the paper's contribution as a composable, pure-Python/numpy
+offline scheduler + runtime buffer strategy.
+
+Public API:
+  * :func:`repro.core.shuffle.generate_epoch_permutations`
+  * :class:`repro.core.scheduler.SolarConfig` / :class:`OfflineScheduler`
+  * :class:`repro.core.plan.Schedule` (the schedule IR)
+  * :class:`repro.core.buffer.BeladyBuffer` / :class:`LRUBuffer`
+  * :class:`repro.core.costmodel.PFSCostModel`
+"""
+from repro.core.buffer import BeladyBuffer, LRUBuffer
+from repro.core.costmodel import PFSCostModel
+from repro.core.plan import ChunkRead, EpochPlan, NodeStepPlan, Schedule, StepPlan
+from repro.core.scheduler import OfflineScheduler, SolarConfig
+from repro.core.shuffle import generate_epoch_permutations
+
+__all__ = [
+    "BeladyBuffer",
+    "LRUBuffer",
+    "PFSCostModel",
+    "ChunkRead",
+    "EpochPlan",
+    "NodeStepPlan",
+    "Schedule",
+    "StepPlan",
+    "OfflineScheduler",
+    "SolarConfig",
+    "generate_epoch_permutations",
+]

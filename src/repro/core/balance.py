@@ -1,0 +1,98 @@
+"""Loading-workload balancing (SOLAR §4.3).
+
+After the locality remap, the per-node buffer-hit counts are skewed, so the
+number of PFS reads per node — the expensive part of the step — is imbalanced
+and the slowest node gates the synchronous step.  SOLAR's observation 2 is
+that *computation* imbalance is nearly free for surrogate models, so it evens
+out the **miss** counts instead of the batch sizes: every node performs
+⌈M/N⌉-or-⌊M/N⌋ PFS reads, while per-node batch sizes (hits + assigned misses)
+are allowed to drift around the nominal local batch.
+
+Under SPMD/XLA all shards must be equal, so the runtime pads each node to a
+fixed capacity ``B_cap`` with zero-weight rows; gradients are identical
+because the *global* batch content is unchanged (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["distribute_misses"]
+
+
+def distribute_misses(
+    misses: list[int],
+    hit_counts: np.ndarray,
+    local_batch: int,
+    capacity: int,
+    balance: bool = True,
+) -> list[list[int]]:
+    """Assign miss samples to nodes.
+
+    ``balance=True``  — SOLAR: equalize per-node *miss* counts subject to the
+        per-node capacity; batch sizes become uneven (paper Fig. 16).
+    ``balance=False`` — ablation/vanilla: restore equal batch sizes
+        (each node trains exactly ``local_batch`` samples), reproducing the
+        imbalanced-loading baseline of paper Fig. 12.
+
+    Misses are handed out in sorted order, round-robin over the currently
+    least-loaded nodes, which keeps each node's miss list clustered for the
+    chunk coalescer.
+    """
+    num_nodes = hit_counts.size
+    out: list[list[int]] = [[] for _ in range(num_nodes)]
+    if not misses:
+        return out
+    miss_counts = np.zeros(num_nodes, dtype=np.int64)
+    totals = hit_counts.astype(np.int64).copy()
+
+    if not balance:
+        # Fill each node back up to exactly `local_batch`.
+        order = sorted(range(num_nodes), key=lambda n: -int(totals[n]))
+        it = iter(sorted(misses))
+        quota = {n: local_batch - int(totals[n]) for n in order}
+        if sum(max(q, 0) for q in quota.values()) < len(misses):
+            raise ValueError("misses exceed unbalanced quota; raise capacity")
+        for n in order:
+            for _ in range(max(quota[n], 0)):
+                try:
+                    out[n].append(next(it))
+                except StopIteration:
+                    return out
+        return out
+
+    # Water-filling to equal(±1) per-node miss counts, then assign
+    # CONTIGUOUS segments of the sorted miss list.  Round-robin singles would
+    # also balance the counts but destroys index adjacency — measured to drop
+    # the chunkable fraction (paper Fig. 13) to ~0; contiguous segments keep
+    # each node's misses clustered so §4.4 chunking has runs to coalesce.
+    m = len(misses)
+    headroom = np.maximum(capacity - totals, 0)
+    if int(headroom.sum()) < m:
+        raise ValueError(
+            f"global batch does not fit: capacity {capacity} x {num_nodes} "
+            f"nodes < batch; raise capacity_factor"
+        )
+    targets = np.zeros(num_nodes, dtype=np.int64)
+    remaining = m
+    active = headroom > 0
+    while remaining > 0:
+        idx = np.flatnonzero(active & (targets < headroom))
+        share = max(remaining // max(idx.size, 1), 1)
+        for n in idx:
+            take = int(min(share, headroom[n] - targets[n], remaining))
+            targets[n] += take
+            remaining -= take
+            if remaining == 0:
+                break
+        active = targets < headroom
+    # Assign contiguous segments of the sorted miss list per node, using the
+    # headroom-respecting targets computed above (targets[n] <= headroom[n]
+    # by construction, and counts are equal within the final fill round).
+    srt = sorted(misses)
+    cursor = 0
+    for n in range(num_nodes):
+        take = int(targets[n])
+        out[n] = srt[cursor : cursor + take]
+        cursor += take
+    assert cursor == m, (cursor, m)
+    return out

@@ -1,0 +1,59 @@
+"""Parallel-file-system cost model.
+
+The container has no Lustre/GPFS, so the benchmarks report two numbers for
+every loader: (a) real wall-clock against the local chunked store, and (b) the
+modeled PFS time under this cost model, which captures the first-order
+behavior the paper measures — a fixed per-call cost (metadata + seek +
+stripe-lock) plus a streaming term:
+
+    T(read of k contiguous samples) = L + k * sample_bytes / B
+
+Defaults are calibrated so the four access patterns of paper Table 3
+(random / sequential-stride / chunk-cycle / full-chunk) reproduce the same
+ordering and a comparable spread (~200× random → full-chunk).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = ["PFSCostModel"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PFSCostModel:
+    sample_bytes: int
+    #: per-read-call fixed cost (seek + metadata round-trip), seconds.
+    per_call_latency_s: float = 4e-3
+    #: sustained per-process streaming bandwidth, bytes/s.
+    bandwidth_bytes_per_s: float = 2.0e9
+    #: extra penalty per backward seek (random access churns the stripe cache).
+    backward_seek_penalty_s: float = 1e-3
+
+    def read_time(self, num_samples: int) -> float:
+        return (
+            self.per_call_latency_s
+            + num_samples * self.sample_bytes / self.bandwidth_bytes_per_s
+        )
+
+    def chunks_time(self, chunks) -> float:
+        """Total time for one node's reads in a step (sequential per node)."""
+        return float(sum(self.read_time(c.span) for c in chunks))
+
+    def step_time(self, per_node_chunks) -> float:
+        """Critical-path time of a step: nodes read in parallel."""
+        if not per_node_chunks:
+            return 0.0
+        return max(self.chunks_time(c) for c in per_node_chunks)
+
+    def trace_time(self, offsets: np.ndarray, run_lengths: np.ndarray) -> float:
+        """Time of an explicit access trace (used by the Table-3 microbench)."""
+        t = 0.0
+        prev_end = None
+        for off, k in zip(offsets.tolist(), run_lengths.tolist()):
+            t += self.read_time(int(k))
+            if prev_end is not None and off < prev_end:
+                t += self.backward_seek_penalty_s
+            prev_end = off + int(k)
+        return t

@@ -1,0 +1,224 @@
+"""Schedule IR for the SOLAR offline scheduler.
+
+The offline scheduler (``repro.core.scheduler``) turns the pre-determined
+multi-epoch shuffle into an executable :class:`Schedule`:
+
+  Schedule
+    └── EpochPlan           (one per epoch, in *optimized* epoch order)
+          └── StepPlan      (one per global batch)
+                └── NodeStepPlan   (one per data-parallel node)
+
+Every :class:`NodeStepPlan` records which samples the node trains this step,
+which of them are buffer hits, and the coalesced chunk reads covering the
+misses.  The IR is pure data (numpy + tuples) so it can be pickled into a
+checkpoint and hashed for reproducibility.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import numpy as np
+
+__all__ = [
+    "ChunkRead",
+    "NodeStepPlan",
+    "StepPlan",
+    "EpochPlan",
+    "Schedule",
+    "ScheduleStats",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ChunkRead:
+    """One contiguous PFS read: samples ``[start, stop)`` (store order).
+
+    ``wanted`` is the number of samples in the range that are actual misses;
+    ``stop - start - wanted`` samples are redundant bytes fetched because the
+    ranged read was still cheaper than splitting (paper §4.4, observation 3).
+    """
+
+    start: int
+    stop: int
+    wanted: int
+
+    @property
+    def span(self) -> int:
+        return self.stop - self.start
+
+    @property
+    def waste(self) -> int:
+        return self.span - self.wanted
+
+
+@dataclasses.dataclass
+class NodeStepPlan:
+    """What node ``node`` does at one training step."""
+
+    node: int
+    #: sample ids trained on this node this step (real samples only).
+    sample_ids: np.ndarray
+    #: parallel bool mask: True where the sample is served from the buffer.
+    hit_mask: np.ndarray
+    #: coalesced PFS reads covering exactly the misses.
+    chunks: tuple[ChunkRead, ...]
+    #: sample ids actually admitted into this node's buffer this step
+    #: (Belady may bypass admission; bypassed ids are absent here).
+    admissions: np.ndarray
+    #: sample ids evicted from this node's buffer after this step.
+    evictions: np.ndarray
+
+    @property
+    def num_real(self) -> int:
+        return int(self.sample_ids.size)
+
+    @property
+    def num_hits(self) -> int:
+        return int(self.hit_mask.sum())
+
+    @property
+    def num_misses(self) -> int:
+        return self.num_real - self.num_hits
+
+    @property
+    def pfs_samples(self) -> int:
+        """Samples actually fetched from the PFS including chunk waste."""
+        return sum(c.span for c in self.chunks)
+
+    def validate(self) -> None:
+        assert self.sample_ids.shape == self.hit_mask.shape
+        covered = sum(c.wanted for c in self.chunks)
+        assert covered == self.num_misses, (covered, self.num_misses)
+        miss_ids = set(self.sample_ids[~self.hit_mask].tolist())
+        in_chunks = set()
+        for c in self.chunks:
+            in_chunks.update(range(c.start, c.stop))
+        assert miss_ids <= in_chunks, "chunk reads must cover every miss"
+
+
+@dataclasses.dataclass
+class StepPlan:
+    step: int
+    nodes: list[NodeStepPlan]
+
+    def global_batch(self) -> np.ndarray:
+        """The multiset of samples trained this step across all nodes."""
+        return np.concatenate([n.sample_ids for n in self.nodes])
+
+    @property
+    def max_pfs_samples(self) -> int:
+        """Per-step critical path: the most-loaded node (nodes load in parallel)."""
+        return max(n.pfs_samples for n in self.nodes)
+
+
+@dataclasses.dataclass
+class EpochPlan:
+    #: index into the *original* shuffle (i.e. which epoch's permutation this is).
+    epoch_id: int
+    #: position in the optimized training order.
+    order_pos: int
+    steps: list[StepPlan]
+
+
+@dataclasses.dataclass
+class ScheduleStats:
+    """Aggregate statistics used by the benchmarks (Figs. 10-13, 16)."""
+
+    num_nodes: int
+    num_epochs: int
+    steps_per_epoch: int
+    total_samples_trained: int
+    total_hits: int
+    total_misses: int
+    total_pfs_samples: int          # misses + chunk waste
+    total_chunk_reads: int
+    total_singleton_reads: int
+    #: per-(epoch, step) max over nodes of miss count — the loading critical path.
+    per_step_max_miss: np.ndarray
+    #: per-(epoch, step, node) real batch size (Fig. 16 distribution).
+    batch_sizes: np.ndarray
+    #: per-(epoch, step, node) miss counts (Fig. 12).
+    miss_counts: np.ndarray
+
+    @property
+    def hit_rate(self) -> float:
+        t = self.total_hits + self.total_misses
+        return self.total_hits / t if t else 0.0
+
+    @property
+    def chunked_fraction(self) -> float:
+        """Fraction of miss samples that ride in a multi-sample chunk (Fig. 13)."""
+        if self.total_misses == 0:
+            return 0.0
+        chunked = self.total_misses - self.total_singleton_reads
+        return chunked / self.total_misses
+
+    def summary(self) -> dict:
+        return {
+            "hit_rate": round(self.hit_rate, 4),
+            "total_misses": int(self.total_misses),
+            "total_pfs_samples": int(self.total_pfs_samples),
+            "chunked_fraction": round(self.chunked_fraction, 4),
+            "mean_step_max_miss": float(self.per_step_max_miss.mean())
+            if self.per_step_max_miss.size
+            else 0.0,
+            "batch_size_std": float(self.batch_sizes.std()),
+        }
+
+
+@dataclasses.dataclass
+class Schedule:
+    """A fully materialized SOLAR training schedule."""
+
+    num_nodes: int
+    local_batch: int
+    capacity: int                   # per-node padded batch capacity (B_cap)
+    buffer_size: int                # per-node buffer size, in samples
+    epoch_order: np.ndarray         # optimized order of epoch ids
+    epochs: list[EpochPlan]
+
+    def __iter__(self) -> Iterator[StepPlan]:
+        for ep in self.epochs:
+            yield from ep.steps
+
+    @property
+    def num_steps(self) -> int:
+        return sum(len(ep.steps) for ep in self.epochs)
+
+    def stats(self) -> ScheduleStats:
+        hits = misses = pfs = chunk_reads = singleton = trained = 0
+        max_miss, bsz, msc = [], [], []
+        for ep in self.epochs:
+            for sp in ep.steps:
+                step_miss = []
+                for n in sp.nodes:
+                    trained += n.num_real
+                    hits += n.num_hits
+                    misses += n.num_misses
+                    pfs += n.pfs_samples
+                    for c in n.chunks:
+                        if c.wanted > 1:
+                            chunk_reads += 1
+                        else:
+                            singleton += 1
+                    step_miss.append(n.num_misses)
+                    bsz.append(n.num_real)
+                    msc.append(n.num_misses)
+                max_miss.append(max(step_miss) if step_miss else 0)
+        nodes = self.num_nodes
+        nsteps = self.num_steps
+        return ScheduleStats(
+            num_nodes=nodes,
+            num_epochs=len(self.epochs),
+            steps_per_epoch=nsteps // max(len(self.epochs), 1),
+            total_samples_trained=trained,
+            total_hits=hits,
+            total_misses=misses,
+            total_pfs_samples=pfs,
+            total_chunk_reads=chunk_reads,
+            total_singleton_reads=singleton,
+            per_step_max_miss=np.asarray(max_miss, dtype=np.int64),
+            batch_sizes=np.asarray(bsz, dtype=np.int64).reshape(nsteps, nodes),
+            miss_counts=np.asarray(msc, dtype=np.int64).reshape(nsteps, nodes),
+        )

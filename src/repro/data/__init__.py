@@ -1,0 +1,26 @@
+"""Data substrate: chunked sample store ("PFS"), loaders, and the device
+feed pipeline."""
+from repro.data.loaders import (
+    DeepIOLoader,
+    LoaderReport,
+    LRULoader,
+    NaiveLoader,
+    NoPFSLoader,
+    SolarLoader,
+    StepBatch,
+    make_loader,
+)
+from repro.data.storage import ChunkStore, create_synthetic_store
+
+__all__ = [
+    "ChunkStore",
+    "create_synthetic_store",
+    "DeepIOLoader",
+    "LoaderReport",
+    "LRULoader",
+    "NaiveLoader",
+    "NoPFSLoader",
+    "SolarLoader",
+    "StepBatch",
+    "make_loader",
+]

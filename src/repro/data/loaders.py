@@ -1,0 +1,509 @@
+"""Data loaders: SOLAR and every baseline the paper compares against.
+
+All loaders share one interface so the benchmarks and the trainer are
+loader-agnostic:
+
+  * :class:`NaiveLoader`   — PyTorch-DataLoader analog: fresh shuffle each
+    epoch, contiguous node split, no buffer, per-sample PFS reads.
+  * :class:`LRULoader`     — Naive + per-node LRU buffer (paper §5.3's
+    "PyTorch DataLoader + LRU" ablation baseline).
+  * :class:`NoPFSLoader`   — clairvoyant-*next-epoch* prefetch/buffer analog
+    of Dryden et al. (2021): eviction by next-use distance, but the horizon is
+    only the following epoch, and misses may be served from *remote* node
+    buffers (inter-node fetch) before falling back to the PFS.
+  * :class:`DeepIOLoader`  — Zhu et al. (2018) analog: partition-resident
+    buffers, shuffle only *within* each node's resident set (sacrifices
+    randomness — which is exactly why SOLAR rejects this design).
+  * :class:`SolarLoader`   — executes the offline :class:`Schedule`: Belady
+    buffer, locality remap, load-balanced misses, aggregated chunk reads.
+
+Each loader yields :class:`StepBatch` objects and accumulates a
+:class:`LoaderReport` with numPFS / modeled PFS time / wall time, which is
+what the paper's figures plot.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core.buffer import BeladyBuffer, LRUBuffer
+from repro.core.costmodel import PFSCostModel
+from repro.core.plan import Schedule
+from repro.core.scheduler import OfflineScheduler, SolarConfig, build_next_use_index
+from repro.core.shuffle import (
+    default_node_assignment,
+    generate_epoch_permutations,
+    split_global_batches,
+)
+from repro.data.storage import ChunkStore
+
+__all__ = [
+    "StepBatch",
+    "LoaderReport",
+    "NaiveLoader",
+    "LRULoader",
+    "NoPFSLoader",
+    "DeepIOLoader",
+    "SolarLoader",
+    "make_loader",
+]
+
+
+@dataclasses.dataclass
+class StepBatch:
+    epoch: int
+    step: int
+    #: per-node real sample ids.
+    node_ids: list[np.ndarray]
+    #: per-node sample arrays, [num_real, *sample_shape]; None when counting only.
+    node_data: list[np.ndarray] | None
+    #: per-node hit masks (True = served from buffer).
+    hit_masks: list[np.ndarray]
+
+    def to_global(self, capacity: int):
+        """Pad each node to ``capacity`` rows and stack: SPMD-ready batch.
+
+        Returns ``(data, weights)`` with shapes ``[N*capacity, ...]`` and
+        ``[N*capacity]``; dummy rows have weight 0 so the masked loss makes
+        gradients identical to the unpadded batch (DESIGN.md §3).
+        """
+        assert self.node_data is not None
+        n = len(self.node_ids)
+        shape = self.node_data[0].shape[1:]
+        dtype = self.node_data[0].dtype
+        data = np.zeros((n, capacity) + shape, dtype)
+        weights = np.zeros((n, capacity), np.float32)
+        for i, arr in enumerate(self.node_data):
+            k = min(arr.shape[0], capacity)
+            data[i, :k] = arr[:k]
+            weights[i, :k] = 1.0
+        return data.reshape((n * capacity,) + shape), weights.reshape(-1)
+
+
+@dataclasses.dataclass
+class LoaderReport:
+    name: str
+    num_nodes: int
+    #: per-(step, node) PFS sample counts (misses incl. chunk waste).
+    pfs_counts: list[list[int]] = dataclasses.field(default_factory=list)
+    #: per-(step, node) miss counts (wanted samples only).
+    miss_counts: list[list[int]] = dataclasses.field(default_factory=list)
+    #: per-(step, node) remote-buffer fetch counts (NoPFS only).
+    remote_counts: list[list[int]] = dataclasses.field(default_factory=list)
+    #: per-(step, node) batch sizes.
+    batch_sizes: list[list[int]] = dataclasses.field(default_factory=list)
+    modeled_time_s: float = 0.0
+    wall_time_s: float = 0.0
+    total_hits: int = 0
+    total_samples: int = 0
+
+    @property
+    def total_pfs(self) -> int:
+        return int(np.sum(self.pfs_counts)) if self.pfs_counts else 0
+
+    @property
+    def total_misses(self) -> int:
+        return int(np.sum(self.miss_counts)) if self.miss_counts else 0
+
+    @property
+    def hit_rate(self) -> float:
+        return self.total_hits / self.total_samples if self.total_samples else 0.0
+
+    @property
+    def max_step_pfs(self) -> np.ndarray:
+        return np.asarray(self.pfs_counts).max(axis=1)
+
+    def summary(self) -> dict:
+        return {
+            "loader": self.name,
+            "numPFS": self.total_pfs,
+            "misses": self.total_misses,
+            "hit_rate": round(self.hit_rate, 4),
+            "modeled_time_s": round(self.modeled_time_s, 3),
+            "wall_time_s": round(self.wall_time_s, 3),
+        }
+
+
+class _Base:
+    name = "base"
+
+    def __init__(
+        self,
+        store: ChunkStore,
+        num_nodes: int,
+        local_batch: int,
+        num_epochs: int,
+        buffer_size: int,
+        seed: int = 0,
+        cost_model: PFSCostModel | None = None,
+        collect_data: bool = False,
+    ):
+        self.store = store
+        self.num_nodes = num_nodes
+        self.local_batch = local_batch
+        self.num_epochs = num_epochs
+        self.buffer_size = buffer_size
+        self.seed = seed
+        self.cost = cost_model or PFSCostModel(sample_bytes=store.sample_bytes)
+        self.collect_data = collect_data
+        self.report = LoaderReport(name=self.name, num_nodes=num_nodes)
+        self.perms = generate_epoch_permutations(
+            store.num_samples, num_epochs, seed
+        )
+        # per-node data buffers (actual arrays) when materializing batches.
+        self._data_buf: list[dict[int, np.ndarray]] = [
+            {} for _ in range(num_nodes)
+        ]
+
+    # subclasses implement __iter__ yielding StepBatch.
+
+    def _account(
+        self,
+        per_node_chunks,
+        per_node_miss,
+        per_node_batch,
+        per_node_hits,
+        per_node_remote=None,
+    ) -> None:
+        r = self.report
+        r.pfs_counts.append([sum(c.span for c in cs) for cs in per_node_chunks])
+        r.miss_counts.append(list(per_node_miss))
+        r.batch_sizes.append(list(per_node_batch))
+        r.remote_counts.append(
+            list(per_node_remote) if per_node_remote else [0] * self.num_nodes
+        )
+        r.total_hits += int(sum(per_node_hits))
+        r.total_samples += int(sum(per_node_batch))
+        node_times = []
+        for n, cs in enumerate(per_node_chunks):
+            t = self.cost.chunks_time(cs)
+            if per_node_remote:
+                t += self.remote_time(per_node_remote[n])
+            node_times.append(t)
+        r.modeled_time_s += max(node_times) if node_times else 0.0
+
+    def remote_time(self, k: int, interconnect_bps: float = 1.0e10,
+                    latency_s: float = 5e-5) -> float:
+        return k * (latency_s + self.store.sample_bytes / interconnect_bps)
+
+    def _fetch(self, node: int, ids, chunks) -> np.ndarray | None:
+        """Materialize one node's batch: buffer hits from RAM, misses via reads."""
+        if not self.collect_data:
+            return None
+        t0 = time.perf_counter()
+        buf = self._data_buf[node]
+        fetched: dict[int, np.ndarray] = {}
+        for c in chunks:
+            arr = self.store.read_range(c.start, c.stop)
+            for j, s in enumerate(range(c.start, c.stop)):
+                fetched[s] = arr[j]
+        rows = []
+        for s in ids:
+            s = int(s)
+            if s in fetched:
+                rows.append(fetched[s])
+            elif s in buf:
+                rows.append(buf[s])
+            else:  # remote fetch / uncovered: direct read
+                rows.append(self.store.read_one(s))
+        self.report.wall_time_s += time.perf_counter() - t0
+        self._sync_data_buffer(node, fetched)
+        out = (
+            np.stack(rows)
+            if rows
+            else np.empty((0,) + self.store.sample_shape, self.store.dtype)
+        )
+        return out
+
+    def _sync_data_buffer(self, node: int, fetched: dict[int, np.ndarray]) -> None:
+        """Mirror the logical buffer: keep arrays only for resident ids."""
+        resident = self._resident_ids(node)
+        buf = self._data_buf[node]
+        for s, arr in fetched.items():
+            if s in resident:
+                buf[s] = arr
+        for s in list(buf):
+            if s not in resident:
+                del buf[s]
+
+    def _resident_ids(self, node: int) -> set:
+        return set()
+
+
+def _singleton_chunks(ids):
+    from repro.core.plan import ChunkRead
+
+    return tuple(ChunkRead(int(s), int(s) + 1, 1) for s in sorted(ids))
+
+
+class NaiveLoader(_Base):
+    """Fresh shuffle, contiguous split, no buffer, per-sample reads."""
+
+    name = "naive"
+
+    def __iter__(self):
+        for e in range(self.num_epochs):
+            batches = split_global_batches(
+                self.perms[e], self.num_nodes * self.local_batch
+            )
+            for k in range(batches.shape[0]):
+                split = default_node_assignment(batches[k], self.num_nodes)
+                chunks = [_singleton_chunks(ids) for ids in split]
+                self._account(
+                    chunks,
+                    [len(s) for s in split],
+                    [len(s) for s in split],
+                    [0] * self.num_nodes,
+                )
+                data = [self._fetch(n, split[n], chunks[n]) for n in range(self.num_nodes)]
+                yield StepBatch(
+                    e,
+                    k,
+                    list(split),
+                    data if self.collect_data else None,
+                    [np.zeros(len(s), bool) for s in split],
+                )
+
+
+class LRULoader(_Base):
+    """Naive + per-node LRU buffer (paper §5.3 baseline)."""
+
+    name = "lru"
+
+    def __init__(self, *args, **kwargs):
+        super().__init__(*args, **kwargs)
+        self.bufs = [LRUBuffer(self.buffer_size) for _ in range(self.num_nodes)]
+
+    def _resident_ids(self, node):
+        return self.bufs[node].resident
+
+    def __iter__(self):
+        for e in range(self.num_epochs):
+            batches = split_global_batches(
+                self.perms[e], self.num_nodes * self.local_batch
+            )
+            for k in range(batches.shape[0]):
+                split = default_node_assignment(batches[k], self.num_nodes)
+                chunks, hits, masks = [], [], []
+                for n, ids in enumerate(split):
+                    m = np.asarray([int(s) in self.bufs[n] for s in ids])
+                    miss = [int(s) for s in ids[~m]]
+                    chunks.append(_singleton_chunks(miss))
+                    hits.append(int(m.sum()))
+                    masks.append(m)
+                    for s in ids:
+                        self.bufs[n].admit(int(s))
+                self._account(
+                    chunks,
+                    [len(ids) - h for ids, h in zip(split, hits)],
+                    [len(s) for s in split],
+                    hits,
+                )
+                data = [self._fetch(n, split[n], chunks[n]) for n in range(self.num_nodes)]
+                yield StepBatch(e, k, list(split), data if self.collect_data else None, masks)
+
+
+class NoPFSLoader(_Base):
+    """Clairvoyant-next-epoch buffering + remote-buffer fetches (NoPFS analog).
+
+    Eviction uses exact next-use distances but only *within a one-epoch
+    horizon* (NoPFS predicts the next epoch's distribution); a miss checks the
+    other nodes' buffers (hierarchical storage) before touching the PFS —
+    faster than PFS, slower than local, and it is inter-node traffic SOLAR
+    avoids by construction.
+    """
+
+    name = "nopfs"
+
+    def __init__(self, *args, **kwargs):
+        super().__init__(*args, **kwargs)
+        self.bufs = [BeladyBuffer(self.buffer_size) for _ in range(self.num_nodes)]
+
+    def _resident_ids(self, node):
+        return self.bufs[node].resident
+
+    def __iter__(self):
+        d = self.perms.shape[1]
+        gb = self.num_nodes * self.local_batch
+        steps = d // gb
+        span = steps * gb
+        horizon = 2 * span  # current + next epoch
+        for e in range(self.num_epochs):
+            # Access string visible to NoPFS: this epoch + the next one.
+            cur = self.perms[e, :span]
+            nxt_ep = self.perms[e + 1, :span] if e + 1 < self.num_epochs else None
+            window = np.concatenate([cur, nxt_ep]) if nxt_ep is not None else cur
+            next_use = build_next_use_index(window)
+            batches = cur.reshape(steps, gb)
+            for k in range(steps):
+                split = default_node_assignment(batches[k], self.num_nodes)
+                base = k * gb
+                chunks, missc, hits, remote, masks = [], [], [], [], []
+                for n, ids in enumerate(split):
+                    m = np.zeros(len(ids), bool)
+                    miss_pfs, n_remote = [], 0
+                    for i, s in enumerate(ids.tolist()):
+                        pos = base + n * self.local_batch + i
+                        nu = int(next_use[pos]) if pos < window.size else horizon
+                        if s in self.bufs[n]:
+                            m[i] = True
+                            self.bufs[n].update_next_use(s, nu)
+                        elif any(s in self.bufs[r] for r in range(self.num_nodes) if r != n):
+                            n_remote += 1
+                            self.bufs[n].admit(s, nu)
+                        else:
+                            miss_pfs.append(s)
+                            self.bufs[n].admit(s, nu)
+                    chunks.append(_singleton_chunks(miss_pfs))
+                    missc.append(len(miss_pfs))
+                    hits.append(int(m.sum()))
+                    remote.append(n_remote)
+                    masks.append(m)
+                self._account(chunks, missc, [len(s) for s in split], hits, remote)
+                data = [self._fetch(n, split[n], chunks[n]) for n in range(self.num_nodes)]
+                yield StepBatch(e, k, list(split), data if self.collect_data else None, masks)
+
+
+class DeepIOLoader(_Base):
+    """Partition-resident buffers + node-local shuffle (DeepIO analog).
+
+    Maximum reuse, but the randomization is node-local only — the design SOLAR
+    rejects because it degrades surrogate accuracy (paper §4.2.2).
+    """
+
+    name = "deepio"
+
+    def __init__(self, *args, **kwargs):
+        super().__init__(*args, **kwargs)
+        d = self.store.num_samples
+        per = min(self.buffer_size, (d + self.num_nodes - 1) // self.num_nodes)
+        self._partition = [
+            np.arange(n * per, min((n + 1) * per, d)) for n in range(self.num_nodes)
+        ]
+        leftover_start = min(per * self.num_nodes, d)
+        self._leftover = np.arange(leftover_start, d)
+        self._primed = [False] * self.num_nodes
+
+    def _resident_ids(self, node):
+        return set(self._partition[node].tolist())
+
+    def __iter__(self):
+        from repro.core.chunking import plan_chunks
+        from repro.core.plan import ChunkRead
+
+        rng = np.random.Generator(np.random.PCG64(self.seed + 7))
+        steps = self.store.num_samples // (self.num_nodes * self.local_batch)
+        for e in range(self.num_epochs):
+            local_orders = [rng.permutation(p) for p in self._partition]
+            leftover = rng.permutation(self._leftover)
+            lo_steps = (
+                np.array_split(leftover, steps)
+                if leftover.size
+                else [np.empty(0, np.int64)] * steps
+            )
+            for k in range(steps):
+                ids_n, chunks, missc, hits, masks = [], [], [], [], []
+                lo_split = np.array_split(lo_steps[k], self.num_nodes)
+                for n in range(self.num_nodes):
+                    want = self.local_batch - lo_split[n].size
+                    res = np.take(
+                        local_orders[n],
+                        np.arange(k * want, (k + 1) * want),
+                        mode="wrap",
+                    ) if local_orders[n].size else np.empty(0, np.int64)
+                    ids = np.concatenate([res, lo_split[n]])
+                    m = np.zeros(ids.size, bool)
+                    if self._primed[n]:
+                        # Residents are hits; only the leftover tail hits PFS.
+                        m[: res.size] = True
+                        cs = plan_chunks(lo_split[n], max_chunk=16)
+                        miss = int(lo_split[n].size)
+                    else:
+                        # Stage-in: one ranged read of the whole partition
+                        # (DeepIO's whole point) + this step's leftovers.
+                        part = self._partition[n]
+                        cs = ()
+                        if part.size:
+                            cs = (ChunkRead(int(part[0]), int(part[-1]) + 1, part.size),)
+                        cs = cs + plan_chunks(lo_split[n], max_chunk=16)
+                        miss = int(ids.size)
+                        self._primed[n] = True
+                    chunks.append(cs)
+                    ids_n.append(ids)
+                    missc.append(miss)
+                    hits.append(int(m.sum()))
+                    masks.append(m)
+                self._account(chunks, missc, [i.size for i in ids_n], hits)
+                data = [
+                    self._fetch(n, ids_n[n], chunks[n]) for n in range(self.num_nodes)
+                ]
+                yield StepBatch(e, k, ids_n, data if self.collect_data else None, masks)
+
+
+class SolarLoader(_Base):
+    """Executes the SOLAR offline schedule against the store."""
+
+    name = "solar"
+
+    def __init__(self, *args, solar_config: SolarConfig | None = None, **kwargs):
+        super().__init__(*args, **kwargs)
+        self.solar_config = solar_config or SolarConfig(
+            num_nodes=self.num_nodes,
+            local_batch=self.local_batch,
+            buffer_size=self.buffer_size,
+            seed=self.seed,
+        )
+        self.scheduler = OfflineScheduler(self.solar_config)
+        t0 = time.perf_counter()
+        self.schedule: Schedule = self.scheduler.build(
+            self.store.num_samples, self.num_epochs, perms=self.perms
+        )
+        self.schedule_build_s = time.perf_counter() - t0
+        self._resident: list[set] = [set() for _ in range(self.num_nodes)]
+
+    def _resident_ids(self, node):
+        return self._resident[node]
+
+    @property
+    def capacity(self) -> int:
+        return self.schedule.capacity
+
+    def __iter__(self):
+        for ep in self.schedule.epochs:
+            for sp in ep.steps:
+                chunks = [n.chunks for n in sp.nodes]
+                self._account(
+                    chunks,
+                    [n.num_misses for n in sp.nodes],
+                    [n.num_real for n in sp.nodes],
+                    [n.num_hits for n in sp.nodes],
+                )
+                data = []
+                for n, npn in enumerate(sp.nodes):
+                    # Replay the plan's recorded buffer transitions so the
+                    # data buffer mirrors the Belady simulation exactly.
+                    self._resident[n] |= {int(s) for s in npn.admissions.tolist()}
+                    self._resident[n] -= {int(s) for s in npn.evictions.tolist()}
+                    assert len(self._resident[n]) <= self.buffer_size
+                    data.append(self._fetch(n, npn.sample_ids, npn.chunks))
+                yield StepBatch(
+                    ep.epoch_id,
+                    sp.step,
+                    [n.sample_ids for n in sp.nodes],
+                    data if self.collect_data else None,
+                    [n.hit_mask for n in sp.nodes],
+                )
+
+
+_LOADERS = {
+    c.name: c for c in (NaiveLoader, LRULoader, NoPFSLoader, DeepIOLoader, SolarLoader)
+}
+
+
+def make_loader(name: str, *args, **kwargs) -> _Base:
+    try:
+        return _LOADERS[name](*args, **kwargs)
+    except KeyError:
+        raise ValueError(f"unknown loader {name!r}; have {sorted(_LOADERS)}") from None

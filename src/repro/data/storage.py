@@ -1,0 +1,162 @@
+"""Chunked sample store — the "PFS + HDF5" layer.
+
+h5py is unavailable in this offline container, so we implement a minimal
+HDF5-like chunked dataset: a JSON header + one flat binary file holding
+``num_samples`` fixed-shape samples contiguously.  What matters for SOLAR is
+preserved exactly:
+
+  * a *ranged* read of samples ``[start, stop)`` is a single seek + one
+    sequential read (this is what makes aggregated chunk loading win), and
+  * a scattered read of k samples costs k seeks + k small reads.
+
+Every read is a real ``pread`` against the filesystem; benchmarks additionally
+price the same access trace under :class:`repro.core.costmodel.PFSCostModel`
+to model a remote Lustre/GPFS where the per-call cost dominates.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+
+import numpy as np
+
+__all__ = ["ChunkStore", "create_synthetic_store"]
+
+_HEADER_SUFFIX = ".header.json"
+
+
+class ChunkStore:
+    """Fixed-shape sample array stored contiguously in one file."""
+
+    def __init__(self, path: str):
+        self.path = path
+        with open(path + _HEADER_SUFFIX) as f:
+            hdr = json.load(f)
+        self.num_samples = int(hdr["num_samples"])
+        self.sample_shape = tuple(hdr["sample_shape"])
+        self.dtype = np.dtype(hdr["dtype"])
+        self.sample_bytes = int(
+            self.dtype.itemsize * int(np.prod(self.sample_shape, dtype=np.int64))
+        )
+        self._fd = os.open(path, os.O_RDONLY)
+        self._lock = threading.Lock()
+        #: access trace: list of (sample_offset, run_length) — consumed by the
+        #: cost model and the access-pattern benchmark; cheap to record.
+        self.trace: list[tuple[int, int]] = []
+        self.bytes_read = 0
+        self.read_calls = 0
+
+    # -- construction --------------------------------------------------------
+
+    @classmethod
+    def create(
+        cls,
+        path: str,
+        data: np.ndarray | None = None,
+        *,
+        num_samples: int | None = None,
+        sample_shape: tuple[int, ...] | None = None,
+        dtype=np.float32,
+        fill: str = "zeros",
+        seed: int = 0,
+    ) -> "ChunkStore":
+        if data is not None:
+            num_samples = data.shape[0]
+            sample_shape = tuple(data.shape[1:])
+            dtype = data.dtype
+        assert num_samples is not None and sample_shape is not None
+        hdr = {
+            "num_samples": int(num_samples),
+            "sample_shape": [int(x) for x in sample_shape],
+            "dtype": np.dtype(dtype).str,
+        }
+        with open(path + _HEADER_SUFFIX, "w") as f:
+            json.dump(hdr, f)
+        if data is not None:
+            data.tofile(path)
+        else:
+            sample_elems = int(np.prod(sample_shape, dtype=np.int64))
+            rng = np.random.Generator(np.random.PCG64(seed))
+            with open(path, "wb") as f:
+                block = 4096
+                for start in range(0, num_samples, block):
+                    n = min(block, num_samples - start)
+                    if fill == "zeros":
+                        arr = np.zeros((n, sample_elems), np.dtype(dtype))
+                    elif fill == "random":
+                        if np.issubdtype(np.dtype(dtype), np.integer):
+                            arr = rng.integers(
+                                0, 255, size=(n, sample_elems)
+                            ).astype(dtype)
+                        else:
+                            arr = rng.standard_normal((n, sample_elems)).astype(dtype)
+                    elif fill == "arange":
+                        # sample i filled with value i — lets tests verify reads.
+                        arr = np.broadcast_to(
+                            np.arange(start, start + n, dtype=np.int64)[:, None],
+                            (n, sample_elems),
+                        ).astype(dtype)
+                    else:
+                        raise ValueError(f"unknown fill {fill!r}")
+                    arr.tofile(f)
+        return cls(path)
+
+    # -- reads ----------------------------------------------------------------
+
+    def read_range(self, start: int, stop: int) -> np.ndarray:
+        """One ranged read: samples [start, stop) in a single pread."""
+        if not 0 <= start < stop <= self.num_samples:
+            raise IndexError((start, stop, self.num_samples))
+        nbytes = (stop - start) * self.sample_bytes
+        with self._lock:
+            buf = os.pread(self._fd, nbytes, start * self.sample_bytes)
+            self.trace.append((start, stop - start))
+            self.bytes_read += nbytes
+            self.read_calls += 1
+        arr = np.frombuffer(buf, dtype=self.dtype)
+        return arr.reshape((stop - start,) + self.sample_shape)
+
+    def read_one(self, idx: int) -> np.ndarray:
+        return self.read_range(idx, idx + 1)[0]
+
+    def read_scattered(self, ids) -> np.ndarray:
+        """k single-sample reads (the random-access baseline pattern)."""
+        return np.stack([self.read_one(int(i)) for i in ids]) if len(ids) else (
+            np.empty((0,) + self.sample_shape, self.dtype)
+        )
+
+    def reset_counters(self) -> None:
+        self.trace.clear()
+        self.bytes_read = 0
+        self.read_calls = 0
+
+    def close(self) -> None:
+        if self._fd >= 0:
+            os.close(self._fd)
+            self._fd = -1
+
+    def __del__(self):  # pragma: no cover - best effort
+        try:
+            self.close()
+        except Exception:
+            pass
+
+
+def create_synthetic_store(
+    path: str,
+    num_samples: int,
+    sample_shape: tuple[int, ...],
+    dtype=np.float32,
+    kind: str = "arange",
+    seed: int = 0,
+) -> ChunkStore:
+    """Synthetic scientific dataset (diffraction frames / token sequences)."""
+    return ChunkStore.create(
+        path,
+        num_samples=num_samples,
+        sample_shape=sample_shape,
+        dtype=dtype,
+        fill=kind,
+        seed=seed,
+    )

@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the compute hot spots: flash attention (online
+softmax in VMEM), Mamba selective scan (state-resident channel tiles), and
+fused RMSNorm.  ``ops`` holds the jit'd wrappers; ``ref`` the jnp oracles."""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

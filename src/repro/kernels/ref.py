@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+Deliberately naive: materialize everything, f32 throughout, no tiling.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["attention_ref", "selective_scan_ref", "rms_norm_ref"]
+
+_NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q [B,H,Sq,hd]; k/v [B,K,Sk,hd], K | H."""
+    b, h, sq, hd = q.shape
+    kh, sk = k.shape[1], k.shape[2]
+    g = h // kh
+    k = jnp.repeat(k, g, axis=1).astype(jnp.float32)
+    v = jnp.repeat(v, g, axis=1).astype(jnp.float32)
+    s = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32), k) / math.sqrt(hd)
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    ok = jnp.ones((sq, sk), bool)
+    if causal:
+        ok &= kpos <= qpos
+    if window > 0:
+        ok &= qpos - kpos < window
+    s = jnp.where(ok, s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", p, v).astype(q.dtype)
+
+
+def selective_scan_ref(u, dt, a, b_ssm, c_ssm, d_skip):
+    """Sequential reference: returns (y [B,S,DI] f32, h_last [B,DI,N] f32)."""
+    bsz, s, di = u.shape
+    n = a.shape[1]
+    uf = u.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    af = a.astype(jnp.float32)
+    bf = b_ssm.astype(jnp.float32)
+    cf = c_ssm.astype(jnp.float32)
+
+    def step(h, t):
+        decay = jnp.exp(dtf[:, t][:, :, None] * af)             # [B, DI, N]
+        h = decay * h + (dtf[:, t] * uf[:, t])[:, :, None] * bf[:, t][:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, cf[:, t]) + d_skip.astype(jnp.float32) * uf[:, t]
+        return h, y
+
+    h0 = jnp.zeros((bsz, di, n), jnp.float32)
+    h_last, ys = jax.lax.scan(step, h0, jnp.arange(s))
+    return jnp.moveaxis(ys, 0, 1), h_last
+
+
+def rms_norm_ref(x, scale, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))).astype(
+        x.dtype
+    )

@@ -1,0 +1,50 @@
+"""Fused RMSNorm Pallas kernel (single pass over rows, f32 reduction).
+
+Small but on the hot path: the XLA path reads x twice (mean-square pass +
+normalize pass at separate fusion boundaries when d is large); the kernel
+tiles rows into VMEM and does both in one read.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["rms_norm_kernel"]
+
+
+def _kernel(x_ref, s_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)              # [block_rows, d]
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    scale = 1.0 + s_ref[...].astype(jnp.float32)
+    o_ref[...] = (x * jax.lax.rsqrt(var + eps) * scale).astype(o_ref.dtype)
+
+
+def rms_norm_kernel(x, scale, *, eps: float = 1e-6, block_rows: int = 256,
+                    interpret: bool = False):
+    """x [..., d]; scale [d].  Matches layers.rms_norm (1+scale convention)."""
+    orig_shape = x.shape
+    d = x.shape[-1]
+    rows = 1
+    for s in x.shape[:-1]:
+        rows *= s
+    x2 = x.reshape(rows, d)
+    block_rows = min(block_rows, rows)
+    pad = (-rows) % block_rows
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_kernel, eps=eps),
+        grid=((rows + pad) // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows + pad, d), x.dtype),
+        interpret=interpret,
+    )(x2, scale)
+    return out[:rows].reshape(orig_shape)

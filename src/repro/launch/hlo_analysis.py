@@ -1,0 +1,379 @@
+"""Post-partitioning HLO text analysis: collective traffic accounting.
+
+``compiled.cost_analysis()`` reports FLOPs and memory bytes but not
+collective traffic, so we walk the compiled HLO module text:
+
+  * every ``all-gather / all-reduce / reduce-scatter / all-to-all /
+    collective-permute`` op contributes its **result** byte size (a good
+    per-device proxy for link traffic: all-reduce moves ~2x(n-1)/n of it,
+    all-gather (n-1)/n — we report raw result bytes and let the roofline use
+    a single link-efficiency constant),
+  * ops inside a ``while`` body (lax.scan over layers / microbatches) are
+    multiplied by the loop trip count, recovered from the loop condition's
+    integer constant — a collective inside a 126-layer scan counts 126x,
+  * multipliers compose through nested whiles and plain calls.
+
+Parsing is defensive: if anything fails we fall back to flat (x1) counting
+and flag it in the result.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+import numpy as np
+
+__all__ = ["collective_bytes", "program_stats", "COLLECTIVE_KINDS"]
+
+COLLECTIVE_KINDS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+# Header: `%name (args...) -> type {` — args may contain nested parens
+# (tuple types), so only the leading name is parsed precisely.
+_COMP_HDR = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+_WHILE_RE = re.compile(
+    r"while\(.*?condition=%?([\w\.\-]+).*?body=%?([\w\.\-]+)"
+    r"|while\(.*?body=%?([\w\.\-]+).*?condition=%?([\w\.\-]+)",
+    re.S,
+)
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*?(\d+)')
+_CALL_RE = re.compile(r"(?:calls|to_apply|body|condition|branch_computations)=\{?%?([\w\.\-,%\s]+)\}?")
+
+
+def _shape_bytes(segment: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(segment):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            n = int(np.prod([int(d) for d in dims.split(",") if d]))
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _split_computations(text: str) -> dict[str, list[str]]:
+    comps: dict[str, list[str]] = {}
+    cur = None
+    depth = 0
+    for line in text.splitlines():
+        stripped = line.strip()
+        if cur is None:
+            m = _COMP_HDR.match(line)
+            if m and stripped.endswith("{") and "->" in line:
+                cur = m.group(1)
+                comps[cur] = []
+                depth = 1
+            continue
+        depth += stripped.count("{") - stripped.count("}")
+        if depth <= 0:
+            cur = None
+            continue
+        comps[cur].append(line)
+    return comps
+
+
+def _trip_count(cond_lines: list[str]) -> int:
+    """Heuristic: largest s32/s64 scalar constant in the loop condition."""
+    best = 1
+    for line in cond_lines:
+        for m in re.finditer(r"[su](?:32|64)\[\]\s+constant\((\d+)\)", line):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def _multipliers(comps: dict[str, list[str]]) -> dict[str, int]:
+    """Execution multiplicity per computation (while trip counts compose)."""
+    mult: dict[str, int] = defaultdict(lambda: 1)
+    edges: list[tuple[str, str, int]] = []
+    for name, lines in comps.items():
+        for line in lines:
+            if "while(" in line:
+                wm = _WHILE_RE.search(line)
+                if not wm:
+                    continue
+                if wm.group(1):
+                    cond_name, body_name = wm.group(1), wm.group(2)
+                else:
+                    body_name, cond_name = wm.group(3), wm.group(4)
+                tm = _TRIP_RE.search(line)
+                tc = int(tm.group(1)) if tm else _trip_count(comps.get(cond_name, []))
+                edges.append((name, body_name, tc))
+                edges.append((name, cond_name, tc))
+            else:
+                for cm in _CALL_RE.finditer(line):
+                    for callee in re.split(r"[,\s]+", cm.group(1)):
+                        callee = callee.strip().lstrip("%")
+                        if callee and callee in comps:
+                            edges.append((name, callee, 1))
+    entry = None
+    for name in comps:
+        if "main" in name.lower() or "entry" in name.lower():
+            entry = name
+            break
+    if entry is None and comps:
+        entry = next(iter(comps))
+    mult[entry] = 1
+    for _ in range(len(comps) + 2):
+        changed = False
+        for caller, callee, factor in edges:
+            want = mult[caller] * factor
+            if want > mult[callee]:
+                mult[callee] = want
+                changed = True
+        if not changed:
+            break
+    return mult
+
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*)$")
+_OP_RE = re.compile(r"([a-z][\w\-]*)\(")
+_ARGS_RE = re.compile(r"\(([^)]*)\)")
+_DIMS_RE = re.compile(r"(\w+_contracting_dims)=\{([0-9,]*)\}")
+_GROUPS_RE = re.compile(r"feature_group_count=(\d+)")
+
+# ops whose result does not correspond to real HBM traffic
+_FREE_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "bitcast-convert", "while", "call", "conditional", "after-all",
+    "partition-id", "replica-id", "iota",
+}
+
+
+def _first_shape_dims(seg: str) -> list[int] | None:
+    m = _SHAPE_RE.search(seg)
+    if not m:
+        return None
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",") if d] if dims else []
+
+
+def program_stats(text: str) -> dict:
+    """Loop-weighted per-device program statistics from compiled HLO text.
+
+    Returns:
+      dot_flops      — 2 * result_elems * contraction for every dot/conv,
+                       weighted by enclosing while trip counts (cost_analysis
+                       counts loop bodies ONCE, so it is useless for scanned
+                       models — measured 24x undercount on a 24-layer scan).
+      traffic_bytes  — Σ (result + operand bytes) of every non-free top-level
+                       op, loop-weighted.  Fusions count at their boundary
+                       (internal temps stay in registers/VMEM), which is
+                       exactly the HBM-traffic model the roofline wants.
+    """
+    comps = _split_computations(text)
+    mult = _multipliers(comps)
+    # fused computations are inlined at their call site: their body traffic
+    # must NOT be counted, but their *dots* must (weighted by the fusion's
+    # caller multiplicity, already propagated through _CALL_RE edges).
+    fusion_bodies = {
+        callee
+        for name, lines in comps.items()
+        for line in lines
+        if "fusion(" in line
+        for cm in _CALL_RE.finditer(line)
+        for callee in [c.strip().lstrip("%") for c in re.split(r"[,\s]+", cm.group(1))]
+        if callee in comps
+    }
+
+    dot_flops = 0.0
+    traffic = 0.0
+    # Traffic attribution by source op (from HLO metadata op_name): lets the
+    # perf pass compute a "Pallas-kernel-adjusted" roofline by removing the
+    # attention/SSM interior traffic the fused kernels keep in VMEM.
+    tags = {
+        "attn_interior": ("bhst", "bkgst", "bhtd->bhst", "exponential"),
+        "ssm_interior": ("associative_scan", "cumsum", "bqdn"),
+        "ce": ("logsumexp", "dv->bsv", "take_along"),
+    }
+    traffic_by_tag = defaultdict(float)
+    for name, lines in comps.items():
+        m = mult[name]
+        # local symbol table: %name -> (dims of first shape, total bytes)
+        sym: dict[str, tuple[list[int], int]] = {}
+        parsed = []
+        for line in lines:
+            dm = _DEF_RE.match(line)
+            if not dm:
+                continue
+            lhs_name, rest = dm.group(1), dm.group(2)
+            om = _OP_RE.search(rest)
+            shape_seg = rest[: om.start()] if om else rest
+            shape_dims = _first_shape_dims(shape_seg)
+            if shape_dims is not None:
+                sym[lhs_name] = (shape_dims, _shape_bytes(shape_seg))
+            parsed.append((lhs_name, rest, om))
+        for lhs_name, rest, om in parsed:
+            op = om.group(1) if om else ""
+            result_bytes = sym.get(lhs_name, ([], 0))[1]
+            result_dims = sym.get(lhs_name, ([], 0))[0]
+            if op in ("dot", "convolution"):
+                am = _ARGS_RE.search(rest[rest.index(op + "(") :])
+                args = [
+                    a.strip().lstrip("%")
+                    for a in (am.group(1).split(",") if am else [])
+                ]
+                relems = float(np.prod(result_dims)) if result_dims else 0.0
+                if op == "dot":
+                    contr = 1.0
+                    cm_ = _DIMS_RE.search(rest)
+                    if cm_ and args:
+                        lhs_dims = sym.get(args[0], ([], 0))[0]
+                        for ix in cm_.group(2).split(","):
+                            if ix and int(ix) < len(lhs_dims):
+                                contr *= lhs_dims[int(ix)]
+                    dot_flops += 2.0 * relems * contr * m
+                else:
+                    kdims = sym.get(args[1], ([], 0))[0] if len(args) > 1 else []
+                    groups = 1
+                    gm = _GROUPS_RE.search(rest)
+                    if gm:
+                        groups = int(gm.group(1))
+                    if kdims and result_dims:
+                        kprod = float(np.prod(kdims)) / max(kdims[-1], 1)
+                        dot_flops += 2.0 * relems * kprod / groups * m
+            if name in fusion_bodies:
+                continue  # traffic counted at the fusion boundary
+            if op in _FREE_OPS or not op:
+                continue
+            op_sizes = []
+            if op + "(" in rest:
+                am = _ARGS_RE.search(rest[rest.index(op + "(") :])
+                if am:
+                    for a in am.group(1).split(","):
+                        a = a.strip().lstrip("%")
+                        if a in sym:
+                            op_sizes.append(sym[a][1])
+            operand_bytes = sum(op_sizes)
+            # Slice-aware accounting: a dynamic-update-slice (or a fusion
+            # wrapping one) touches only the updated slice, not the whole
+            # buffer; a dynamic-slice/gather reads only its result's bytes.
+            is_dus = "dynamic-update-slice" in op or "dynamic-update-slice" in lhs_name
+            is_ds = (not is_dus) and (
+                op in ("dynamic-slice", "slice", "gather")
+                or "dynamic-slice" in lhs_name
+            )
+            if is_dus and op_sizes:
+                contrib = 2 * (operand_bytes - max(op_sizes)) * m
+            elif is_ds:
+                contrib = 2 * result_bytes * m
+            else:
+                contrib = (result_bytes + operand_bytes) * m
+            traffic += contrib
+            tag = "other"
+            for t, needles in tags.items():
+                if any(nd in rest for nd in needles):
+                    tag = t
+                    break
+            traffic_by_tag[tag] += contrib
+
+    coll = collective_bytes(text)
+    return {
+        "dot_flops": dot_flops,
+        "traffic_bytes": traffic,
+        "traffic_by_tag": dict(traffic_by_tag),
+        "collectives": coll,
+    }
+
+
+def collective_bytes(text: str) -> dict:
+    """Returns {kind: bytes, 'total': bytes, 'flat_total': bytes, 'ok': bool}.
+
+    Byte counts are per-device result sizes, weighted by loop trip counts.
+    """
+    out = {k: 0 for k in COLLECTIVE_KINDS}
+    flat = {k: 0 for k in COLLECTIVE_KINDS}
+    ok = True
+    try:
+        comps = _split_computations(text)
+        # Build caller multipliers: body computations of a while get the trip
+        # count; called computations inherit the caller's multiplier.
+        mult: dict[str, int] = defaultdict(lambda: 1)
+        edges: list[tuple[str, str, int]] = []  # (caller, callee, factor)
+        for name, lines in comps.items():
+            for line in lines:
+                if " while(" not in line and not line.strip().startswith("%while"):
+                    if "while(" not in line:
+                        continue
+                wm = _WHILE_RE.search(line)
+                if not wm:
+                    continue
+                if wm.group(1):
+                    cond_name, body_name = wm.group(1), wm.group(2)
+                else:
+                    body_name, cond_name = wm.group(3), wm.group(4)
+                tm = _TRIP_RE.search(line)
+                tc = int(tm.group(1)) if tm else _trip_count(
+                    comps.get(cond_name, [])
+                )
+                edges.append((name, body_name, tc))
+                edges.append((name, cond_name, tc))
+            for line in lines:
+                if "while(" in line:
+                    continue
+                for cm in _CALL_RE.finditer(line):
+                    for callee in re.split(r"[,\s]+", cm.group(1)):
+                        callee = callee.strip().lstrip("%")
+                        if callee and callee in comps:
+                            edges.append((name, callee, 1))
+        # Propagate multipliers from ENTRY (fixed-point; graphs are small).
+        entry = None
+        for name in comps:
+            if "entry" in name.lower() or name.startswith("main"):
+                entry = name
+                break
+        if entry is None and comps:
+            entry = next(iter(comps))
+        mult[entry] = 1
+        for _ in range(len(comps) + 2):
+            changed = False
+            for caller, callee, factor in edges:
+                want = mult[caller] * factor
+                if want > mult[callee]:
+                    mult[callee] = want
+                    changed = True
+            if not changed:
+                break
+
+        for name, lines in comps.items():
+            m = mult[name]
+            for line in lines:
+                for kind in COLLECTIVE_KINDS:
+                    if re.search(rf"\s{kind}(?:-start)?\(", line):
+                        # result shape(s): between '=' and the op call.
+                        try:
+                            seg = line.split("=", 1)[1]
+                            seg = re.split(rf"\s{kind}(?:-start)?\(", seg)[0]
+                        except IndexError:
+                            seg = line
+                        b = _shape_bytes(seg)
+                        out[kind] += b * m
+                        flat[kind] += b
+                        break
+    except Exception:
+        ok = False
+        out = {k: 0 for k in COLLECTIVE_KINDS}
+        for line in text.splitlines():
+            for kind in COLLECTIVE_KINDS:
+                if re.search(rf"\s{kind}\(", line) and "=" in line:
+                    seg = re.split(rf"\s{kind}\(", line.split("=", 1)[1])[0]
+                    out[kind] += _shape_bytes(seg)
+                    break
+        flat = dict(out)
+    res = dict(out)
+    res["total"] = sum(out.values())
+    res["flat_total"] = sum(flat.values())
+    res["ok"] = ok
+    return res

@@ -1,0 +1,27 @@
+"""Production mesh builders.
+
+Importing this module never touches jax device state; meshes are built only
+inside the functions (the dry-run sets XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_local_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Target TPU v5e topology: 16x16 = 256 chips/pod; 2 pods multi-pod.
+
+    Axes: ``data`` (FSDP + batch), ``model`` (TP/EP), and ``pod`` (pure DP
+    across pods) in the multi-pod case.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh():
+    """All locally visible devices as a 1-D data mesh (smoke tests, examples)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))

@@ -1,0 +1,132 @@
+"""Roofline-term derivation from the compiled dry-run artifact.
+
+TPU v5e per-chip constants (the target platform; this container is CPU-only
+so terms are derived, not timed):
+
+    peak bf16 compute : 197 TFLOP/s
+    HBM bandwidth     : 819 GB/s
+    ICI link bandwidth: ~50 GB/s per link
+
+``compiled.cost_analysis()`` and ``memory_analysis()`` describe the
+*post-partitioning per-device* program, so the three terms are:
+
+    compute_term_s    = device_flops / PEAK_FLOPS
+    memory_term_s     = device_bytes / HBM_BW
+    collective_term_s = device_collective_bytes / ICI_BW
+
+MODEL_FLOPS (the "useful" work) is the analytic 6·N·D for training and
+2·N·D for inference (N = active params, D = tokens processed), so
+``MODEL_FLOPS / (chips · device_flops)`` exposes remat/dispatch/padding waste.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+__all__ = ["HW", "RooflineReport", "analyze", "model_flops"]
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+HW = {"peak_flops": PEAK_FLOPS, "hbm_bw": HBM_BW, "ici_bw": ICI_BW}
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    n = cfg.num_active_params()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence per step.
+    return 2.0 * n * shape.global_batch
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    device_flops: float
+    device_bytes: float
+    device_collective_bytes: float
+    model_flops: float
+    collective_parse_ok: bool
+
+    @property
+    def compute_term_s(self) -> float:
+        return self.device_flops / PEAK_FLOPS
+
+    @property
+    def memory_term_s(self) -> float:
+        return self.device_bytes / HBM_BW
+
+    @property
+    def collective_term_s(self) -> float:
+        return self.device_collective_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.compute_term_s,
+            "memory": self.memory_term_s,
+            "collective": self.collective_term_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Perfect-overlap lower bound: max of the three terms."""
+        return max(self.compute_term_s, self.memory_term_s, self.collective_term_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        total = self.chips * self.device_flops
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def mfu(self) -> float:
+        """Model FLOPs utilization at the roofline-bound step time."""
+        t = self.step_time_s
+        if t <= 0:
+            return 0.0
+        return self.model_flops / (self.chips * PEAK_FLOPS * t)
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch,
+            "shape": self.shape,
+            "mesh": self.mesh,
+            "chips": self.chips,
+            "compute_s": self.compute_term_s,
+            "memory_s": self.memory_term_s,
+            "collective_s": self.collective_term_s,
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops,
+            "device_flops": self.device_flops,
+            "useful_ratio": self.useful_flops_ratio,
+            "mfu_bound": self.mfu,
+            "coll_parse_ok": self.collective_parse_ok,
+        }
+
+
+def analyze(arch, shape, mesh_name, chips, stats, mflops) -> RooflineReport:
+    """``stats`` comes from hlo_analysis.program_stats: loop-weighted dot
+    FLOPs + HBM traffic + collective result bytes, all per device.
+    (cost_analysis counts while bodies once — useless for scanned layers.)"""
+    coll = stats["collectives"]
+    return RooflineReport(
+        arch=arch,
+        shape=shape,
+        mesh=mesh_name,
+        chips=chips,
+        device_flops=float(stats["dot_flops"]),
+        device_bytes=float(stats["traffic_bytes"]),
+        device_collective_bytes=float(coll["total"]),
+        model_flops=mflops,
+        collective_parse_ok=bool(coll["ok"]),
+    )

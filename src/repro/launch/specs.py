@@ -1,0 +1,103 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) dry-run cell.
+
+``input_specs`` returns weak-type-correct, shardable specs without any device
+allocation.  The VLM/audio frontends are stubs per the assignment: their
+specs are precomputed patch/frame embeddings.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encdec, lm
+from repro.models.lm import CacheSpec
+
+__all__ = ["train_specs", "prefill_specs", "decode_specs", "state_specs",
+           "cell_applicability"]
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def cell_applicability(cfg: ModelConfig, shape: ShapeConfig) -> str | None:
+    """None if the cell runs; otherwise the skip reason (DESIGN.md §4)."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return "full-attention arch: 500k decode is quadratic — skipped"
+    return None
+
+
+def train_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    specs = {
+        "labels": _sds((b, s if cfg.family != "vlm" else s - cfg.num_patches), "int32"),
+        "weights": _sds((b,), "float32"),
+    }
+    if cfg.family == "vlm":
+        # backbone sequence = patches + text; honor the assigned seq_len.
+        specs["tokens"] = _sds((b, s - cfg.num_patches), "int32")
+        specs["patches"] = _sds((b, cfg.num_patches, cfg.d_model), cfg.compute_dtype)
+    elif cfg.family == "encdec":
+        specs["tokens"] = _sds((b, s), "int32")
+        specs["source"] = _sds((b, cfg.source_len, cfg.d_model), cfg.compute_dtype)
+    else:
+        specs["tokens"] = _sds((b, s), "int32")
+    return specs
+
+
+def prefill_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    specs = {}
+    if cfg.family == "vlm":
+        specs["tokens"] = _sds((b, s - cfg.num_patches), "int32")
+        specs["patches"] = _sds((b, cfg.num_patches, cfg.d_model), cfg.compute_dtype)
+    elif cfg.family == "encdec":
+        specs["tokens"] = _sds((b, s), "int32")
+        specs["source"] = _sds((b, cfg.source_len, cfg.d_model), cfg.compute_dtype)
+    else:
+        specs["tokens"] = _sds((b, s), "int32")
+    return specs
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig, *, model_axis: int):
+    """(cache specs, token spec, CacheSpec) for one decode step with a
+    seq_len-deep cache."""
+    b, s = shape.global_batch, shape.seq_len
+    spec = CacheSpec.build(cfg, s, model_axis)
+    if cfg.family == "encdec":
+        cache = jax.eval_shape(
+            lambda: _encdec_cache(cfg, spec, b)
+        )
+    else:
+        cache = jax.eval_shape(lambda: lm.init_cache(cfg, spec, b))
+    return cache, _sds((b,), "int32"), spec
+
+
+def _encdec_cache(cfg: ModelConfig, spec: CacheSpec, b: int):
+    cd = jnp.dtype(cfg.compute_dtype)
+    hd = cfg.resolved_head_dim
+    shape = (cfg.num_layers, b, spec.kv_heads, spec.cache_len, hd)
+    cross = (cfg.num_layers, b, cfg.num_kv_heads, cfg.source_len, hd)
+    return {
+        "pos": jnp.zeros((), jnp.int32),
+        "k": jnp.zeros(shape, cd),
+        "v": jnp.zeros(shape, cd),
+        "ck": jnp.zeros(cross, cd),
+        "cv": jnp.zeros(cross, cd),
+    }
+
+
+def state_specs(cfg: ModelConfig, opt_cfg):
+    """ShapeDtypeStruct tree of the full train state (params + opt moments)."""
+    from repro.train.step import init_train_state
+
+    def build():
+        key = jax.random.PRNGKey(0)
+        if cfg.family == "encdec":
+            params = encdec.init_encdec(key, cfg)
+        else:
+            params = lm.init_lm(key, cfg)
+        return init_train_state(params, opt_cfg)
+
+    return jax.eval_shape(build)

@@ -1,0 +1,6 @@
+"""Model zoo: LM families (dense/GQA, MoE, SSM, hybrid, VLM stub),
+Whisper-style enc-dec, and the paper's CNN surrogates."""
+from repro.models import cnn, encdec, layers, lm
+from repro.models.lm import CacheSpec
+
+__all__ = ["cnn", "encdec", "layers", "lm", "CacheSpec"]

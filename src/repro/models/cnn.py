@@ -1,0 +1,110 @@
+"""The paper's CNN surrogates in pure JAX: PtychoNN, AutoPhaseNN, CosmoFlow.
+
+These are the models whose *training* SOLAR accelerates (paper §3, §5).  They
+are deliberately small (PtychoNN ≈ 1.2M params) — that is the whole premise:
+compute is negligible, data loading dominates.
+
+  * PtychoNN  — 2D conv autoencoder: 64×64 diffraction frame → amplitude +
+    phase (2 output channels).
+  * AutoPhaseNN — same topology in 3D for BCDI volumes.
+  * CosmoFlow — 3D conv regressor → 4 cosmological parameters.
+
+All three share a conv-stack builder parameterized by spatial rank; training
+uses a weighted MSE loss compatible with SOLAR's uneven-batch masking.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.surrogates import SurrogateConfig
+
+__all__ = ["init_surrogate", "surrogate_apply", "surrogate_loss"]
+
+
+def _conv(x, w, b, *, stride: int, rank: int, transpose: bool = False):
+    dn_in = {2: "NHWC", 3: "NDHWC"}[rank]
+    dn_k = {2: "HWIO", 3: "DHWIO"}[rank]
+    dn = (dn_in, dn_k, dn_in)
+    strides = (stride,) * rank
+    if transpose:
+        y = lax.conv_transpose(x, w, strides=strides, padding="SAME",
+                               dimension_numbers=dn)
+    else:
+        y = lax.conv_general_dilated(x, w, window_strides=strides,
+                                     padding="SAME", dimension_numbers=dn)
+    return y + b
+
+
+def _init_conv(key, rank, cin, cout, ksize=3):
+    shape = (ksize,) * rank + (cin, cout)
+    fan_in = cin * ksize**rank
+    w = jax.random.normal(key, shape, jnp.float32) / math.sqrt(fan_in)
+    return {"w": w, "b": jnp.zeros((cout,), jnp.float32)}
+
+
+def init_surrogate(key, cfg: SurrogateConfig):
+    rank = len(cfg.input_shape) - 1
+    cin = cfg.input_shape[-1]
+    ch = cfg.base_channels
+    ks = jax.random.split(key, 4 * cfg.depth + 4)
+    params = {"enc": [], "dec": [], "head": None}
+    c = cin
+    for i in range(cfg.depth):
+        cout = ch * (2**i)
+        params["enc"].append(_init_conv(ks[i], rank, c, cout))
+        c = cout
+    if cfg.kind in ("ptychonn", "autophasenn"):
+        for i in range(cfg.depth):
+            cout = ch * (2 ** (cfg.depth - 2 - i)) if i < cfg.depth - 1 else (
+                cfg.output_shape[-1]
+            )
+            params["dec"].append(
+                _init_conv(ks[cfg.depth + i], rank, c, cout)
+            )
+            c = cout
+    else:  # cosmoflow: dense regressor head
+        spatial = cfg.input_shape[0] // (2**cfg.depth)
+        flat = c * spatial ** rank
+        k1, k2 = ks[-2], ks[-1]
+        params["head"] = {
+            "w1": jax.random.normal(k1, (flat, 128), jnp.float32) / math.sqrt(flat),
+            "b1": jnp.zeros((128,), jnp.float32),
+            "w2": jax.random.normal(k2, (128, cfg.output_shape[0]), jnp.float32)
+            / math.sqrt(128.0),
+            "b2": jnp.zeros((cfg.output_shape[0],), jnp.float32),
+        }
+    return params
+
+
+def surrogate_apply(params, x, cfg: SurrogateConfig):
+    rank = len(cfg.input_shape) - 1
+    h = x
+    for p in params["enc"]:
+        h = jax.nn.leaky_relu(_conv(h, p["w"], p["b"], stride=2, rank=rank))
+    if cfg.kind in ("ptychonn", "autophasenn"):
+        for i, p in enumerate(params["dec"]):
+            h = _conv(h, p["w"], p["b"], stride=2, rank=rank, transpose=True)
+            if i < len(params["dec"]) - 1:
+                h = jax.nn.leaky_relu(h)
+        return h
+    flat = h.reshape(h.shape[0], -1)
+    z = jax.nn.leaky_relu(flat @ params["head"]["w1"] + params["head"]["b1"])
+    return z @ params["head"]["w2"] + params["head"]["b2"]
+
+
+def surrogate_loss(params, batch, cfg: SurrogateConfig):
+    """Weighted MSE.  batch: x [B, ...], y [B, ...], weights [B]."""
+    pred = surrogate_apply(params, batch["x"], cfg)
+    w = batch.get("weights")
+    if w is None:
+        w = jnp.ones((batch["x"].shape[0],), jnp.float32)
+    per = jnp.mean(
+        jnp.square(pred - batch["y"]), axis=tuple(range(1, pred.ndim))
+    )
+    denom = jnp.sum(w)
+    loss = jnp.sum(per * w) / jnp.maximum(denom, 1.0)
+    return loss, {"loss": loss, "tokens": denom}

@@ -1,0 +1,569 @@
+"""Model building blocks, pure-functional (params are pytrees of jnp arrays).
+
+Conventions:
+  * activations: ``x [B, S, D]``; attention internals head-major
+    ``q [B, H, S, hd]``, ``k/v [B, K, S, hd]`` (GQA: K divides H).
+  * every function takes ``compute_dtype`` activations and returns the same;
+    numerically sensitive reductions (softmax, norms, SSM scan) run in f32.
+  * the attention entry point dispatches between the jnp reference, the
+    blockwise online-softmax implementation (bounded memory for 32k+ seq)
+    and the Pallas TPU kernel (``repro.kernels``).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+__all__ = [
+    "rms_norm",
+    "layer_norm",
+    "sinusoidal_positions",
+    "apply_rope",
+    "attention",
+    "decode_attention",
+    "swiglu_mlp",
+    "gelu_mlp",
+    "moe_layer",
+    "mamba_block",
+    "mamba_decode_step",
+    "repeat_kv",
+]
+
+_NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+# ---------------------------------------------------------------------------
+# Norms & positions
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def rms_norm(x, scale, eps: float = 1e-6):
+    """RMSNorm with a custom VJP that emits cotangents in the INPUT dtype.
+
+    Without this, AD propagates f32 cotangents out of the internal f32
+    segment; under tensor parallelism those are exactly the tensors the
+    partitioner all-reduces per layer — f32 doubles the dominant collective
+    (measured 2x on llama-405B train; EXPERIMENTS.md §Perf, llama it2).
+    """
+    return _rms_norm_fwd(x, scale, eps)[0]
+
+
+def _rms_norm_fwd(x, scale, eps):
+    xf = x.astype(jnp.float32)
+    r = lax.rsqrt(jnp.mean(jnp.square(xf), axis=-1, keepdims=True) + eps)
+    y = (xf * r) * (1.0 + scale.astype(jnp.float32))
+    return y.astype(x.dtype), (x, scale, r)
+
+
+def _rms_norm_bwd(eps, res, dy):
+    x, scale, r = res
+    xf = x.astype(jnp.float32)
+    g = dy.astype(jnp.float32) * (1.0 + scale.astype(jnp.float32))
+    # d/dx [x * r(x)]: r*g - x * r^3 * mean(x*g)
+    mean_xg = jnp.mean(xf * g, axis=-1, keepdims=True)
+    dx = r * g - xf * (r ** 3) * mean_xg
+    ds = jnp.sum(
+        dy.astype(jnp.float32) * xf * r,
+        axis=tuple(range(x.ndim - 1)),
+    )
+    return dx.astype(x.dtype), ds.astype(scale.dtype)
+
+
+rms_norm.defvjp(_rms_norm_fwd, _rms_norm_bwd)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+def sinusoidal_positions(length: int, dim: int, dtype=jnp.float32):
+    pos = jnp.arange(length)[:, None].astype(jnp.float32)
+    div = jnp.exp(jnp.arange(0, dim, 2).astype(jnp.float32) * (-math.log(10000.0) / dim))
+    pe = jnp.zeros((length, dim), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe.astype(dtype)
+
+
+def apply_rope(x, positions, theta: float = 1e4):
+    """Rotary embedding. x [B, H, S, hd]; positions [S] or [B, S]."""
+    if theta <= 0:
+        return x
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(
+        jnp.arange(half, dtype=jnp.float32) * (-math.log(theta) / half)
+    )
+    if positions.ndim == 1:
+        angles = positions.astype(jnp.float32)[:, None] * freqs[None, :]  # [S, half]
+        angles = angles[None, None]  # [1, 1, S, half]
+    else:
+        angles = positions.astype(jnp.float32)[..., None] * freqs  # [B, S, half]
+        angles = angles[:, None]  # [B, 1, S, half]
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def repeat_kv(kv, repeats: int):
+    """[B, K, S, hd] -> [B, K*repeats, S, hd] (GQA head replication)."""
+    if repeats == 1:
+        return kv
+    b, k, s, hd = kv.shape
+    return jnp.broadcast_to(kv[:, :, None], (b, k, repeats, s, hd)).reshape(
+        b, k * repeats, s, hd
+    )
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+
+def _mask_bias(qpos, kpos, causal: bool, window: int):
+    """Additive mask bias [..., Sq, Sk] from query/key positions."""
+    q = qpos[..., :, None]
+    k = kpos[..., None, :]
+    ok = jnp.ones_like(q + k, dtype=bool)
+    if causal:
+        ok &= k <= q
+    if window > 0:
+        ok &= q - k < window
+    return jnp.where(ok, 0.0, _NEG_INF)
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                  qpos=None, kpos=None):
+    """Reference softmax attention. q [B,H,Sq,hd], k/v [B,K,Sk,hd].
+
+    GQA is handled by *repeating* K/V to H heads instead of reshaping q to
+    [B, K, g, S, hd]: under tensor parallelism the H axis is sharded, and the
+    grouped reshape forces the partitioner to all-gather q/k/v (the repeat is
+    a local broadcast on each shard — measured in EXPERIMENTS.md §Perf it2).
+    """
+    b, h, sq, hd = q.shape
+    kh = k.shape[1]
+    kk = repeat_kv(k, h // kh).astype(jnp.float32)
+    vv = repeat_kv(v, h // kh).astype(jnp.float32)
+    qq = q.astype(jnp.float32)
+    scores = jnp.einsum("bhsd,bhtd->bhst", qq, kk) / math.sqrt(hd)
+    if qpos is None:
+        qpos = jnp.arange(sq)
+    if kpos is None:
+        kpos = jnp.arange(k.shape[2])
+    scores = scores + _mask_bias(qpos, kpos, causal, window)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhst,bhtd->bhsd", probs, vv)
+    return out.astype(q.dtype)
+
+
+def attention_blockwise(q, k, v, *, causal: bool = True, window: int = 0,
+                        block_size: int = 512):
+    """Online-softmax attention, scanning KV blocks — O(Sq * block) memory.
+
+    This is the jnp "lazy flash" used for 32k prefill where materializing the
+    full score matrix would blow HBM; it is also the oracle the Pallas flash
+    kernel is validated against (identical math, different tiling).
+    """
+    b, h, sq, hd = q.shape
+    kh, sk = k.shape[1], k.shape[2]
+    k = repeat_kv(k, h // kh)   # local broadcast per TP shard (see attention_ref)
+    v = repeat_kv(v, h // kh)
+    nblocks = -(-sk // block_size)
+    pad = nblocks * block_size - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    kb = k.reshape(b, h, nblocks, block_size, hd)
+    vb = v.reshape(b, h, nblocks, block_size, hd)
+    # Keep operands in their storage dtype (bf16 in training): the MXU runs
+    # bf16 inputs at full rate with f32 accumulation; upcasting to f32 halves
+    # throughput AND doubles the score-dot operand traffic.
+    qq = (q.astype(jnp.float32) / math.sqrt(hd)).astype(q.dtype)
+    qpos = jnp.arange(sq)
+
+    def body(carry, blk):
+        m, l, acc = carry
+        kj, vj, j = blk
+        kpos = j * block_size + jnp.arange(block_size)
+        s = jnp.einsum("bhsd,bhtd->bhst", qq, kj,
+                       preferred_element_type=jnp.float32)
+        valid = kpos < sk
+        bias = _mask_bias(qpos, kpos, causal, window)
+        s = s + bias + jnp.where(valid, 0.0, _NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhst,bhtd->bhsd", p.astype(q.dtype), vj,
+            preferred_element_type=jnp.float32,
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, h, sq), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    a0 = jnp.zeros((b, h, sq, hd), jnp.float32)
+    kb_t = jnp.moveaxis(kb, 2, 0)  # [nblocks, b, h, block, hd]
+    vb_t = jnp.moveaxis(vb, 2, 0)
+    (m, l, acc), _ = lax.scan(
+        body, (m0, l0, a0), (kb_t, vb_t, jnp.arange(nblocks))
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype)
+
+
+def attention_local(q, k, v, *, window: int):
+    """Banded causal attention for sliding windows: O(S * 2W) instead of
+    O(S^2).  Each query chunk of size W attends to its own and the previous
+    key chunk — every in-window key is covered, everything else is provably
+    masked.  Requires self-attention (Sq == Sk) with S % W == 0.
+    """
+    b, h, s, hd = q.shape
+    kh = k.shape[1]
+    k = repeat_kv(k, h // kh)
+    v = repeat_kv(v, h // kh)
+    w = window
+    nc = s // w
+    qc = (q.astype(jnp.float32) / math.sqrt(hd)).astype(q.dtype)
+    qc = qc.reshape(b, h, nc, w, hd)
+    kc = k.reshape(b, h, nc, w, hd)
+    vc = v.reshape(b, h, nc, w, hd)
+    # previous chunk (zeros before chunk 0, masked out anyway)
+    kp = jnp.pad(kc, ((0, 0), (0, 0), (1, 0), (0, 0), (0, 0)))[:, :, :-1]
+    vp = jnp.pad(vc, ((0, 0), (0, 0), (1, 0), (0, 0), (0, 0)))[:, :, :-1]
+    k2 = jnp.concatenate([kp, kc], axis=3)      # [.., nc, 2W, hd]
+    v2 = jnp.concatenate([vp, vc], axis=3)
+    qpos = jnp.arange(w)[:, None]              # position within chunk
+    krel = jnp.arange(2 * w)[None, :] - w      # key offset rel. to chunk start
+    band = (krel <= qpos) & (qpos - krel < w)
+
+    def chunk_body(_, xs):
+        qj, kj, vj, j = xs                     # [b,h,W,hd], [b,h,2W,hd]
+        scores = jnp.einsum("bhqd,bhkd->bhqk", qj, kj,
+                            preferred_element_type=jnp.float32)
+        ok = band & ((j > 0) | (krel >= 0))    # chunk 0 has no predecessor
+        scores = jnp.where(ok[None, None], scores, _NEG_INF)
+        p = jax.nn.softmax(scores, axis=-1)
+        return None, jnp.einsum("bhqk,bhkd->bhqd", p.astype(qj.dtype), vj,
+                                preferred_element_type=jnp.float32)
+
+    # scan over chunks: live score tensor is [B, H, W, 2W], not [.., nc, ..]
+    _, out = lax.scan(
+        chunk_body,
+        None,
+        (jnp.moveaxis(qc, 2, 0), jnp.moveaxis(k2, 2, 0),
+         jnp.moveaxis(v2, 2, 0), jnp.arange(nc)),
+    )
+    out = jnp.moveaxis(out, 0, 2)              # [b, h, nc, W, hd]
+    return out.reshape(b, h, s, hd).astype(q.dtype)
+
+
+def attention(q, k, v, *, causal: bool = True, window: int = 0,
+              impl: str = "auto", block_size: int = 512):
+    """Dispatching attention entry point.
+
+    impl: 'ref' | 'blockwise' | 'local' | 'pallas' | 'auto'.  'auto' picks
+    the banded local path for sliding windows (O(S*2W)), blockwise for long
+    full-attention sequences (bounded memory under GSPMD), ref otherwise.
+    """
+    if impl == "pallas":
+        from repro.kernels import ops
+
+        return ops.flash_attention(q, k, v, causal=causal, window=window)
+    s = q.shape[2]
+    if impl == "local" or (
+        impl == "auto" and causal and window > 0 and s == k.shape[2]
+        and s % window == 0 and s >= 2 * window
+    ):
+        return attention_local(q, k, v, window=window)
+    if impl == "ref" or (impl == "auto" and s <= 2048):
+        return attention_ref(q, k, v, causal=causal, window=window)
+    return attention_blockwise(q, k, v, causal=causal, window=window,
+                               block_size=block_size)
+
+
+def quantize_kv(x):
+    """Symmetric int8 per-(batch, head, position) quantization of K/V rows.
+
+    x [..., hd] -> (int8 payload, f32 scale[...]).  Halves decode-cache HBM
+    (the decode bottleneck is cache bandwidth) at <1% attention error.
+    """
+    m = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(m / 127.0, 1e-10)
+    q = jnp.clip(
+        jnp.round(x.astype(jnp.float32) / scale[..., None]), -127, 127
+    ).astype(jnp.int8)
+    return q, scale
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, k_scale=None,
+                     v_scale=None):
+    """Single-position attention against a (possibly sharded) KV cache.
+
+    q [B, H, 1, hd]; caches [B, K, S_max, hd]; cache_len scalar — number of
+    valid cache positions (the new token's K/V must already be written).
+    Softmax reductions over the cache length work unmodified when S_max is
+    sharded: GSPMD turns the max/sum into all-reduces (flash-decoding-style
+    partial softmax; DESIGN.md §4).
+    """
+    b, h, _, hd = q.shape
+    kh, smax = k_cache.shape[1], k_cache.shape[2]
+    g = h // kh
+    # Keep the cache in its storage dtype: casting [B,K,S,hd] to f32 doubles
+    # decode HBM traffic and temp footprint; the MXU accumulates in f32 via
+    # preferred_element_type regardless.
+    qq = (q.astype(jnp.float32) / math.sqrt(hd)).astype(q.dtype)
+    qq = qq.reshape(b, kh, g, hd)
+    s = jnp.einsum("bkgh,bkth->bkgt", qq, k_cache.astype(qq.dtype),
+                   preferred_element_type=jnp.float32)
+    if k_scale is not None:  # int8 cache: scores scale per (b, k, t)
+        s = s * k_scale[:, :, None, :]
+    valid = jnp.arange(smax)[None, None, None, :] < cache_len
+    s = jnp.where(valid, s, _NEG_INF)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = p.sum(axis=-1, keepdims=True)
+    p = p / jnp.maximum(l, 1e-30)
+    if v_scale is not None:
+        p = p * v_scale[:, :, None, :]
+    out = jnp.einsum("bkgt,bkth->bkgh",
+                     p.astype(q.dtype), v_cache.astype(q.dtype),
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, h, 1, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def swiglu_mlp(x, wi_gate, wi_up, wo):
+    from repro.distributed.sharding import constrain
+
+    h = jax.nn.silu(x @ wi_gate) * (x @ wi_up)
+    # batch over dp, hidden over TP: forces FSDP weight gathers over
+    # activation all-reduces (see lm._qkv).
+    h = constrain(h, ("pod", "data"), None, "model")
+    return h @ wo
+
+
+def gelu_mlp(x, wi, bi, wo, bo):
+    h = jax.nn.gelu((x @ wi) + bi, approximate=True)
+    return (h @ wo) + bo
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (Switch-style dropping dispatch, expert-parallel ready)
+# ---------------------------------------------------------------------------
+
+
+def moe_layer(
+    x,
+    router_w,          # [D, E_pad]
+    we_gate,           # [E_pad, D, F]
+    we_up,             # [E_pad, D, F]
+    we_down,           # [E_pad, F, D]
+    *,
+    top_k: int,
+    num_real_experts: int,
+    capacity_factor: float = 1.25,
+    group_size: int = 256,
+    shared: tuple | None = None,   # (wi_gate [D, F_s], wi_up, wo) or None
+):
+    """Top-k token-choice MoE with grouped one-hot dispatch.
+
+    Tokens are split into groups of ``group_size`` along the sequence so the
+    dispatch/combine einsum overhead is O(T * group_size * k * cf * D) — a few
+    percent of the expert FLOPs (DESIGN.md napkin math).  Experts may be
+    padded (``E_pad >= num_real_experts``) for expert-parallel sharding; pad
+    experts are masked out of the router.
+
+    Returns (y, aux_loss).
+    """
+    b, s, d = x.shape
+    e_pad = router_w.shape[1]
+    f = we_gate.shape[2]
+    gs = min(group_size, s)
+    assert s % gs == 0, (s, gs)
+    ng = s // gs
+    cap = max(1, int(math.ceil(gs * top_k * capacity_factor / num_real_experts)))
+
+    xg = x.reshape(b, ng, gs, d)
+    logits = jnp.einsum("bnsd,de->bnse", xg.astype(jnp.float32),
+                        router_w.astype(jnp.float32))
+    if e_pad > num_real_experts:
+        pad_mask = jnp.arange(e_pad) >= num_real_experts
+        logits = jnp.where(pad_mask, _NEG_INF, logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    # Top-k selection -> per-token (expert, gate) pairs.
+    gate_vals, expert_idx = lax.top_k(probs, top_k)       # [b,ng,gs,k]
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(axis=-1, keepdims=True), 1e-9
+    )
+
+    # Position of each (token, k) within its expert, via cumsum over the
+    # flattened (token-major) choice order.
+    onehot = jax.nn.one_hot(expert_idx, e_pad, dtype=jnp.float32)  # [b,ng,gs,k,e]
+    flat = onehot.reshape(b, ng, gs * top_k, e_pad)
+    pos_in_expert = jnp.cumsum(flat, axis=2) - flat               # [b,ng,gs*k,e]
+    pos_in_expert = pos_in_expert.reshape(b, ng, gs, top_k, e_pad)
+    within_cap = pos_in_expert < cap
+    disp = onehot * within_cap                                     # [b,ng,gs,k,e]
+    pos = jnp.einsum("bnske,bnske->bnsk", pos_in_expert, disp)     # chosen slot
+    slot_oh = jax.nn.one_hot(pos.astype(jnp.int32), cap, dtype=jnp.float32)
+    # dispatch [b,ng,gs,e,cap]: token -> (expert, slot)
+    dispatch = jnp.einsum("bnske,bnskc->bnsec", disp, slot_oh)
+    combine = jnp.einsum("bnsk,bnske,bnskc->bnsec", gate_vals, disp, slot_oh)
+
+    cd = x.dtype
+    xe = jnp.einsum("bnsd,bnsec->bnecd", xg, dispatch.astype(cd))  # [b,ng,e,cap,d]
+    h = jax.nn.silu(jnp.einsum("bnecd,edf->bnecf", xe, we_gate)) * jnp.einsum(
+        "bnecd,edf->bnecf", xe, we_up
+    )
+    ye = jnp.einsum("bnecf,efd->bnecd", h, we_down)
+    y = jnp.einsum("bnecd,bnsec->bnsd", ye, combine.astype(cd))
+    y = y.reshape(b, s, d)
+
+    # Load-balance auxiliary loss (Switch): E * sum_e f_e * p_e.
+    me = probs.mean(axis=(0, 1, 2))                        # mean router prob
+    ce = onehot.sum(axis=3).mean(axis=(0, 1, 2))           # token fraction
+    aux = num_real_experts * jnp.sum(me * ce) / top_k
+
+    if shared is not None:
+        y = y + swiglu_mlp(x, *shared)
+    return y, aux
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1 block (selective scan)
+# ---------------------------------------------------------------------------
+
+
+def _selective_scan(u, dt, a, b_ssm, c_ssm, d_skip, *, chunk: int = 256,
+                    h0=None, impl: str = "auto"):
+    """y_t = C_t · h_t + D u_t,   h_t = exp(dt_t A) h_{t-1} + dt_t B_t u_t.
+
+    u, dt [B, S, DI]; a [DI, N]; b/c [B, S, N]; returns (y [B,S,DI], h [B,DI,N]).
+    lax.scan over sequence chunks (carry [B, DI, N]) with an associative scan
+    inside each chunk — bounded memory at 500k tokens, parallel within chunk.
+    """
+    if impl == "pallas":
+        from repro.kernels import ops
+
+        return ops.selective_scan(u, dt, a, b_ssm, c_ssm, d_skip, h0=h0)
+    bsz, s, di = u.shape
+    n = a.shape[1]
+    pad = (-s) % chunk
+    if pad:
+        u = jnp.pad(u, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_ssm = jnp.pad(b_ssm, ((0, 0), (0, pad), (0, 0)))
+        c_ssm = jnp.pad(c_ssm, ((0, 0), (0, pad), (0, 0)))
+    nch = (s + pad) // chunk
+
+    uc = u.reshape(bsz, nch, chunk, di).transpose(1, 0, 2, 3)
+    dtc = dt.reshape(bsz, nch, chunk, di).transpose(1, 0, 2, 3)
+    bc = b_ssm.reshape(bsz, nch, chunk, n).transpose(1, 0, 2, 3)
+    cc = c_ssm.reshape(bsz, nch, chunk, n).transpose(1, 0, 2, 3)
+
+    af = a.astype(jnp.float32)
+
+    def chunk_body(h, xs):
+        uj, dtj, bj, cj = xs
+        dtf = dtj.astype(jnp.float32)                       # [B, Q, DI]
+        decay = jnp.exp(dtf[..., None] * af)                # [B, Q, DI, N]
+        inp = (dtf * uj.astype(jnp.float32))[..., None] * bj.astype(jnp.float32)[
+            :, :, None, :
+        ]                                                   # [B, Q, DI, N]
+
+        def combine(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, b2 + a2 * b1
+
+        dec, acc = lax.associative_scan(combine, (decay, inp), axis=1)
+        hseq = dec * h[:, None] + acc                       # [B, Q, DI, N]
+        y = jnp.einsum("bqdn,bqn->bqd", hseq, cj.astype(jnp.float32))
+        return hseq[:, -1], y
+
+    h0 = (
+        jnp.zeros((bsz, di, n), jnp.float32)
+        if h0 is None
+        else h0.astype(jnp.float32)
+    )
+    h_last, ys = lax.scan(chunk_body, h0, (uc, dtc, bc, cc))
+    y = ys.transpose(1, 0, 2, 3).reshape(bsz, s + pad, di)[:, :s]
+    y = y + u.astype(jnp.float32)[:, :s] * d_skip.astype(jnp.float32)
+    return y, h_last
+
+
+def mamba_block(x, p, *, dt_rank: int, ssm_state: int, conv_k: int = 4,
+                impl: str = "auto", h0=None, conv0=None, return_state=False):
+    """Mamba-1 mixer.  x [B, S, D]; params dict p (see init in lm.py).
+
+    With ``return_state`` also returns (h_last [B,DI,N], conv_tail
+    [B, conv_k-1, DI]) for recurrent decode.
+    """
+    bsz, s, d = x.shape
+    di = p["in_proj"].shape[1] // 2
+    xz = x @ p["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)
+
+    if conv0 is not None:
+        xin_ext = jnp.concatenate([conv0.astype(xin.dtype), xin], axis=1)
+        pad = [(0, 0)]
+    else:
+        xin_ext = xin
+        pad = [(conv_k - 1, 0)]
+    conv = lax.conv_general_dilated(
+        xin_ext.astype(jnp.float32),
+        p["conv_w"].astype(jnp.float32)[:, None, :],   # [k, 1, DI] as HWIO-ish
+        window_strides=(1,),
+        padding=pad if conv0 is None else [(0, 0)],
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=di,
+    ) + p["conv_b"].astype(jnp.float32)
+    xin_c = jax.nn.silu(conv).astype(x.dtype)
+
+    xdbc = xin_c @ p["x_proj"]                        # [B,S,R+2N]
+    dt_raw = xdbc[..., :dt_rank]
+    b_ssm = xdbc[..., dt_rank : dt_rank + ssm_state]
+    c_ssm = xdbc[..., dt_rank + ssm_state :]
+    dt = jax.nn.softplus(dt_raw @ p["dt_proj"] + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    y, h_last = _selective_scan(
+        xin_c, dt, a, b_ssm, c_ssm, p["d_skip"], h0=h0, impl=impl
+    )
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = y @ p["out_proj"]
+    if return_state:
+        conv_tail = xin_ext[:, -(conv_k - 1):] if conv_k > 1 else None
+        return out, h_last, conv_tail
+    return out
+
+
+def mamba_decode_step(x, p, h, conv_state, *, dt_rank: int, ssm_state: int,
+                      conv_k: int = 4):
+    """One-token recurrent Mamba step.
+
+    x [B, 1, D]; h [B, DI, N]; conv_state [B, conv_k-1, DI].
+    Returns (y [B, 1, D], h', conv_state').
+    """
+    out, h_new, conv_tail = mamba_block(
+        x, p, dt_rank=dt_rank, ssm_state=ssm_state, conv_k=conv_k,
+        h0=h, conv0=conv_state, return_state=True,
+    )
+    return out, h_new, conv_tail

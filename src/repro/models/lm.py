@@ -1,0 +1,701 @@
+"""Decoder-only LM families: dense / GQA, MoE, Mamba (SSM), Hymba-style
+hybrid, and the VLM stub (patch embeddings prepended to the token stream).
+
+Params are plain pytrees; repeated layers are stacked on a leading ``[L, ...]``
+axis and executed with ``lax.scan`` (small HLO, fast multi-hundred-layer
+compiles, remat-friendly).  The same stacked block runs in three modes:
+
+  * ``train_loss``   — full-sequence causal forward + weighted CE loss,
+  * ``prefill``      — full-sequence forward that also materializes the cache,
+  * ``decode_step``  — one token against the cache (KV / ring-window / SSM
+    state, per family).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models import layers as L
+
+__all__ = ["init_lm", "train_loss", "prefill", "decode_step", "init_cache",
+           "forward_hidden"]
+
+
+def _dtype(name: str):
+    return jnp.dtype(name)
+
+
+def _init(key, shape, scale, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _init_layer(key, cfg: ModelConfig):
+    """One transformer/ssm/hybrid block's params (unstacked)."""
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    h, k = cfg.num_heads, cfg.num_kv_heads
+    pd = _dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 24)
+    s_in = 1.0 / math.sqrt(d)
+    p = {}
+    p["ln1"] = jnp.zeros((d,), pd)
+    p["ln2"] = jnp.zeros((d,), pd)
+
+    if cfg.family != "ssm":
+        p["wq"] = _init(ks[0], (d, h, hd), s_in, pd)
+        p["wk"] = _init(ks[1], (d, k, hd), s_in, pd)
+        p["wv"] = _init(ks[2], (d, k, hd), s_in, pd)
+        p["wo"] = _init(ks[3], (h, hd, d), 1.0 / math.sqrt(h * hd), pd)
+        if cfg.qkv_bias:
+            p["bq"] = jnp.zeros((h, hd), pd)
+            p["bk"] = jnp.zeros((k, hd), pd)
+            p["bv"] = jnp.zeros((k, hd), pd)
+
+    if cfg.family in ("dense", "vlm", "hybrid"):
+        f = cfg.d_ff
+        p["wi_gate"] = _init(ks[4], (d, f), s_in, pd)
+        p["wi_up"] = _init(ks[5], (d, f), s_in, pd)
+        p["wo_mlp"] = _init(ks[6], (f, d), 1.0 / math.sqrt(f), pd)
+    elif cfg.family == "moe":
+        f = cfg.d_ff
+        e_pad = padded_experts(cfg)
+        p["router"] = _init(ks[7], (d, e_pad), s_in, jnp.float32)
+        p["we_gate"] = _init(ks[8], (e_pad, d, f), s_in, pd)
+        p["we_up"] = _init(ks[9], (e_pad, d, f), s_in, pd)
+        p["we_down"] = _init(ks[10], (e_pad, f, d), 1.0 / math.sqrt(f), pd)
+        if cfg.num_shared_experts:
+            fs = f * cfg.num_shared_experts
+            p["ws_gate"] = _init(ks[11], (d, fs), s_in, pd)
+            p["ws_up"] = _init(ks[12], (d, fs), s_in, pd)
+            p["ws_down"] = _init(ks[13], (fs, d), 1.0 / math.sqrt(fs), pd)
+
+    if cfg.family in ("ssm", "hybrid"):
+        di, n, r = cfg.ssm_d_inner, cfg.ssm_state, cfg.resolved_dt_rank
+        ck = cfg.ssm_conv
+        p["ssm"] = {
+            "in_proj": _init(ks[14], (d, 2 * di), s_in, pd),
+            "conv_w": _init(ks[15], (ck, di), 1.0 / math.sqrt(ck), pd),
+            "conv_b": jnp.zeros((di,), pd),
+            "x_proj": _init(ks[16], (di, r + 2 * n), 1.0 / math.sqrt(di), pd),
+            "dt_proj": _init(ks[17], (r, di), 1.0 / math.sqrt(r), pd),
+            "dt_bias": jnp.full((di,), math.log(math.e - 1), pd),  # softplus^-1(1)
+            "a_log": jnp.log(
+                jnp.broadcast_to(jnp.arange(1, n + 1, dtype=jnp.float32), (di, n))
+            ).astype(jnp.float32),
+            "d_skip": jnp.ones((di,), jnp.float32),
+            "out_proj": _init(ks[18], (di, d), 1.0 / math.sqrt(di), pd),
+        }
+        if cfg.family == "hybrid":
+            p["ln_ssm"] = jnp.zeros((d,), pd)
+
+    return p
+
+
+def padded_experts(cfg: ModelConfig, multiple: int = 16) -> int:
+    if cfg.family != "moe":
+        return 0
+    return -(-cfg.num_experts // multiple) * multiple
+
+
+def init_lm(key, cfg: ModelConfig):
+    pd = _dtype(cfg.param_dtype)
+    keys = jax.random.split(key, cfg.num_layers + 4)
+    layer_params = [
+        _init_layer(keys[i], cfg) for i in range(cfg.num_layers)
+    ]
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *layer_params)
+    params = {
+        "embed": _init(
+            keys[-1], (cfg.vocab_size, cfg.d_model), 1.0 / math.sqrt(cfg.d_model), pd
+        ),
+        "final_norm": jnp.zeros((cfg.d_model,), pd),
+        "layers": stacked,
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = _init(
+            keys[-2], (cfg.d_model, cfg.vocab_size), 1.0 / math.sqrt(cfg.d_model), pd
+        )
+    if cfg.family == "vlm":
+        params["mm_proj"] = _init(keys[-3], (cfg.d_model, cfg.d_model),
+                                  1.0 / math.sqrt(cfg.d_model), pd)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Blocks (train/prefill path)
+# ---------------------------------------------------------------------------
+
+
+def _qkv(x, lp, cfg: ModelConfig, positions):
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dhk->bhsk", x, lp["wq"])
+    k = jnp.einsum("bsd,dhk->bhsk", x, lp["wk"])
+    v = jnp.einsum("bsd,dhk->bhsk", x, lp["wv"])
+    # Pin outputs to (batch over dp, heads over TP): with x batch-sharded the
+    # only collective-free strategy left to the partitioner is to all-gather
+    # the (small) FSDP weight shards — it otherwise sometimes all-reduces
+    # activation-sized partial sums (EXPERIMENTS.md §Perf, llama it4).
+    q = constrain(q, ("pod", "data"), "model", None, None)
+    k = constrain(k, ("pod", "data"), "model", None, None)
+    v = constrain(v, ("pod", "data"), "model", None, None)
+    if cfg.qkv_bias:
+        q = q + lp["bq"][None, :, None, :]
+        k = k + lp["bk"][None, :, None, :]
+        v = v + lp["bv"][None, :, None, :]
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _attn_out(out, lp):
+    return jnp.einsum("bhsk,hkd->bsd", out, lp["wo"])
+
+
+def _block_train(x, lp, cfg: ModelConfig, *, attn_impl: str, positions):
+    """One block, full-sequence causal.  Returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    # Keep the residual stream batch-sharded: the partitioner then gathers
+    # (small) weight shards instead of (huge) activations — this is FSDP.
+    x = constrain(x, ("pod", "data"), None, None)
+    h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+
+    if cfg.family == "ssm":
+        mix = L.mamba_block(
+            h, lp["ssm"], dt_rank=cfg.resolved_dt_rank,
+            ssm_state=cfg.ssm_state, conv_k=cfg.ssm_conv,
+        )
+    else:
+        q, k, v = _qkv(h, lp, cfg, positions)
+        window = cfg.sliding_window if cfg.family == "hybrid" else 0
+        o = L.attention(q, k, v, causal=True, window=window, impl=attn_impl)
+        mix = _attn_out(o, lp)
+        if cfg.family == "hybrid":
+            ssm_o = L.mamba_block(
+                h, lp["ssm"], dt_rank=cfg.resolved_dt_rank,
+                ssm_state=cfg.ssm_state, conv_k=cfg.ssm_conv,
+            )
+            # Hymba: mean-fuse the normalized parallel branch outputs.
+            mix = 0.5 * (mix + L.rms_norm(ssm_o, lp["ln_ssm"], cfg.norm_eps))
+    x = x + mix
+
+    h2 = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+    if cfg.family == "moe":
+        shared = (
+            (lp["ws_gate"], lp["ws_up"], lp["ws_down"])
+            if cfg.num_shared_experts
+            else None
+        )
+        y, aux = L.moe_layer(
+            h2, lp["router"], lp["we_gate"], lp["we_up"], lp["we_down"],
+            top_k=cfg.top_k, num_real_experts=cfg.num_experts,
+            capacity_factor=cfg.expert_capacity_factor, shared=shared,
+        )
+    elif cfg.family == "ssm":
+        y = jnp.zeros_like(x)  # Mamba-1 has no separate MLP; ln2 unused
+    else:
+        y = L.swiglu_mlp(h2, lp["wi_gate"], lp["wi_up"], lp["wo_mlp"])
+    return x + y, aux
+
+
+def forward_hidden(params, tokens, cfg: ModelConfig, *, attn_impl="auto",
+                   patches=None):
+    """Embed -> scan(blocks) -> final norm.  Returns hidden [B, S(+P), D]."""
+    cd = _dtype(cfg.compute_dtype)
+    x = params["embed"][tokens].astype(cd)
+    if cfg.family == "vlm":
+        assert patches is not None, "vlm forward needs patch embeddings"
+        pe = (patches.astype(cd) @ params["mm_proj"].astype(cd))
+        x = jnp.concatenate([pe, x], axis=1)
+    x = constrain(x, ("pod", "data"), None, None)
+    s = x.shape[1]
+    positions = jnp.arange(s)
+    if cfg.rope_theta <= 0:  # sinusoidal absolute positions (whisper-style)
+        x = x + L.sinusoidal_positions(s, cfg.d_model, cd)[None]
+
+    block = partial(_block_train, cfg=cfg, attn_impl=attn_impl,
+                    positions=positions)
+    if cfg.remat:
+        block = jax.checkpoint(block, policy=None)
+
+    def scan_body(carry, lp):
+        x, aux = carry
+        x, a = block(x, lp)
+        return (x, aux + a), None
+
+    carry0 = (x, jnp.zeros((), jnp.float32))
+    layers = params["layers"]
+    if cfg.scan_block and cfg.num_layers % cfg.scan_block == 0 and cfg.remat:
+        # Two-level scan: residual memory ~ (L/K + K) carries instead of L.
+        k = cfg.scan_block
+        nb = cfg.num_layers // k
+        grouped = jax.tree_util.tree_map(
+            lambda a: a.reshape((nb, k) + a.shape[1:]), layers
+        )
+
+        @jax.checkpoint
+        def outer_body(carry, block_layers):
+            c, _ = lax.scan(scan_body, carry, block_layers)
+            return c, None
+
+        (x, aux), _ = lax.scan(outer_body, carry0, grouped)
+    else:
+        (x, aux), _ = lax.scan(scan_body, carry0, layers)
+    return L.rms_norm(x, params["final_norm"], cfg.norm_eps), aux
+
+
+def _logits(params, hidden, cfg: ModelConfig):
+    w = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    return jnp.einsum(
+        "bsd,dv->bsv", hidden.astype(jnp.float32), w.astype(jnp.float32)
+    )
+
+
+def _chunked_ce(params, hidden, labels, valid, cfg: ModelConfig):
+    """Σ weighted NLL without materializing [B, S, V].
+
+    Scans checkpointed sequence chunks: each chunk computes its own
+    [B, ce_chunk, V] logits in f32, reduces to scalars, and the backward pass
+    recomputes chunk logits instead of storing them.  Returns (nll_sum, denom).
+    """
+    w = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    b, s, d = hidden.shape
+    chunk = min(cfg.ce_chunk, s)
+    while s % chunk:
+        chunk -= 1
+    nc = s // chunk
+
+    hs = jnp.moveaxis(hidden.reshape(b, nc, chunk, d), 1, 0)
+    ls = jnp.moveaxis(labels.reshape(b, nc, chunk), 1, 0)
+    vs = jnp.moveaxis(valid.reshape(b, nc, chunk), 1, 0)
+
+    @jax.checkpoint
+    def body(carry, xs):
+        h, lab, val = xs
+        h = constrain(h, ("pod", "data"), None, None)
+        logits = jnp.einsum(
+            "bsd,dv->bsv", h.astype(jnp.float32), w.astype(jnp.float32)
+        )
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(
+            logits, jnp.maximum(lab, 0)[..., None], axis=-1
+        )[..., 0]
+        nll = ((lse - tgt) * val).sum()
+        return (carry[0] + nll, carry[1] + val.sum()), None
+
+    (nll_sum, denom), _ = lax.scan(
+        body, (jnp.zeros(()), jnp.zeros(())), (hs, ls, vs)
+    )
+    return nll_sum, denom
+
+
+def train_loss(params, batch, cfg: ModelConfig, *, attn_impl="auto"):
+    """Weighted next-token CE.  batch:
+      tokens  [B, S] int32
+      labels  [B, S] int32   (shifted targets; -1 = ignore)
+      weights [B]    f32     (SOLAR per-sample mask: 0 = padding row)
+    VLM adds  patches [B, P, D]; patch positions carry no loss.
+    Returns (loss, metrics dict).
+    """
+    tokens, labels = batch["tokens"], batch["labels"]
+    weights = batch.get("weights")
+    if weights is None:
+        weights = jnp.ones((tokens.shape[0],), jnp.float32)
+    hidden, aux = forward_hidden(
+        params, tokens, cfg, attn_impl=attn_impl, patches=batch.get("patches")
+    )
+    if cfg.family == "vlm":
+        hidden = hidden[:, -tokens.shape[1]:]  # drop patch positions
+    valid = (labels >= 0).astype(jnp.float32) * weights[:, None]
+    nll_sum, denom = _chunked_ce(params, hidden, labels, valid, cfg)
+    loss = nll_sum / jnp.maximum(denom, 1.0)
+    if cfg.family == "moe":
+        loss = loss + cfg.router_aux_coef * aux
+    # 'tokens' is the UNCLAMPED weight mass: grad accumulation divides the
+    # summed gradient by sum('tokens'), so all-padding microbatches must
+    # contribute exactly zero.
+    metrics = {"loss": loss, "aux": aux, "tokens": denom}
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# Serving: cache init / prefill / decode
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheSpec:
+    """How the KV cache is laid out for an arch on a given mesh.
+
+    ``kv_heads`` is the stored head count: the true KV heads, possibly
+    repeated so the head axis divides the model-parallel axis (DESIGN.md §4);
+    when even full repetition cannot divide (e.g. Hymba's 25/5 heads), heads
+    stay unsharded and the sequence axis is sharded instead (flash-decoding
+    partial softmax via GSPMD reductions).
+    """
+
+    kv_heads: int
+    cache_len: int      # S_max (sliding archs: ring of window size)
+    ring: bool
+    quantized: bool = False   # int8 payload + f32 per-row scales
+
+    @staticmethod
+    def build(cfg: ModelConfig, seq_len: int, model_axis: int = 1) -> "CacheSpec":
+        k, h = cfg.num_kv_heads, cfg.num_heads
+        quant = cfg.kv_cache_dtype == "int8"
+        if cfg.family == "ssm":
+            return CacheSpec(0, 0, False, False)
+        if k % model_axis == 0 or model_axis == 1:
+            k_eff = k
+        elif (model_axis % k == 0) and h % model_axis == 0:
+            k_eff = model_axis          # repeat each kv head model/k times
+        else:
+            k_eff = k                   # unshardable heads -> shard seq axis
+        window = cfg.sliding_window if cfg.family == "hybrid" else 0
+        if window and window < seq_len:
+            return CacheSpec(k_eff, window, True, quant)
+        return CacheSpec(k_eff, seq_len, False, quant)
+
+
+def init_cache(cfg: ModelConfig, spec: CacheSpec, batch: int, dtype=None):
+    """Allocate the decode cache pytree."""
+    cd = dtype or _dtype(cfg.compute_dtype)
+    cache = {"pos": jnp.zeros((), jnp.int32)}
+    hd = cfg.resolved_head_dim
+    if cfg.family != "ssm":
+        shape = (cfg.num_layers, batch, spec.kv_heads, spec.cache_len, hd)
+        store_dt = jnp.int8 if spec.quantized else cd
+        cache["k"] = jnp.zeros(shape, store_dt)
+        cache["v"] = jnp.zeros(shape, store_dt)
+        if spec.quantized:
+            cache["k_scale"] = jnp.zeros(shape[:-1], jnp.float32)
+            cache["v_scale"] = jnp.zeros(shape[:-1], jnp.float32)
+    if cfg.family in ("ssm", "hybrid"):
+        di, n, ck = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_conv
+        cache["ssm_h"] = jnp.zeros((cfg.num_layers, batch, di, n), jnp.float32)
+        cache["conv"] = jnp.zeros((cfg.num_layers, batch, ck - 1, di), cd)
+    return cache
+
+
+def _repeat_to(kv, k_eff):
+    k = kv.shape[1]
+    return L.repeat_kv(kv, k_eff // k) if k_eff != k else kv
+
+
+def prefill(params, tokens, cfg: ModelConfig, spec: CacheSpec, *,
+            attn_impl="auto", patches=None):
+    """Full-sequence forward; returns (last-position logits, filled cache)."""
+    cd = _dtype(cfg.compute_dtype)
+    x = params["embed"][tokens].astype(cd)
+    if cfg.family == "vlm":
+        pe = patches.astype(cd) @ params["mm_proj"].astype(cd)
+        x = jnp.concatenate([pe, x], axis=1)
+    b, s, _ = x.shape
+    positions = jnp.arange(s)
+    if cfg.rope_theta <= 0:
+        x = x + L.sinusoidal_positions(s, cfg.d_model, cd)[None]
+    spec_len = spec.cache_len
+    if cfg.family != "ssm" and not spec.ring and s > spec_len:
+        raise ValueError(
+            f"prefill length {s} (incl. any patch/frame prefix) exceeds "
+            f"cache_len {spec_len}; build the CacheSpec with a longer max_len"
+        )
+
+    def body(x, lp):
+        aux_cache = {}
+        x = constrain(x, ("pod", "data"), None, None)
+        h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        if cfg.family == "ssm":
+            mix, h_last, conv_tail = L.mamba_block(
+                h, lp["ssm"], dt_rank=cfg.resolved_dt_rank,
+                ssm_state=cfg.ssm_state, conv_k=cfg.ssm_conv, return_state=True,
+            )
+            aux_cache["ssm_h"], aux_cache["conv"] = h_last, conv_tail.astype(cd)
+        else:
+            q, k, v = _qkv(h, lp, cfg, positions)
+            window = cfg.sliding_window if cfg.family == "hybrid" else 0
+            o = L.attention(q, k, v, causal=True, window=window, impl=attn_impl)
+            mix = _attn_out(o, lp)
+            k_st, v_st = _repeat_to(k, spec.kv_heads), _repeat_to(v, spec.kv_heads)
+            if spec.ring:
+                # keep the last `window` positions; ring index = pos % W with
+                # the prefill tail laid out so decode can continue the ring.
+                w = spec_len
+                k_st = k_st[:, :, -w:]
+                v_st = v_st[:, :, -w:]
+                shift = s % w
+                k_st = jnp.roll(k_st, shift=shift, axis=2)
+                v_st = jnp.roll(v_st, shift=shift, axis=2)
+            if spec.quantized:
+                aux_cache["k"], aux_cache["k_scale"] = L.quantize_kv(k_st)
+                aux_cache["v"], aux_cache["v_scale"] = L.quantize_kv(v_st)
+            else:
+                aux_cache["k"], aux_cache["v"] = k_st.astype(cd), v_st.astype(cd)
+            if cfg.family == "hybrid":
+                ssm_o, h_last, conv_tail = L.mamba_block(
+                    h, lp["ssm"], dt_rank=cfg.resolved_dt_rank,
+                    ssm_state=cfg.ssm_state, conv_k=cfg.ssm_conv,
+                    return_state=True,
+                )
+                mix = 0.5 * (mix + L.rms_norm(ssm_o, lp["ln_ssm"], cfg.norm_eps))
+                aux_cache["ssm_h"], aux_cache["conv"] = h_last, conv_tail.astype(cd)
+        x = x + mix
+        h2 = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+        if cfg.family == "moe":
+            shared = (
+                (lp["ws_gate"], lp["ws_up"], lp["ws_down"])
+                if cfg.num_shared_experts else None
+            )
+            y, _ = L.moe_layer(
+                h2, lp["router"], lp["we_gate"], lp["we_up"], lp["we_down"],
+                top_k=cfg.top_k, num_real_experts=cfg.num_experts,
+                capacity_factor=cfg.expert_capacity_factor, shared=shared,
+            )
+        elif cfg.family == "ssm":
+            y = jnp.zeros_like(x)
+        else:
+            y = L.swiglu_mlp(h2, lp["wi_gate"], lp["wi_up"], lp["wo_mlp"])
+        return x + y, aux_cache
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, caches = lax.scan(body, x, params["layers"])
+    hidden = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _logits(params, hidden[:, -1:], cfg)[:, 0]
+
+    cache = {"pos": jnp.asarray(s, jnp.int32)}
+    for key in ("k", "v", "k_scale", "v_scale", "ssm_h", "conv"):
+        if key in caches:
+            cache[key] = caches[key]
+    # pad cache length up to spec (prefill length may be < cache_len)
+    if cfg.family != "ssm" and not spec.ring and s < spec_len:
+        pad = spec_len - s
+        cache["k"] = jnp.pad(cache["k"], ((0, 0),) * 3 + ((0, pad), (0, 0)))
+        cache["v"] = jnp.pad(cache["v"], ((0, 0),) * 3 + ((0, pad), (0, 0)))
+        if spec.quantized:
+            cache["k_scale"] = jnp.pad(
+                cache["k_scale"], ((0, 0),) * 3 + ((0, pad),))
+            cache["v_scale"] = jnp.pad(
+                cache["v_scale"], ((0, 0),) * 3 + ((0, pad),))
+    return logits, cache
+
+
+def decode_step(params, cache, tokens, cfg: ModelConfig, spec: CacheSpec, *,
+                attn_impl="auto", unroll: bool = False):
+    """One new token per sequence against the cache.
+
+    tokens [B] int32.  Returns (logits [B, V], new cache).
+
+    The default path carries the caches through the layer scan (while-loop
+    carries are aliased in place); ``unroll=True`` keeps the older unrolled
+    variant (measured WORSE on the XLA CPU backend: 126 DUS copies —
+    EXPERIMENTS.md §Perf, decode it1/it2).
+    """
+    if unroll:
+        assert not spec.quantized, "unrolled path predates the int8 cache"
+        return _decode_step_unrolled(params, cache, tokens, cfg, spec)
+    cd = _dtype(cfg.compute_dtype)
+    pos = cache["pos"]
+    x = params["embed"][tokens[:, None]].astype(cd)  # [B, 1, D]
+    if cfg.rope_theta <= 0:
+        # sinusoidal absolute position for the current token.
+        pe = L.sinusoidal_positions(spec.cache_len + 1, cfg.d_model, cd)
+        x = x + lax.dynamic_slice_in_dim(pe, pos, 1, 0)[None]
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+
+    # The stacked caches ride in the scan CARRY (while-loop carries are
+    # aliased in place by XLA); per-layer rows are read/written with indexed
+    # slices.  Putting them in xs/ys double-buffers the entire cache.
+    cache_keys = [k for k in ("k", "v", "k_scale", "v_scale", "ssm_h", "conv")
+                  if k in cache]
+    carry0 = (x,) + tuple(cache[k] for k in cache_keys)
+    write = pos % spec.cache_len if spec.ring else pos
+    cache_len = (
+        jnp.minimum(pos + 1, spec.cache_len) if spec.ring else pos + 1
+    )
+
+    def body(carry, inp):
+        x = carry[0]
+        st = dict(zip(cache_keys, carry[1:]))
+        lp, i = inp["lp"], inp["i"]
+        x = constrain(x, ("pod", "data"), None, None)
+        h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+
+        def ssm_update(h, st):
+            h_i = lax.dynamic_index_in_dim(st["ssm_h"], i, 0, keepdims=False)
+            c_i = lax.dynamic_index_in_dim(st["conv"], i, 0, keepdims=False)
+            out, h_new, conv_new = L.mamba_decode_step(
+                h, lp["ssm"], h_i, c_i, dt_rank=cfg.resolved_dt_rank,
+                ssm_state=cfg.ssm_state, conv_k=cfg.ssm_conv,
+            )
+            st["ssm_h"] = lax.dynamic_update_index_in_dim(
+                st["ssm_h"], h_new, i, 0)
+            st["conv"] = lax.dynamic_update_index_in_dim(
+                st["conv"], conv_new.astype(cd), i, 0)
+            return out, st
+
+        if cfg.family == "ssm":
+            mix, st = ssm_update(h, st)
+        else:
+            q, k, v = _qkv(h, lp, cfg, positions)
+            k = _repeat_to(k, spec.kv_heads)
+            v = _repeat_to(v, spec.kv_heads)
+            if spec.quantized:
+                kq, ks = L.quantize_kv(k)
+                vq, vs = L.quantize_kv(v)
+                st["k"] = lax.dynamic_update_slice(
+                    st["k"], kq[None], (i, 0, 0, write, 0))
+                st["v"] = lax.dynamic_update_slice(
+                    st["v"], vq[None], (i, 0, 0, write, 0))
+                st["k_scale"] = lax.dynamic_update_slice(
+                    st["k_scale"], ks[None], (i, 0, 0, write))
+                st["v_scale"] = lax.dynamic_update_slice(
+                    st["v_scale"], vs[None], (i, 0, 0, write))
+                o = L.decode_attention(
+                    q,
+                    lax.dynamic_index_in_dim(st["k"], i, 0, keepdims=False),
+                    lax.dynamic_index_in_dim(st["v"], i, 0, keepdims=False),
+                    cache_len,
+                    k_scale=lax.dynamic_index_in_dim(st["k_scale"], i, 0,
+                                                     keepdims=False),
+                    v_scale=lax.dynamic_index_in_dim(st["v_scale"], i, 0,
+                                                     keepdims=False),
+                )
+            else:
+                st["k"] = lax.dynamic_update_slice(
+                    st["k"], k.astype(cd)[None], (i, 0, 0, write, 0))
+                st["v"] = lax.dynamic_update_slice(
+                    st["v"], v.astype(cd)[None], (i, 0, 0, write, 0))
+                o = L.decode_attention(
+                    q,
+                    lax.dynamic_index_in_dim(st["k"], i, 0, keepdims=False),
+                    lax.dynamic_index_in_dim(st["v"], i, 0, keepdims=False),
+                    cache_len,
+                )
+            mix = _attn_out(o, lp)
+            if cfg.family == "hybrid":
+                ssm_o, st = ssm_update(h, st)
+                mix = 0.5 * (mix + L.rms_norm(ssm_o, lp["ln_ssm"], cfg.norm_eps))
+        x = x + mix
+        h2 = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+        if cfg.family == "moe":
+            shared = (
+                (lp["ws_gate"], lp["ws_up"], lp["ws_down"])
+                if cfg.num_shared_experts else None
+            )
+            y, _ = L.moe_layer(
+                h2, lp["router"], lp["we_gate"], lp["we_up"], lp["we_down"],
+                top_k=cfg.top_k, num_real_experts=cfg.num_experts,
+                capacity_factor=max(cfg.expert_capacity_factor, 2.0),
+                group_size=1, shared=shared,
+            )
+        elif cfg.family == "ssm":
+            y = jnp.zeros_like(x)
+        else:
+            y = L.swiglu_mlp(h2, lp["wi_gate"], lp["wi_up"], lp["wo_mlp"])
+        return (x + y,) + tuple(st[k] for k in cache_keys), None
+
+    xs = {"lp": params["layers"], "i": jnp.arange(cfg.num_layers)}
+    carry, _ = lax.scan(body, carry0, xs)
+    hidden = L.rms_norm(carry[0], params["final_norm"], cfg.norm_eps)
+    logits = _logits(params, hidden, cfg)[:, 0]
+    new_cache = {"pos": pos + 1}
+    new_cache.update(dict(zip(cache_keys, carry[1:])))
+    return logits, new_cache
+
+
+def _decode_step_unrolled(params, cache, tokens, cfg: ModelConfig,
+                          spec: CacheSpec):
+    """Unrolled decode: per-layer cache rows updated in place in the stacked
+    (donated) cache buffers.  Same math as the scan path (tested equal)."""
+    cd = _dtype(cfg.compute_dtype)
+    pos = cache["pos"]
+    x = params["embed"][tokens[:, None]].astype(cd)
+    if cfg.rope_theta <= 0:
+        pe = L.sinusoidal_positions(spec.cache_len + 1, cfg.d_model, cd)
+        x = x + lax.dynamic_slice_in_dim(pe, pos, 1, 0)[None]
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    new_cache = {k: v for k, v in cache.items()}
+    new_cache["pos"] = pos + 1
+
+    for i in range(cfg.num_layers):
+        lp = jax.tree_util.tree_map(lambda a: a[i], params["layers"])
+        x = constrain(x, ("pod", "data"), None, None)
+        h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        if cfg.family == "ssm":
+            mix, h_new, conv_new = L.mamba_decode_step(
+                h, lp["ssm"], new_cache["ssm_h"][i], new_cache["conv"][i],
+                dt_rank=cfg.resolved_dt_rank, ssm_state=cfg.ssm_state,
+                conv_k=cfg.ssm_conv,
+            )
+            new_cache["ssm_h"] = lax.dynamic_update_index_in_dim(
+                new_cache["ssm_h"], h_new, i, 0
+            )
+            new_cache["conv"] = lax.dynamic_update_index_in_dim(
+                new_cache["conv"], conv_new.astype(cd), i, 0
+            )
+        else:
+            q, k, v = _qkv(h, lp, cfg, positions)
+            k = _repeat_to(k, spec.kv_heads).astype(cd)
+            v = _repeat_to(v, spec.kv_heads).astype(cd)
+            write = pos % spec.cache_len if spec.ring else pos
+            kc = lax.dynamic_update_slice(
+                new_cache["k"], k[None], (i, 0, 0, write, 0)
+            )
+            vc = lax.dynamic_update_slice(
+                new_cache["v"], v[None], (i, 0, 0, write, 0)
+            )
+            new_cache["k"], new_cache["v"] = kc, vc
+            cache_len = (
+                jnp.minimum(pos + 1, spec.cache_len) if spec.ring else pos + 1
+            )
+            o = L.decode_attention(q, kc[i], vc[i], cache_len)
+            mix = _attn_out(o, lp)
+            if cfg.family == "hybrid":
+                ssm_o, h_new, conv_new = L.mamba_decode_step(
+                    h, lp["ssm"], new_cache["ssm_h"][i], new_cache["conv"][i],
+                    dt_rank=cfg.resolved_dt_rank, ssm_state=cfg.ssm_state,
+                    conv_k=cfg.ssm_conv,
+                )
+                mix = 0.5 * (mix + L.rms_norm(ssm_o, lp["ln_ssm"], cfg.norm_eps))
+                new_cache["ssm_h"] = lax.dynamic_update_index_in_dim(
+                    new_cache["ssm_h"], h_new, i, 0
+                )
+                new_cache["conv"] = lax.dynamic_update_index_in_dim(
+                    new_cache["conv"], conv_new.astype(cd), i, 0
+                )
+        x = x + mix
+        h2 = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+        if cfg.family == "moe":
+            shared = (
+                (lp["ws_gate"], lp["ws_up"], lp["ws_down"])
+                if cfg.num_shared_experts else None
+            )
+            y, _ = L.moe_layer(
+                h2, lp["router"], lp["we_gate"], lp["we_up"], lp["we_down"],
+                top_k=cfg.top_k, num_real_experts=cfg.num_experts,
+                capacity_factor=max(cfg.expert_capacity_factor, 2.0),
+                group_size=1, shared=shared,
+            )
+        elif cfg.family == "ssm":
+            y = jnp.zeros_like(x)
+        else:
+            y = L.swiglu_mlp(h2, lp["wi_gate"], lp["wi_up"], lp["wo_mlp"])
+        x = x + y
+
+    hidden = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _logits(params, hidden, cfg)[:, 0]
+    return logits, new_cache

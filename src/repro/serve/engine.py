@@ -1,0 +1,68 @@
+"""Batched serving engine: prefill + decode loop over the KV/SSM cache.
+
+Used by ``examples/serve_llm.py`` and by the decode-shape dry-run cells.
+Continuous batching at production scale would slot new requests into freed
+cache rows; here we implement the static-batch engine (the dry-run target)
+plus request padding — the cache layout and step function are the deployable
+parts.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec, lm
+from repro.models.lm import CacheSpec
+
+__all__ = ["ServeEngine"]
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, *, max_len: int,
+                 model_axis: int = 1, attn_impl: str = "auto"):
+        self.cfg = cfg
+        self.params = params
+        self.spec = CacheSpec.build(cfg, max_len, model_axis)
+        self.attn_impl = attn_impl
+        mod = encdec if cfg.family == "encdec" else lm
+        self._mod = mod
+        if cfg.family == "encdec":
+            self._prefill = jax.jit(
+                lambda p, t, s: encdec.prefill(p, t, s, cfg, self.spec)
+            )
+            self._step = jax.jit(
+                lambda p, c, t: encdec.decode_step(p, c, t, cfg, self.spec),
+                donate_argnums=(1,),
+            )
+        else:
+            self._prefill = jax.jit(
+                partial(lm.prefill, cfg=cfg, spec=self.spec, attn_impl=attn_impl)
+            )
+            self._step = jax.jit(
+                partial(lm.decode_step, cfg=cfg, spec=self.spec),
+                donate_argnums=(1,),
+            )
+
+    def generate(self, prompts: np.ndarray, num_tokens: int, *,
+                 source: np.ndarray | None = None, greedy: bool = True,
+                 rng=None):
+        """prompts [B, S_prompt] int32 -> generated tokens [B, num_tokens]."""
+        if self.cfg.family == "encdec":
+            logits, cache = self._prefill(self.params, prompts, source)
+        else:
+            logits, cache = self._prefill(self.params, prompts)
+        out = []
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        for i in range(num_tokens):
+            out.append(np.asarray(tok))
+            logits, cache = self._step(self.params, cache, tok)
+            if greedy:
+                tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            else:
+                rng, sub = jax.random.split(rng)
+                tok = jax.random.categorical(sub, logits).astype(jnp.int32)
+        return np.stack(out, axis=1)

@@ -1,0 +1,125 @@
+"""Jitted training step: grad accumulation, AdamW, optional compression.
+
+``make_train_step`` builds the donated, shardable step function used both by
+the live trainer and by the multi-pod dry-run.  Gradient accumulation scans
+over microbatches (activation memory ∝ 1/A at fixed global batch) and
+accumulates *sum* gradients so the final update is bit-equal to the
+full-batch gradient of the weighted loss:
+
+    g = (Σ_mb Σ_i w_i ∇nll_i) / (Σ_mb Σ_i w_i)
+
+which is exactly the paper's Eq. (3) invariance — SOLAR's uneven per-node
+batches (zero-weight padding rows) produce the same update as the vanilla
+assignment.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed import compression
+from repro.optim.adamw import AdamWConfig, apply_updates, init_opt_state
+
+__all__ = ["init_train_state", "make_train_step"]
+
+
+def init_train_state(params, opt_cfg: AdamWConfig, *, error_feedback: bool = False):
+    state = {"params": params, "opt": init_opt_state(params, opt_cfg)}
+    if error_feedback:
+        state["ef"] = compression.init_error_feedback(params)
+    return state
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    opt_cfg: AdamWConfig,
+    loss_fn: Callable,
+    *,
+    compress_grads: bool = False,
+    grad_shardings=None,
+):
+    """loss_fn(params, microbatch) -> (mean_loss, metrics with 'tokens').
+
+    Returns step(state, batch) -> (state, metrics); donate both args when
+    jitting.  Batch leaves are [B_global, ...]; B_global must divide by
+    cfg.grad_accum.
+
+    ``grad_shardings``: param-shaped tree of NamedSharding.  REQUIRED at
+    scale: without it the partitioner keeps the accumulated gradients
+    gathered over the FSDP axis (at 405B that is a 50 GB carry and a full
+    grad all-reduce per microbatch instead of a reduce-scatter — measured in
+    EXPERIMENTS.md §Perf, llama it3).
+    """
+    accum = max(cfg.grad_accum, 1)
+    adt = jnp.dtype(cfg.grad_accum_dtype)
+
+    def pin(tree):
+        if grad_shardings is None:
+            return tree
+        return jax.tree_util.tree_map(
+            lambda x, s: jax.lax.with_sharding_constraint(x, s),
+            tree,
+            grad_shardings,
+        )
+
+    def sum_loss(params, mb):
+        loss, metrics = loss_fn(params, mb)
+        denom = metrics.get("tokens", jnp.asarray(1.0, jnp.float32))
+        return loss * denom, (denom, metrics)
+
+    grad_fn = jax.value_and_grad(sum_loss, has_aux=True)
+
+    def step(state, batch):
+        params = state["params"]
+
+        def reshape(x):
+            return x.reshape((accum, x.shape[0] // accum) + x.shape[1:])
+
+        mbs = jax.tree_util.tree_map(reshape, batch)
+
+        def body(carry, mb):
+            gacc, denom_acc, loss_acc = carry
+            (lsum, (denom, _)), g = grad_fn(params, mb)
+            gacc = jax.tree_util.tree_map(
+                lambda a, b: a + b.astype(adt), gacc, pin(g)
+            )
+            return (pin(gacc), denom_acc + denom, loss_acc + lsum), None
+
+        zeros = pin(jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, adt), params
+        ))
+        if accum == 1:
+            one = jax.tree_util.tree_map(lambda x: x[0], mbs)
+            (lsum, (denom, _)), g = grad_fn(params, one)
+            gacc = pin(jax.tree_util.tree_map(lambda x: x.astype(adt), g))
+            loss_sum = lsum
+        else:
+            (gacc, denom, loss_sum), _ = jax.lax.scan(
+                body, (zeros, jnp.zeros((), jnp.float32), jnp.zeros(())), mbs
+            )
+        grads = jax.tree_util.tree_map(
+            lambda g: (g.astype(jnp.float32) / jnp.maximum(denom, 1.0)).astype(g.dtype),
+            gacc,
+        )
+
+        new_state = dict(state)
+        if compress_grads:
+            grads, new_state["ef"] = compression.apply_error_feedback(
+                grads, state["ef"]
+            )
+
+        new_params, new_opt, om = apply_updates(params, grads, state["opt"], opt_cfg)
+        new_state["params"] = new_params
+        new_state["opt"] = new_opt
+        metrics = {
+            "loss": loss_sum / jnp.maximum(denom, 1.0),
+            "tokens": denom,
+            **om,
+        }
+        return new_state, metrics
+
+    return step

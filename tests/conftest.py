@@ -1,0 +1,19 @@
+import os
+
+# Smoke tests and benches must see the real (single) CPU device — the
+# 512-device override belongs ONLY to repro.launch.dryrun (run via its own
+# process).  Keep compilation caches warm across tests.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture()
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def tmp_store_dir(tmp_path_factory):
+    return tmp_path_factory.mktemp("stores")

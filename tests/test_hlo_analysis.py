@@ -1,0 +1,55 @@
+"""Unit tests for the HLO-text analyzer (collective bytes, loop weighting)."""
+import textwrap
+
+from repro.launch.hlo_analysis import collective_bytes, program_stats
+
+_FAKE = textwrap.dedent("""\
+    HloModule jit_step
+
+    %cond (p: (s32[], f32[8,8])) -> pred[] {
+      %p = (s32[], f32[8,8]) parameter(0)
+      %i = s32[] get-tuple-element(%p), index=0
+      %c = s32[] constant(24)
+      ROOT %lt = pred[] compare(%i, %c), direction=LT
+    }
+
+    %body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+      %p = (s32[], f32[8,8]) parameter(0)
+      %x = f32[8,8] get-tuple-element(%p), index=1
+      %ar = f32[8,8]{1,0} all-reduce(%x), channel_id=1, replica_groups=[2,4]<=[8]
+      %i = s32[] get-tuple-element(%p), index=0
+      %one = s32[] constant(1)
+      %ip = s32[] add(%i, %one)
+      ROOT %t = (s32[], f32[8,8]) tuple(%ip, %ar)
+    }
+
+    ENTRY %main (a: f32[8,8], w: f32[8,16]) -> f32[8,8] {
+      %a = f32[8,8] parameter(0)
+      %w = f32[8,16] parameter(1)
+      %ag = f32[16,16]{1,0} all-gather(%a), channel_id=2, dimensions={0}
+      %d = f32[8,16]{1,0} dot(%a, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      %init = s32[] constant(0)
+      %t0 = (s32[], f32[8,8]) tuple(%init, %a)
+      %wl = (s32[], f32[8,8]) while(%t0), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"24"}}
+      ROOT %o = f32[8,8] get-tuple-element(%wl), index=1
+    }
+    """)
+
+
+def test_collective_bytes_loop_weighted():
+    out = collective_bytes(_FAKE)
+    assert out["ok"]
+    # all-reduce in a 24-trip loop: 8*8*4 bytes * 24
+    assert out["all-reduce"] == 8 * 8 * 4 * 24
+    # all-gather at top level: 16*16*4
+    assert out["all-gather"] == 16 * 16 * 4
+    assert out["total"] == out["all-reduce"] + out["all-gather"]
+    assert out["flat_total"] == 8 * 8 * 4 + 16 * 16 * 4
+
+
+def test_program_stats_dot_flops():
+    s = program_stats(_FAKE)
+    # dot [8,16] result with contraction 8: 2 * 8*16 * 8
+    assert s["dot_flops"] == 2 * 8 * 16 * 8
+    assert s["traffic_bytes"] > 0
+    assert s["collectives"]["total"] == collective_bytes(_FAKE)["total"]

@@ -1,0 +1,81 @@
+"""Dry-run spec builders: every (arch x shape) cell has well-formed
+ShapeDtypeStruct inputs and correct applicability, without any compilation."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import SHAPES, get_config, list_configs
+from repro.launch import specs as S
+from repro.launch.roofline import model_flops
+from repro.optim.adamw import AdamWConfig
+
+CELLS = [(a, s) for a in list_configs() for s in SHAPES]
+
+
+def test_skip_logic_matches_design():
+    skips = {
+        (a, s): S.cell_applicability(get_config(a), SHAPES[s]) for a, s in CELLS
+    }
+    skipped = {k for k, v in skips.items() if v}
+    # exactly the full-attention archs skip long_500k
+    assert all(s == "long_500k" for _, s in skipped)
+    sub_quadratic = {"hymba-1.5b", "falcon-mamba-7b"}
+    assert {a for a, _ in skipped} == set(list_configs()) - sub_quadratic
+
+
+@pytest.mark.parametrize("arch", list_configs())
+def test_train_specs_shapes(arch):
+    cfg = get_config(arch)
+    shape = SHAPES["train_4k"]
+    specs = S.train_specs(cfg, shape)
+    assert specs["weights"].shape == (shape.global_batch,)
+    total_seq = specs["tokens"].shape[1] + (
+        cfg.num_patches if cfg.family == "vlm" else 0
+    )
+    assert total_seq == shape.seq_len  # assigned seq honored exactly
+    assert specs["tokens"].dtype == jnp.int32
+    if cfg.family == "encdec":
+        assert specs["source"].shape == (
+            shape.global_batch, cfg.source_len, cfg.d_model
+        )
+
+
+@pytest.mark.parametrize("arch", ["llama3-405b", "falcon-mamba-7b",
+                                  "hymba-1.5b", "whisper-medium"])
+def test_decode_specs_no_allocation(arch):
+    cfg = get_config(arch)
+    shape = SHAPES["decode_32k"]
+    cache, tok, spec = S.decode_specs(cfg, shape, model_axis=16)
+    for leaf in jax.tree_util.tree_leaves(cache):
+        assert isinstance(leaf, jax.ShapeDtypeStruct)
+    assert tok.shape == (shape.global_batch,)
+    if cfg.family == "ssm":
+        assert "k" not in cache
+    elif arch == "hymba-1.5b":
+        assert spec.ring and spec.cache_len == cfg.sliding_window
+    else:
+        assert cache["k"].shape[3] == shape.seq_len
+
+
+def test_state_specs_cover_params_and_moments():
+    cfg = get_config("qwen2-0.5b")
+    st = S.state_specs(cfg, AdamWConfig(state_dtype="bfloat16"))
+    assert set(st) == {"params", "opt"}
+    p_leaves = jax.tree_util.tree_leaves(st["params"])
+    m_leaves = jax.tree_util.tree_leaves(st["opt"].mu)
+    assert len(p_leaves) == len(m_leaves)
+    assert all(m.dtype == jnp.bfloat16 for m in m_leaves)
+
+
+def test_model_flops_scaling():
+    cfg = get_config("deepseek-7b")
+    tr = model_flops(cfg, SHAPES["train_4k"])
+    pf = model_flops(cfg, SHAPES["prefill_32k"])
+    dc = model_flops(cfg, SHAPES["decode_32k"])
+    # train = 6ND, prefill = 2ND (same tokens), decode = 2N*B
+    assert tr / pf == pytest.approx(3.0, rel=1e-6)
+    assert dc == pytest.approx(2.0 * cfg.num_active_params() * 128, rel=1e-6)
+    moe = get_config("phi3.5-moe-42b-a6.6b")
+    assert model_flops(moe, SHAPES["train_4k"]) < 6.0 * moe.num_params() * (
+        256 * 4096
+    )

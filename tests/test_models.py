@@ -1,0 +1,151 @@
+"""Per-architecture smoke tests (reduced configs) + decode consistency +
+the paper's CNN surrogates."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, SURROGATES, get_config
+from repro.models import cnn, encdec, lm
+from repro.models.lm import CacheSpec
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, b=2, s=32):
+    tokens = jax.random.randint(KEY, (b, s), 0, cfg.vocab_size)
+    batch = {
+        "tokens": tokens,
+        "labels": jnp.roll(tokens, -1, 1),
+        "weights": jnp.ones((b,), jnp.float32),
+    }
+    if cfg.family == "vlm":
+        batch["patches"] = jax.random.normal(KEY, (b, cfg.num_patches, cfg.d_model))
+    if cfg.family == "encdec":
+        batch["source"] = jax.random.normal(KEY, (b, cfg.source_len, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_smoke_forward_and_grad(arch):
+    """Reduced config: one forward + one grad step; shapes + finiteness."""
+    cfg = get_config(arch).reduced()
+    batch = _batch(cfg)
+    if cfg.family == "encdec":
+        params = encdec.init_encdec(KEY, cfg)
+        loss_fn = lambda p: encdec.train_loss(p, batch, cfg)[0]
+    else:
+        params = lm.init_lm(KEY, cfg)
+        loss_fn = lambda p: lm.train_loss(p, batch, cfg)[0]
+    loss, grads = jax.jit(jax.value_and_grad(loss_fn))(params)
+    assert np.isfinite(float(loss))
+    for leaf in jax.tree_util.tree_leaves(grads):
+        assert np.isfinite(np.asarray(leaf, np.float32)).all(), arch
+
+
+@pytest.mark.parametrize("arch", ["qwen2-0.5b", "phi3.5-moe-42b-a6.6b",
+                                  "falcon-mamba-7b", "hymba-1.5b",
+                                  "whisper-medium", "llava-next-mistral-7b"])
+def test_decode_matches_full_forward(arch):
+    cfg = get_config(arch).reduced()
+    b, s = 2, 24
+    tokens = jax.random.randint(KEY, (b, s), 0, cfg.vocab_size)
+    # VLM prepends patch embeddings: the cache must cover them too.
+    spec = CacheSpec.build(cfg, s + cfg.num_patches + 4)
+    if cfg.family == "encdec":
+        params = encdec.init_encdec(KEY, cfg)
+        src = jax.random.normal(KEY, (b, cfg.source_len, cfg.d_model))
+        lg, cache = encdec.prefill(params, tokens[:, : s - 3], src, cfg, spec)
+        for t in range(s - 3, s):
+            lg, cache = encdec.decode_step(params, cache, tokens[:, t], cfg, spec)
+        enc_out = encdec.encode(params, src, cfg)
+        hidden = encdec._decoder_hidden(params, tokens, enc_out, cfg)
+        want = jnp.einsum("bd,vd->bv", hidden[:, -1].astype(jnp.float32),
+                          params["embed"].astype(jnp.float32))
+    else:
+        params = lm.init_lm(KEY, cfg)
+        patches = (
+            jax.random.normal(KEY, (b, cfg.num_patches, cfg.d_model))
+            if cfg.family == "vlm" else None
+        )
+        lg, cache = lm.prefill(params, tokens[:, : s - 3], cfg, spec,
+                               patches=patches)
+        for t in range(s - 3, s):
+            lg, cache = lm.decode_step(params, cache, tokens[:, t], cfg, spec)
+        hidden, _ = lm.forward_hidden(params, tokens, cfg, patches=patches)
+        if cfg.family == "vlm":
+            hidden = hidden[:, -tokens.shape[1]:]
+        want = lm._logits(params, hidden, cfg)[:, -1]
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(want),
+                               atol=5e-3, rtol=1e-3)
+
+
+def test_sliding_window_ring_cache():
+    cfg = get_config("hymba-1.5b").reduced().replace(sliding_window=8)
+    b, s = 1, 40
+    tokens = jax.random.randint(KEY, (b, s), 0, cfg.vocab_size)
+    params = lm.init_lm(KEY, cfg)
+    spec = CacheSpec.build(cfg, 16)
+    assert spec.ring and spec.cache_len == 8
+    lg, cache = lm.prefill(params, tokens[:, :30], cfg, spec)
+    for t in range(30, s):
+        lg, cache = lm.decode_step(params, cache, tokens[:, t], cfg, spec)
+    hidden, _ = lm.forward_hidden(params, tokens, cfg)
+    want = lm._logits(params, hidden, cfg)[:, -1]
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(want), atol=5e-3,
+                               rtol=1e-3)
+
+
+def test_two_level_scan_matches_single_level():
+    cfg = get_config("deepseek-7b").reduced().replace(num_layers=4)
+    params = lm.init_lm(KEY, cfg)
+    batch = _batch(cfg)
+    l1 = lm.train_loss(params, batch, cfg)[0]
+    l2 = lm.train_loss(params, batch, cfg.replace(scan_block=2))[0]
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-6)
+
+
+def test_ce_chunking_invariant():
+    cfg = get_config("qwen2-0.5b").reduced()
+    params = lm.init_lm(KEY, cfg)
+    batch = _batch(cfg, s=32)
+    l1 = lm.train_loss(params, batch, cfg.replace(ce_chunk=32))[0]
+    l2 = lm.train_loss(params, batch, cfg.replace(ce_chunk=8))[0]
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-6)
+
+
+def test_cache_spec_head_padding_rules():
+    cfg = get_config("llama3-405b")  # kv=8
+    assert CacheSpec.build(cfg, 64, model_axis=16).kv_heads == 16
+    assert CacheSpec.build(cfg, 64, model_axis=1).kv_heads == 8
+    hy = get_config("hymba-1.5b")  # kv=5 unshardable over 16
+    assert CacheSpec.build(hy, 64, model_axis=16).kv_heads == 5
+
+
+@pytest.mark.parametrize("name", list(SURROGATES))
+def test_surrogate_smoke(name):
+    cfg = SURROGATES[name].reduced()
+    params = cnn.init_surrogate(KEY, cfg)
+    x = jax.random.normal(KEY, (2,) + cfg.input_shape)
+    y = jax.random.normal(KEY, (2,) + cfg.output_shape)
+    out = cnn.surrogate_apply(params, x, cfg)
+    assert out.shape == (2,) + cfg.output_shape
+    loss, _ = cnn.surrogate_loss(params, {"x": x, "y": y}, cfg)
+    g = jax.grad(lambda p: cnn.surrogate_loss(p, {"x": x, "y": y}, cfg)[0])(params)
+    assert np.isfinite(float(loss))
+    assert all(np.isfinite(np.asarray(l)).all() for l in jax.tree_util.tree_leaves(g))
+
+
+def test_param_counts_in_expected_range():
+    """Analytic num_params sanity for key archs (order of magnitude)."""
+    for arch, lo, hi in [
+        ("llama3-405b", 380e9, 430e9),
+        ("deepseek-7b", 6e9, 8e9),
+        ("qwen2-0.5b", 0.3e9, 0.7e9),
+        ("falcon-mamba-7b", 6e9, 9e9),
+    ]:
+        n = get_config(arch).num_params()
+        assert lo < n < hi, (arch, n)
+    moe = get_config("phi3.5-moe-42b-a6.6b")
+    assert 38e9 < moe.num_params() < 46e9
+    assert 5e9 < moe.num_active_params() < 8e9

@@ -1,0 +1,238 @@
+"""SOLAR core invariants (paper §4) — unit + property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    BeladyBuffer,
+    LRUBuffer,
+    OfflineScheduler,
+    PFSCostModel,
+    SolarConfig,
+    generate_epoch_permutations,
+)
+from repro.core.balance import distribute_misses
+from repro.core.chunking import plan_chunks
+from repro.core.epoch_order import (
+    optimize_epoch_order,
+    path_cost,
+    reuse_cost_matrix,
+    solve_exact,
+    solve_greedy_2opt,
+    solve_pso,
+)
+from repro.core.scheduler import build_next_use_index
+from repro.core.shuffle import split_global_batches
+
+
+# ---------------------------------------------------------------------------
+# Shuffle
+# ---------------------------------------------------------------------------
+
+
+def test_shuffle_deterministic_and_permutation():
+    a = generate_epoch_permutations(100, 5, seed=42)
+    b = generate_epoch_permutations(100, 5, seed=42)
+    assert np.array_equal(a, b)
+    c = generate_epoch_permutations(100, 5, seed=43)
+    assert not np.array_equal(a, c)
+    for e in range(5):
+        assert np.array_equal(np.sort(a[e]), np.arange(100))
+
+
+def test_split_global_batches_drops_tail():
+    perm = np.arange(103)
+    b = split_global_batches(perm, 10)
+    assert b.shape == (10, 10)
+
+
+# ---------------------------------------------------------------------------
+# Epoch-order optimization
+# ---------------------------------------------------------------------------
+
+
+def test_reuse_cost_matrix_definition():
+    perms = generate_epoch_permutations(50, 4, seed=0)
+    buf = 10
+    n = reuse_cost_matrix(perms, buf)
+    # manual check for one pair
+    last_u = set(perms[0, -buf:].tolist())
+    first_v = set(perms[1, :buf].tolist())
+    assert n[0, 1] == len(first_v - last_u)
+    assert (np.diag(n) == 0).all()
+    assert (n >= 0).all() and (n <= buf).all()
+
+
+def test_heuristics_match_exact_on_small_instances():
+    rng = np.random.default_rng(0)
+    for _ in range(5):
+        w = rng.integers(0, 50, size=(7, 7)).astype(np.int64)
+        np.fill_diagonal(w, 0)
+        _, exact = solve_exact(w)
+        order_g, cost_g = solve_greedy_2opt(w)
+        order_p, cost_p = solve_pso(w, num_particles=24, iterations=150, seed=1)
+        assert cost_g == path_cost(w, order_g)
+        assert cost_p == path_cost(w, order_p)
+        assert cost_g >= exact and cost_p >= exact
+        # local search should land within ~30% of optimal on random
+        # asymmetric instances (structured reuse matrices do far better)
+        assert cost_g <= exact * 1.3 + 1
+
+
+def test_eoo_beats_identity_order():
+    perms = generate_epoch_permutations(512, 10, seed=3)
+    order, cost, id_cost = optimize_epoch_order(perms, buffer_size=128)
+    assert sorted(order.tolist()) == list(range(10))
+    assert cost <= id_cost
+
+
+# ---------------------------------------------------------------------------
+# Belady buffer
+# ---------------------------------------------------------------------------
+
+
+def test_belady_never_evicts_sooner_needed():
+    buf = BeladyBuffer(2)
+    assert buf.admit(1, next_use=10) is None
+    assert buf.admit(2, next_use=20) is None
+    # 3 is needed sooner than 2 -> evict 2
+    assert buf.admit(3, next_use=15) == 2
+    # 4 needed later than everything resident -> bypassed
+    assert buf.admit(4, next_use=99) == 4
+    assert 1 in buf and 3 in buf and 4 not in buf
+
+
+def test_belady_optimality_vs_lru_on_random_trace():
+    rng = np.random.default_rng(1)
+    trace = rng.integers(0, 30, size=400)
+    nxt = build_next_use_index(trace)
+    for cap in (4, 8, 16):
+        bel, lru = BeladyBuffer(cap), LRUBuffer(cap)
+        miss_b = miss_l = 0
+        for t, s in enumerate(trace.tolist()):
+            if s in bel:
+                bel.update_next_use(s, int(nxt[t]))
+            else:
+                miss_b += 1
+                bel.admit(s, int(nxt[t]))
+            if s in lru:
+                lru.touch(s)
+            else:
+                miss_l += 1
+                lru.admit(s)
+        assert miss_b <= miss_l
+
+
+def test_next_use_index():
+    trace = np.array([3, 1, 3, 2, 1])
+    nxt = build_next_use_index(trace)
+    inf = np.iinfo(np.int64).max
+    assert nxt.tolist() == [2, 4, inf, inf, inf]
+
+
+# ---------------------------------------------------------------------------
+# Chunking (paper §4.4)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    ids=st.sets(st.integers(0, 300), min_size=1, max_size=60),
+    max_chunk=st.integers(1, 20),
+)
+def test_chunk_plan_properties(ids, max_chunk):
+    chunks = plan_chunks(ids, max_chunk=max_chunk)
+    covered = set()
+    prev_stop = -1
+    for c in chunks:
+        assert c.start >= prev_stop, "chunks must not overlap"
+        assert c.span <= max(max_chunk, 1)
+        prev_stop = c.stop
+        covered.update(range(c.start, c.stop))
+    assert set(ids) <= covered
+    wanted = sum(c.wanted for c in chunks)
+    assert wanted == len(ids)
+
+
+def test_chunk_waste_bound():
+    chunks = plan_chunks([0, 2, 4, 11, 12], max_chunk=6, max_waste=2)
+    for c in chunks:
+        assert c.waste <= 2
+
+
+# ---------------------------------------------------------------------------
+# Load balancing (paper §4.3)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    nodes=st.integers(2, 6),
+    misses=st.lists(st.integers(0, 10_000), min_size=0, max_size=80, unique=True),
+)
+def test_balance_even_miss_counts(nodes, misses):
+    hits = np.zeros(nodes, dtype=np.int64)
+    out = distribute_misses(misses, hits, local_batch=64, capacity=96, balance=True)
+    counts = [len(o) for o in out]
+    assert sum(counts) == len(misses)
+    if counts:
+        assert max(counts) - min(counts) <= 1  # paper Fig. 12: even PFS loads
+
+
+def test_balance_respects_capacity():
+    hits = np.array([90, 0])
+    with pytest.raises(ValueError):
+        distribute_misses(list(range(200)), hits, local_batch=64, capacity=96)
+
+
+# ---------------------------------------------------------------------------
+# Full scheduler invariants
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("toggles", [
+    {},  # full SOLAR
+    {"enable_eoo": False},
+    {"enable_locality": False, "enable_balance": False},
+    {"enable_chunking": False},
+])
+def test_schedule_global_batch_invariance(toggles):
+    """THE paper invariant: every step trains the exact multiset of samples
+    of the vanilla shuffle's global batch (=> identical gradients, Eq. 3)."""
+    cfg = SolarConfig(num_nodes=3, local_batch=8, buffer_size=64, **toggles)
+    sched = OfflineScheduler(cfg).build(num_samples=384, num_epochs=4)
+    perms = generate_epoch_permutations(384, 4, seed=0)
+    for ep in sched.epochs:
+        vanilla = split_global_batches(perms[ep.epoch_id], cfg.global_batch)
+        for k, sp in enumerate(ep.steps):
+            got = np.sort(sp.global_batch())
+            assert np.array_equal(got, np.sort(vanilla[k]))
+            for npn in sp.nodes:
+                npn.validate()
+                assert npn.num_real <= cfg.capacity
+
+
+def test_schedule_improves_over_ablated():
+    base = SolarConfig(num_nodes=4, local_batch=16, buffer_size=128)
+    full = OfflineScheduler(base).build(1024, 6).stats()
+    off = OfflineScheduler(
+        SolarConfig(num_nodes=4, local_batch=16, buffer_size=128,
+                    enable_eoo=False, enable_locality=False,
+                    enable_balance=False, enable_chunking=False)
+    ).build(1024, 6).stats()
+    assert full.hit_rate > off.hit_rate
+    assert full.total_misses < off.total_misses
+    # balance: per-step max miss (the loading critical path) improves
+    assert full.per_step_max_miss.mean() <= off.per_step_max_miss.mean()
+
+
+def test_cost_model_orders_patterns():
+    cm = PFSCostModel(sample_bytes=65536)
+    assert cm.read_time(16) < 16 * cm.read_time(1)
+
+
+def test_schedule_cache_key_stable():
+    c1 = SolarConfig(num_nodes=2, local_batch=4, buffer_size=8)
+    c2 = SolarConfig(num_nodes=2, local_batch=4, buffer_size=8)
+    assert c1.cache_key(100, 5) == c2.cache_key(100, 5)
+    assert c1.cache_key(100, 5) != c1.cache_key(101, 5)

@@ -1,0 +1,137 @@
+"""End-to-end system tests: SOLAR loader -> trainer -> checkpoint, and the
+gradient-equivalence bridge between the scheduler and the model update —
+the central claim of the paper (reordering within the global batch changes
+nothing about training)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.surrogates import SURROGATES
+from repro.core.scheduler import SolarConfig
+from repro.data import create_synthetic_store, make_loader
+from repro.models import cnn
+from repro.optim.adamw import AdamWConfig
+from repro.train.step import init_train_state, make_train_step
+from repro.train.trainer import Trainer
+
+KEY = jax.random.PRNGKey(0)
+
+
+class _DummyCfg:
+    grad_accum = 1
+    grad_accum_dtype = "float32"
+
+
+@pytest.fixture(scope="module")
+def surrogate_setup(tmp_path_factory):
+    cfg = SURROGATES["ptychonn"].reduced()
+    d = tmp_path_factory.mktemp("e2e")
+    store = create_synthetic_store(
+        str(d / "x.bin"), num_samples=256,
+        sample_shape=cfg.input_shape, dtype=np.float32, kind="random",
+    )
+    return cfg, store
+
+
+def _make_batch_fn(cfg, capacity):
+    def make_batch(sb):
+        data, weights = sb.to_global(capacity)
+        # synthetic target: broadcast mean of the input (cheap, learnable)
+        pooled = data.reshape(data.shape[0], -1).mean(axis=1)
+        y = np.broadcast_to(
+            pooled.reshape((-1,) + (1,) * len(cfg.output_shape)),
+            (data.shape[0],) + cfg.output_shape,
+        ).astype(np.float32)
+        return {"x": jnp.asarray(data), "y": jnp.asarray(y),
+                "weights": jnp.asarray(weights)}
+
+    return make_batch
+
+
+def _trainer(cfg, store, loader_name, steps=8, ckpt=None, every=0, skip=0):
+    store.reset_counters()
+    ld = make_loader(loader_name, store, 2, 8, 2, 64, 0, collect_data=True)
+    capacity = getattr(ld, "capacity", 12)
+    params = cnn.init_surrogate(KEY, cfg)
+    opt = AdamWConfig(lr=1e-3)
+    step = jax.jit(make_train_step(
+        _DummyCfg(), opt, lambda p, b: cnn.surrogate_loss(p, b, cfg)
+    ))
+    state = init_train_state(params, opt)
+    t = Trainer(loader=ld, step_fn=step, state=state,
+                make_batch=_make_batch_fn(cfg, capacity),
+                checkpoint_dir=ckpt, checkpoint_every=every,
+                skip_steps=skip)
+    t.run(max_steps=steps)
+    return t
+
+
+def test_end_to_end_solar_training(surrogate_setup):
+    cfg, store = surrogate_setup
+    t = _trainer(cfg, store, "solar", steps=10)
+    losses = [m["loss"] for m in t.metrics_history]
+    assert len(losses) == 10
+    assert all(np.isfinite(l) for l in losses)
+    # training makes progress (the synthetic target converges fast, so the
+    # tail can be noise-dominated: compare best-so-far against the start)
+    assert min(losses) < losses[0]
+    assert losses[-1] < losses[0] * 2.0
+    bd = t.breakdown()
+    assert bd["load_s"] > 0 and bd["compute_s"] > 0
+
+
+def test_end_to_end_data_volume(surrogate_setup):
+    cfg, store = surrogate_setup
+    for name in ("naive", "solar"):
+        t = _trainer(cfg, store, name, steps=6)
+        tot = sum(m["tokens"] for m in t.metrics_history)
+        assert tot == 6 * 16, name  # 2 nodes x 8 local; padding is weightless
+
+
+def test_trainer_skip_steps_resume_cursor(surrogate_setup, tmp_path):
+    cfg, store = surrogate_setup
+    full = _trainer(cfg, store, "solar", steps=8)
+    part = _trainer(cfg, store, "solar", steps=4, ckpt=str(tmp_path), every=4)
+    _, resume = Trainer.try_restore(str(tmp_path), part.state)
+    assert resume == 4
+    resumed = _trainer(cfg, store, "solar", steps=8, skip=resume)
+    ids_full = [m["step"] for m in full.metrics_history]
+    ids_res = [m["step"] for m in resumed.metrics_history]
+    assert ids_res == ids_full[resume:]
+
+
+def test_solar_gradient_equals_vanilla_gradient(surrogate_setup):
+    """Bridge test: the batch SOLAR emits at step k yields the *same
+    synchronized gradient* as the vanilla loader's step-k batch (paper
+    Eq. 3 made executable)."""
+    cfg, store = surrogate_setup
+
+    def grads_for(loader_name, solar_config=None):
+        kw = {"solar_config": solar_config} if solar_config else {}
+        ld = make_loader(loader_name, store, 2, 8, 1, 64, 0,
+                         collect_data=True, **kw)
+        capacity = getattr(ld, "capacity", 12)
+        params = cnn.init_surrogate(KEY, cfg)
+        mk = _make_batch_fn(cfg, capacity)
+        out = []
+        for sb in ld:
+            b = mk(sb)
+
+            def f(p, b=b):
+                loss, m = cnn.surrogate_loss(p, b, cfg)
+                return loss * m["tokens"]  # weighted-sum grad: scale-free
+
+            out.append(jax.grad(f)(params))
+        return out
+
+    vanilla = grads_for("naive")
+    solar = grads_for(
+        "solar", SolarConfig(num_nodes=2, local_batch=8, buffer_size=64)
+    )
+    assert len(vanilla) == len(solar)
+    for gv, gs in zip(vanilla, solar):
+        for a, b in zip(jax.tree_util.tree_leaves(gv),
+                        jax.tree_util.tree_leaves(gs)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-4, rtol=1e-3)

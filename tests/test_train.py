@@ -1,0 +1,136 @@
+"""Training-step invariants: the SPMD adaptation of the paper's Eq. (3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import lm
+from repro.optim.adamw import AdamWConfig
+from repro.train.step import init_train_state, make_train_step
+
+KEY = jax.random.PRNGKey(0)
+CFG = get_config("qwen2-0.5b").reduced()
+OPT = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=100)
+
+
+def _batch(b=8, s=32, key=KEY):
+    tokens = jax.random.randint(key, (b, s), 0, CFG.vocab_size)
+    return {
+        "tokens": tokens,
+        "labels": jnp.roll(tokens, -1, 1),
+        "weights": jnp.ones((b,), jnp.float32),
+    }
+
+
+def _max_delta(a, b):
+    return max(
+        float(jnp.max(jnp.abs(x - y)))
+        for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b))
+    )
+
+
+def test_zero_weight_padding_rows_are_exact_noops():
+    """SOLAR's uneven batches are padded with weight-0 rows; the update must
+    be bit-identical to the unpadded batch (paper Eq. 3 under SPMD)."""
+    params = lm.init_lm(KEY, CFG)
+    batch = _batch(8)
+    pad = {
+        "tokens": jnp.concatenate([batch["tokens"], jnp.zeros((8, 32), jnp.int32)]),
+        "labels": jnp.concatenate([batch["labels"], jnp.zeros((8, 32), jnp.int32)]),
+        "weights": jnp.concatenate([batch["weights"], jnp.zeros((8,), jnp.float32)]),
+    }
+    s1 = init_train_state(params, OPT)
+    s2 = init_train_state(params, OPT)
+    step1 = jax.jit(make_train_step(CFG.replace(grad_accum=4), OPT,
+                                    lambda p, b: lm.train_loss(p, b, CFG)))
+    step2 = jax.jit(make_train_step(CFG.replace(grad_accum=8), OPT,
+                                    lambda p, b: lm.train_loss(p, b, CFG)))
+    s1, m1 = step1(s1, batch)
+    s2, m2 = step2(s2, pad)
+    assert _max_delta(s1["params"], s2["params"]) < 1e-6
+    assert abs(float(m1["loss"]) - float(m2["loss"])) < 1e-5
+
+
+def test_node_sample_remap_invariance():
+    """Permuting samples within the global batch (SOLAR's locality remap +
+    balancing) leaves the synchronized update identical."""
+    params = lm.init_lm(KEY, CFG)
+    batch = _batch(8)
+    perm = jax.random.permutation(jax.random.PRNGKey(5), 8)
+    shuffled = {k: v[perm] for k, v in batch.items()}
+    step = jax.jit(make_train_step(CFG, OPT,
+                                   lambda p, b: lm.train_loss(p, b, CFG)))
+    s1, _ = step(init_train_state(params, OPT), batch)
+    s2, _ = step(init_train_state(params, OPT), shuffled)
+    assert _max_delta(s1["params"], s2["params"]) < 1e-6
+
+
+def test_grad_accum_invariance():
+    params = lm.init_lm(KEY, CFG)
+    batch = _batch(8)
+    outs = []
+    for accum in (1, 2, 4):
+        step = jax.jit(make_train_step(CFG.replace(grad_accum=accum), OPT,
+                                       lambda p, b: lm.train_loss(p, b, CFG)))
+        s, _ = step(init_train_state(params, OPT), batch)
+        outs.append(s["params"])
+    assert _max_delta(outs[0], outs[1]) < 1e-5
+    assert _max_delta(outs[0], outs[2]) < 1e-5
+
+
+def test_training_reduces_loss():
+    params = lm.init_lm(KEY, CFG)
+    step = jax.jit(make_train_step(CFG, OPT,
+                                   lambda p, b: lm.train_loss(p, b, CFG)))
+    state = init_train_state(params, OPT)
+    batch = _batch(8)
+    first = None
+    for _ in range(12):
+        state, m = step(state, batch)
+        first = first if first is not None else float(m["loss"])
+    assert float(m["loss"]) < first * 0.8
+
+
+def test_compressed_training_converges():
+    from repro.distributed import compression
+
+    params = lm.init_lm(KEY, CFG)
+    step = jax.jit(make_train_step(
+        CFG, OPT, lambda p, b: lm.train_loss(p, b, CFG), compress_grads=True
+    ))
+    state = init_train_state(params, OPT, error_feedback=True)
+    batch = _batch(8)
+    first = None
+    for _ in range(12):
+        state, m = step(state, batch)
+        first = first if first is not None else float(m["loss"])
+    assert float(m["loss"]) < first * 0.85  # int8+EF still converges
+
+
+def test_quantize_roundtrip_error_bound():
+    from repro.distributed.compression import quantize_dequantize
+
+    x = jax.random.normal(KEY, (1000,)) * 3.0
+    xq = quantize_dequantize(x)
+    # per-block max-scaled int8: error <= scale/2 = max|block|/254
+    err = jnp.max(jnp.abs(x - xq))
+    assert float(err) <= float(jnp.max(jnp.abs(x))) / 127.0
+
+
+def test_compressed_psum_matches_exact_sum_within_quant_error():
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.compression import compressed_psum, quantize_dequantize
+
+    mesh = jax.make_mesh((1,), ("dp",))
+    x = jax.random.normal(KEY, (4, 256))
+
+    f = shard_map(
+        lambda v: compressed_psum(v, "dp"),
+        mesh=mesh, in_specs=P("dp"), out_specs=P("dp"),
+    )
+    out = f(x)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(quantize_dequantize(x)), atol=1e-6
+    )
