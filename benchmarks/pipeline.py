@@ -1,0 +1,149 @@
+"""Sync vs async pipeline throughput (``BENCH_pipeline.json``).
+
+Measures wall-clock for one full data epoch sweep per loader, twice:
+
+  * **sync** — plain loader iteration: every PFS read and the per-step
+    consumer compute run serially on one thread,
+  * **async** — the same loader behind :class:`repro.data.prefetch.
+    PrefetchExecutor`: chunk reads issued concurrently on a worker pool
+    (schedule mode, SOLAR) or on a background thread (iterator mode,
+    baselines), overlapping the consumer's compute.
+
+The store is >= 64 MiB (16384 x 4 KiB float32 samples) over >= 4 nodes.  A
+per-pread latency (``simulated_latency_s``) emulates a remote Lustre/GPFS
+where call latency dominates — on the local page cache both paths finish so
+fast the comparison is meaningless — and every consumed step pays a fixed
+``compute_s`` to stand in for the device step.  Before timing, async batches
+are verified bit-identical to synchronous iteration (ids, hit masks, data).
+
+    PYTHONPATH=src python -m benchmarks.pipeline            # full run
+    PYTHONPATH=src python -m benchmarks.run --only pipeline --json-out BENCH_pipeline.json
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, get_store
+from repro.data import make_loader
+from repro.data.prefetch import PrefetchExecutor
+
+LOADERS = ["naive", "lru", "nopfs", "deepio", "solar"]
+
+
+def _verify_identical(store, name: str, **cfg) -> None:
+    """Zip-compare sync vs async iteration (latency off — correctness only)."""
+    ld_sync = make_loader(name, store, collect_data=True, **cfg)
+    ld_async = make_loader(name, store, collect_data=True, **cfg)
+    ex = PrefetchExecutor(ld_async, depth=4, num_workers=8)
+    for a, b in zip(ld_sync, ex):
+        assert a.epoch == b.epoch and a.step == b.step, name
+        for ia, ib, da, db, ma, mb in zip(
+            a.node_ids, b.node_ids, a.node_data, b.node_data,
+            a.hit_masks, b.hit_masks,
+        ):
+            assert np.array_equal(ia, ib), f"{name}: ids diverged"
+            assert np.array_equal(ma, mb), f"{name}: hit masks diverged"
+            assert np.array_equal(da, db), f"{name}: data diverged"
+    ra, rb = ld_sync.report, ld_async.report
+    assert ra.pfs_counts == rb.pfs_counts, f"{name}: numPFS accounting diverged"
+    assert ra.miss_counts == rb.miss_counts, name
+    assert ra.total_hits == rb.total_hits, name
+
+
+def _timed_epochs(loader_iter, compute_s: float) -> float:
+    t0 = time.perf_counter()
+    for _ in loader_iter:
+        if compute_s:
+            time.sleep(compute_s)  # stand-in for the jitted device step
+    return time.perf_counter() - t0
+
+
+def run(
+    num_samples: int = 16384,
+    sample_floats: int = 1024,       # 4 KiB/sample -> 64 MiB store
+    nodes: int = 4,
+    local_batch: int = 16,
+    epochs: int = 2,
+    buffer: int = 4096,
+    latency_s: float = 5e-4,
+    compute_s: float = 2e-3,
+    depth: int = 4,
+    workers: int = 8,
+    loaders=None,
+    json_out: str | None = None,
+) -> dict:
+    store = get_store(num_samples=num_samples, sample_floats=sample_floats)
+    assert store.num_samples * store.sample_bytes >= 64 << 20, "store must be >= 64 MiB"
+    cfg = dict(
+        num_nodes=nodes, local_batch=local_batch, num_epochs=epochs,
+        buffer_size=buffer, seed=0,
+    )
+
+    def _mk(name, collect=True):
+        return make_loader(
+            name, store, cfg["num_nodes"], cfg["local_batch"],
+            cfg["num_epochs"], cfg["buffer_size"], cfg["seed"],
+            collect_data=collect,
+        )
+
+    results: dict = {}
+    try:
+        for name in loaders or LOADERS:
+            results[name] = _one_loader(
+                store, name, nodes, local_batch, buffer, _mk,
+                latency_s, compute_s, depth, workers,
+            )
+    finally:
+        # the store is module-cached (benchmarks.common) — never leak the
+        # injected latency into whatever suite runs next in this process.
+        store.simulated_latency_s = 0.0
+
+    if json_out:
+        with open(json_out, "w") as f:
+            json.dump(results, f, indent=1, sort_keys=True)
+        emit("pipeline/json", 0.0, json_out)
+    return results
+
+
+def _one_loader(store, name, nodes, local_batch, buffer, _mk,
+                latency_s, compute_s, depth, workers) -> dict:
+    # correctness first, with real (latency-free) reads
+    store.simulated_latency_s = 0.0
+    store.reset_counters()
+    _verify_identical(
+        store, name, num_nodes=nodes, local_batch=local_batch,
+        num_epochs=1, buffer_size=buffer, seed=0,
+    )
+
+    store.simulated_latency_s = latency_s
+    store.reset_counters()
+    ld = _mk(name)
+    sync_wall = _timed_epochs(iter(ld), compute_s)
+
+    store.reset_counters()
+    ld2 = _mk(name)
+    ex = PrefetchExecutor(ld2, depth=depth, num_workers=workers)
+    async_wall = _timed_epochs(iter(ex), compute_s)
+
+    speedup = sync_wall / async_wall if async_wall else float("inf")
+    emit(f"pipeline/{name}/sync_wall", sync_wall * 1e6, f"{sync_wall:.3f}s")
+    emit(f"pipeline/{name}/async_wall", async_wall * 1e6,
+         f"{async_wall:.3f}s ({ex.mode} mode)")
+    emit(f"pipeline/{name}/speedup", 0.0, f"{speedup:.2f}x")
+    return {
+        "wall_time_s": {
+            "sync": round(sync_wall, 4),
+            "async": round(async_wall, 4),
+        },
+        "speedup": round(speedup, 3),
+        "modeled_time_s": round(ld2.report.modeled_time_s, 4),
+        "numPFS": ld2.report.total_pfs,
+        "mode": ex.mode,
+    }
+
+
+if __name__ == "__main__":
+    run(json_out="BENCH_pipeline.json")

@@ -1,12 +1,17 @@
 """Benchmark harness: one module per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--only fig9,table3]
+    PYTHONPATH=src python -m benchmarks.run --only pipeline --json-out BENCH_pipeline.json
 
-Output: ``name,us_per_call,derived`` CSV rows per measurement.
+Output: ``name,us_per_call,derived`` CSV rows per measurement; with
+``--json-out`` the suites' structured return values are additionally written
+to one JSON file (suite -> result), so the perf trajectory is tracked across
+PRs.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 import traceback
@@ -21,6 +26,7 @@ from benchmarks import (
     loaders,
     numpfs,
     optim_breakdown,
+    pipeline,
 )
 
 SUITES = {
@@ -33,26 +39,58 @@ SUITES = {
     "fig13": chunkable.run,             # chunkable fraction
     "fig16": batch_dist.run,            # batch-size distribution
     "eoo": epoch_order.run,             # path-TSP solver comparison
+    "pipeline": pipeline.run,           # sync vs async executor throughput
 }
+
+
+def _jsonable(obj):
+    """Best-effort conversion of suite return values to JSON-safe data."""
+    import numpy as np
+
+    if isinstance(obj, dict):
+        return {str(k): _jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_jsonable(v) for v in obj]
+    if isinstance(obj, np.ndarray):
+        return obj.tolist()
+    if isinstance(obj, (np.integer, np.floating)):
+        return obj.item()
+    if isinstance(obj, (str, int, float, bool)) or obj is None:
+        return obj
+    return repr(obj)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated suite names (default: all)")
+    ap.add_argument("--json-out", default=None,
+                    help="write suite results to this JSON file (a single "
+                         "suite's result is written unwrapped; multiple "
+                         "suites are keyed by suite name)")
     args = ap.parse_args()
     names = args.only.split(",") if args.only else list(SUITES)
     print("suite,us_per_call,derived")
     failures = 0
+    collected: dict = {}
     for name in names:
         t0 = time.perf_counter()
         try:
-            SUITES[name]()
+            collected[name] = SUITES[name]()
             print(f"{name}/_elapsed,{(time.perf_counter() - t0) * 1e6:.0f},ok")
         except Exception as e:  # pragma: no cover
             failures += 1
             print(f"{name}/_error,0,{type(e).__name__}: {e}")
             traceback.print_exc(file=sys.stderr)
+    if args.json_out:
+        if failures:
+            # never clobber a previously-good tracking file with partial data
+            print(f"_json/skipped,0,{failures} suite(s) failed")
+        else:
+            payload = collected.get(names[0]) if len(names) == 1 else collected
+            with open(args.json_out, "w") as f:
+                json.dump(_jsonable(payload), f, indent=1, sort_keys=True)
+            print(f"_json/written,0,{args.json_out}")
     if failures:
         raise SystemExit(1)
 

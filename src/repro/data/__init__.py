@@ -10,11 +10,13 @@ from repro.data.loaders import (
     StepBatch,
     make_loader,
 )
+from repro.data.prefetch import PrefetchExecutor
 from repro.data.storage import ChunkStore, create_synthetic_store
 
 __all__ = [
     "ChunkStore",
     "create_synthetic_store",
+    "PrefetchExecutor",
     "DeepIOLoader",
     "LoaderReport",
     "LRULoader",

@@ -126,6 +126,66 @@ class LoaderReport:
         }
 
 
+class _DataMirror:
+    """Array-backed mirror of one node's buffer contents (id -> sample row).
+
+    Lookups are vectorized (sorted id array + ``np.searchsorted``); admissions
+    copy only the admitted rows into free slots of a preallocated arena and
+    evictions only release slots — there is no per-step rebuild of the buffer.
+    """
+
+    def __init__(self, capacity: int, sample_shape: tuple[int, ...], dtype):
+        self.capacity = max(int(capacity), 1)
+        self._sample_shape = sample_shape
+        self._dtype = dtype
+        self._data: np.ndarray | None = None  # allocated on first admit
+        self.ids = np.empty(0, np.int64)      # sorted
+        self._slots = np.empty(0, np.int64)   # parallel to ids
+        self._free = list(range(self.capacity - 1, -1, -1))
+
+    def lookup(self, want: np.ndarray) -> np.ndarray:
+        """Arena slot per wanted id, -1 where absent."""
+        want = np.asarray(want, np.int64)
+        if want.size == 0 or self.ids.size == 0:
+            return np.full(want.size, -1, np.int64)
+        pos = np.minimum(np.searchsorted(self.ids, want), self.ids.size - 1)
+        return np.where(self.ids[pos] == want, self._slots[pos], -1)
+
+    def rows(self, slots: np.ndarray) -> np.ndarray:
+        assert self._data is not None
+        return self._data[slots]
+
+    def evict(self, ids) -> None:
+        ids = np.asarray(ids, np.int64)
+        if ids.size == 0 or self.ids.size == 0:
+            return
+        keep = ~np.isin(self.ids, ids, assume_unique=True)
+        self._free.extend(int(s) for s in self._slots[~keep].tolist())
+        self.ids = self.ids[keep]
+        self._slots = self._slots[keep]
+
+    def admit(self, ids, rows) -> None:
+        ids = np.asarray(ids, np.int64)
+        if ids.size == 0:
+            return
+        present = self.lookup(ids) >= 0
+        if present.any():  # re-admission of a resident id is a no-op
+            ids, rows = ids[~present], rows[~present]
+            if ids.size == 0:
+                return
+        if self._data is None:
+            self._data = np.empty(
+                (self.capacity,) + self._sample_shape, self._dtype
+            )
+        slots = np.asarray([self._free.pop() for _ in range(ids.size)], np.int64)
+        self._data[slots] = rows
+        all_ids = np.concatenate([self.ids, ids])
+        all_slots = np.concatenate([self._slots, slots])
+        order = np.argsort(all_ids, kind="stable")
+        self.ids = all_ids[order]
+        self._slots = all_slots[order]
+
+
 class _Base:
     name = "base"
 
@@ -153,9 +213,7 @@ class _Base:
             store.num_samples, num_epochs, seed
         )
         # per-node data buffers (actual arrays) when materializing batches.
-        self._data_buf: list[dict[int, np.ndarray]] = [
-            {} for _ in range(num_nodes)
-        ]
+        self._data_buf: list[_DataMirror | None] = [None] * num_nodes
 
     # subclasses implement __iter__ yielding StepBatch.
 
@@ -188,45 +246,117 @@ class _Base:
                     latency_s: float = 5e-5) -> float:
         return k * (latency_s + self.store.sample_bytes / interconnect_bps)
 
-    def _fetch(self, node: int, ids, chunks) -> np.ndarray | None:
+    def _fetch(self, node: int, ids, chunks, delta=None) -> np.ndarray | None:
         """Materialize one node's batch: buffer hits from RAM, misses via reads."""
         if not self.collect_data:
             return None
         t0 = time.perf_counter()
-        buf = self._data_buf[node]
-        fetched: dict[int, np.ndarray] = {}
-        for c in chunks:
-            arr = self.store.read_range(c.start, c.stop)
-            for j, s in enumerate(range(c.start, c.stop)):
-                fetched[s] = arr[j]
-        rows = []
-        for s in ids:
-            s = int(s)
-            if s in fetched:
-                rows.append(fetched[s])
-            elif s in buf:
-                rows.append(buf[s])
-            else:  # remote fetch / uncovered: direct read
-                rows.append(self.store.read_one(s))
+        arrays = self.store.read_ranges([(c.start, c.stop) for c in chunks])
+        out = self._assemble(node, ids, chunks, arrays, delta)
         self.report.wall_time_s += time.perf_counter() - t0
-        self._sync_data_buffer(node, fetched)
-        out = (
-            np.stack(rows)
-            if rows
-            else np.empty((0,) + self.store.sample_shape, self.store.dtype)
-        )
         return out
 
-    def _sync_data_buffer(self, node: int, fetched: dict[int, np.ndarray]) -> None:
-        """Mirror the logical buffer: keep arrays only for resident ids."""
+    def _assemble(self, node: int, ids, chunks, chunk_arrays, delta=None) -> np.ndarray:
+        """Gather one node's batch rows from pre-read chunks + the buffer mirror.
+
+        Vectorized: misses come out of the concatenated chunk arrays via
+        ``np.searchsorted``, hits out of the :class:`_DataMirror` arena, and
+        anything uncovered (e.g. NoPFS remote-buffer fetches) falls back to a
+        coalesced scattered read.
+        """
+        ids = np.asarray(ids, np.int64)
+        shape, dtype = self.store.sample_shape, self.store.dtype
+        if chunks:
+            fetched_ids = np.concatenate(
+                [np.arange(c.start, c.stop, dtype=np.int64) for c in chunks]
+            )
+            fetched_data = (
+                chunk_arrays[0]
+                if len(chunk_arrays) == 1
+                else np.concatenate(chunk_arrays)
+            )
+            if fetched_ids.size > 1 and not (np.diff(fetched_ids) > 0).all():
+                order = np.argsort(fetched_ids, kind="stable")
+                fetched_ids, fetched_data = fetched_ids[order], fetched_data[order]
+        else:
+            fetched_ids = np.empty(0, np.int64)
+            fetched_data = np.empty((0,) + shape, dtype)
+        out = np.empty((ids.size,) + shape, dtype)
+        need = np.ones(ids.size, bool)
+        if fetched_ids.size and ids.size:
+            pos = np.minimum(np.searchsorted(fetched_ids, ids), fetched_ids.size - 1)
+            from_chunks = fetched_ids[pos] == ids
+            out[from_chunks] = fetched_data[pos[from_chunks]]
+            need &= ~from_chunks
+        if need.any():
+            mirror = self._mirror(node)
+            slots = mirror.lookup(ids[need])
+            found = slots >= 0
+            if found.any():
+                idx = np.flatnonzero(need)[found]
+                out[idx] = mirror.rows(slots[found])
+                need[idx] = False
+        if need.any():  # remote fetch / uncovered: coalesced direct reads
+            out[need] = self.store.read_scattered(ids[need])
+        self._sync_data_buffer(node, fetched_ids, fetched_data, delta)
+        return out
+
+    def _mirror(self, node: int) -> _DataMirror:
+        if self._data_buf[node] is None:
+            self._data_buf[node] = _DataMirror(
+                self.buffer_size, self.store.sample_shape, self.store.dtype
+            )
+        return self._data_buf[node]
+
+    def _sync_data_buffer(
+        self, node: int, fetched_ids: np.ndarray, fetched_data: np.ndarray, delta=None
+    ) -> None:
+        """Mirror the logical buffer: keep rows only for resident ids.
+
+        When ``delta`` is ``(admissions, evictions)`` (the SOLAR plan records
+        them), the mirror is updated from the deltas alone; otherwise the
+        resident set is re-derived from :meth:`_resident_ids`.
+        """
+        if delta is not None:
+            admissions, evictions = delta
+            mirror = self._mirror(node)
+            mirror.evict(evictions)
+            admissions = np.asarray(admissions, np.int64)
+            if admissions.size:
+                pos = np.minimum(
+                    np.searchsorted(fetched_ids, admissions),
+                    max(fetched_ids.size - 1, 0),
+                )
+                covered = (
+                    fetched_ids[pos] == admissions
+                    if fetched_ids.size
+                    else np.zeros(admissions.size, bool)
+                )
+                rows = np.empty(
+                    (admissions.size,) + self.store.sample_shape, self.store.dtype
+                )
+                rows[covered] = fetched_data[pos[covered]]
+                if not covered.all():  # defensive: plan admissions ⊆ chunks
+                    rows[~covered] = self.store.read_scattered(admissions[~covered])
+                mirror.admit(admissions, rows)
+            return
         resident = self._resident_ids(node)
-        buf = self._data_buf[node]
-        for s, arr in fetched.items():
-            if s in resident:
-                buf[s] = arr
-        for s in list(buf):
-            if s not in resident:
-                del buf[s]
+        if not resident and self._data_buf[node] is None:
+            return
+        mirror = self._mirror(node)
+        res = np.fromiter(resident, np.int64, count=len(resident))
+        res.sort()
+        if mirror.ids.size:
+            gone = (
+                mirror.ids[~np.isin(mirror.ids, res, assume_unique=True)]
+                if res.size
+                else mirror.ids
+            )
+            mirror.evict(gone)
+        if fetched_ids.size and res.size:
+            keep = np.isin(fetched_ids, res, assume_unique=True)
+            if keep.any():
+                mirror.admit(fetched_ids[keep], fetched_data[keep])
 
     def _resident_ids(self, node: int) -> set:
         return set()
@@ -461,40 +591,75 @@ class SolarLoader(_Base):
             self.store.num_samples, self.num_epochs, perms=self.perms
         )
         self.schedule_build_s = time.perf_counter() - t0
-        self._resident: list[set] = [set() for _ in range(self.num_nodes)]
-
-    def _resident_ids(self, node):
-        return self._resident[node]
+        # Buffer occupancy per node, maintained from the plan's recorded
+        # admission/eviction deltas — no per-step resident-set rebuild.
+        self._occupancy = [0] * self.num_nodes
 
     @property
     def capacity(self) -> int:
         return self.schedule.capacity
 
-    def __iter__(self):
+    def reset_execution(self) -> None:
+        """Forget buffer state so the schedule can be replayed from step 0."""
+        self._occupancy = [0] * self.num_nodes
+        self._data_buf = [None] * self.num_nodes
+
+    def plan_steps(self):
+        """Walk the schedule in execution order, yielding (EpochPlan, StepPlan).
+
+        This is the surface the :class:`repro.data.prefetch.PrefetchExecutor`
+        pipelines over: every future ChunkRead is visible here.  Each walk
+        replays the Belady simulation from an empty buffer.
+        """
+        self.reset_execution()
         for ep in self.schedule.epochs:
             for sp in ep.steps:
-                chunks = [n.chunks for n in sp.nodes]
-                self._account(
-                    chunks,
-                    [n.num_misses for n in sp.nodes],
-                    [n.num_real for n in sp.nodes],
-                    [n.num_hits for n in sp.nodes],
+                yield ep, sp
+
+    def execute_step(self, ep, sp, chunk_arrays=None) -> StepBatch:
+        """Account + assemble one planned step into a :class:`StepBatch`.
+
+        ``chunk_arrays`` optionally supplies per-node pre-read chunk data (the
+        async pipeline reads them concurrently ahead of time); when ``None``
+        and ``collect_data`` is set, chunk reads are issued synchronously.
+        The plan's recorded admissions/evictions are replayed as deltas so the
+        data buffer mirrors the Belady simulation exactly.
+        """
+        chunks = [n.chunks for n in sp.nodes]
+        self._account(
+            chunks,
+            [n.num_misses for n in sp.nodes],
+            [n.num_real for n in sp.nodes],
+            [n.num_hits for n in sp.nodes],
+        )
+        data = [] if self.collect_data else None
+        for n, npn in enumerate(sp.nodes):
+            self._occupancy[n] += npn.admissions.size - npn.evictions.size
+            assert self._occupancy[n] <= self.buffer_size
+            if not self.collect_data:
+                continue
+            delta = (npn.admissions, npn.evictions)
+            if chunk_arrays is None:
+                data.append(self._fetch(n, npn.sample_ids, npn.chunks, delta))
+            else:
+                t0 = time.perf_counter()
+                data.append(
+                    self._assemble(
+                        n, npn.sample_ids, npn.chunks, chunk_arrays[n], delta
+                    )
                 )
-                data = []
-                for n, npn in enumerate(sp.nodes):
-                    # Replay the plan's recorded buffer transitions so the
-                    # data buffer mirrors the Belady simulation exactly.
-                    self._resident[n] |= {int(s) for s in npn.admissions.tolist()}
-                    self._resident[n] -= {int(s) for s in npn.evictions.tolist()}
-                    assert len(self._resident[n]) <= self.buffer_size
-                    data.append(self._fetch(n, npn.sample_ids, npn.chunks))
-                yield StepBatch(
-                    ep.epoch_id,
-                    sp.step,
-                    [n.sample_ids for n in sp.nodes],
-                    data if self.collect_data else None,
-                    [n.hit_mask for n in sp.nodes],
-                )
+                self.report.wall_time_s += time.perf_counter() - t0
+        return StepBatch(
+            ep.epoch_id,
+            sp.step,
+            [n.sample_ids for n in sp.nodes],
+            data,
+            [n.hit_mask for n in sp.nodes],
+        )
+
+    def __iter__(self):
+        for ep, sp in self.plan_steps():
+            yield self.execute_step(ep, sp)
 
 
 _LOADERS = {
@@ -502,8 +667,24 @@ _LOADERS = {
 }
 
 
-def make_loader(name: str, *args, **kwargs) -> _Base:
+def make_loader(
+    name: str,
+    *args,
+    prefetch_depth: int | None = None,
+    num_workers: int | None = None,
+    **kwargs,
+):
+    """Build a loader; with ``prefetch_depth`` set, wrap it in the async
+    :class:`~repro.data.prefetch.PrefetchExecutor` (``num_workers`` I/O
+    threads, ``prefetch_depth`` steps of read-ahead)."""
     try:
-        return _LOADERS[name](*args, **kwargs)
+        loader = _LOADERS[name](*args, **kwargs)
     except KeyError:
         raise ValueError(f"unknown loader {name!r}; have {sorted(_LOADERS)}") from None
+    if prefetch_depth:
+        from repro.data.prefetch import PrefetchExecutor
+
+        return PrefetchExecutor(
+            loader, depth=prefetch_depth, num_workers=num_workers or 4
+        )
+    return loader

@@ -7,17 +7,29 @@ preserved exactly:
 
   * a *ranged* read of samples ``[start, stop)`` is a single seek + one
     sequential read (this is what makes aggregated chunk loading win), and
-  * a scattered read of k samples costs k seeks + k small reads.
+  * a scattered read of k samples costs one pread per consecutive run of
+    ids (adjacent ids are coalesced into ranged reads).
 
 Every read is a real ``pread`` against the filesystem; benchmarks additionally
 price the same access trace under :class:`repro.core.costmodel.PFSCostModel`
 to model a remote Lustre/GPFS where the per-call cost dominates.
+
+Concurrency: reads are safe from any number of threads.  Each in-flight read
+checks a private file descriptor out of a pool (growing it on demand, so fd
+count tracks *peak concurrency*, not thread count), preads, and returns it —
+parallel chunk fetches from the prefetch executor never serialize behind a
+lock; only the counter updates share a short critical section.
+``simulated_latency_s`` injects a per-pread sleep to emulate remote-PFS call
+latency in benchmarks (``time.sleep`` releases the GIL, so injected latency
+overlaps across threads exactly like real PFS round-trips would).
 """
 from __future__ import annotations
 
 import json
 import os
+import queue
 import threading
+import time
 
 import numpy as np
 
@@ -29,7 +41,7 @@ _HEADER_SUFFIX = ".header.json"
 class ChunkStore:
     """Fixed-shape sample array stored contiguously in one file."""
 
-    def __init__(self, path: str):
+    def __init__(self, path: str, simulated_latency_s: float = 0.0):
         self.path = path
         with open(path + _HEADER_SUFFIX) as f:
             hdr = json.load(f)
@@ -39,13 +51,19 @@ class ChunkStore:
         self.sample_bytes = int(
             self.dtype.itemsize * int(np.prod(self.sample_shape, dtype=np.int64))
         )
-        self._fd = os.open(path, os.O_RDONLY)
-        self._lock = threading.Lock()
+        #: per-pread sleep emulating remote-PFS call latency (benchmarks only).
+        self.simulated_latency_s = float(simulated_latency_s)
+        self._fd_pool: queue.SimpleQueue = queue.SimpleQueue()
+        self._fds: list[int] = []       # every fd ever opened, for close()
+        self._fd_lock = threading.Lock()
+        self._closed = False
+        self._stats_lock = threading.Lock()
         #: access trace: list of (sample_offset, run_length) — consumed by the
         #: cost model and the access-pattern benchmark; cheap to record.
         self.trace: list[tuple[int, int]] = []
         self.bytes_read = 0
         self.read_calls = 0
+        self._release_fd(self._open_fd())  # fail on a bad path right here
 
     # -- construction --------------------------------------------------------
 
@@ -102,6 +120,45 @@ class ChunkStore:
                     arr.tofile(f)
         return cls(path)
 
+    # -- fd pool --------------------------------------------------------------
+
+    def _open_fd(self) -> int:
+        with self._fd_lock:
+            if self._closed:
+                raise ValueError(f"store {self.path!r} is closed")
+            fd = os.open(self.path, os.O_RDONLY)
+            self._fds.append(fd)
+        return fd
+
+    def _acquire_fd(self) -> int:
+        """Check a descriptor out for one read (grow the pool on demand)."""
+        if self._closed:
+            raise ValueError(f"store {self.path!r} is closed")
+        try:
+            return self._fd_pool.get_nowait()
+        except queue.Empty:
+            return self._open_fd()
+
+    def _release_fd(self, fd: int) -> None:
+        # close() only tears down *pooled* descriptors; one that was in
+        # flight when close() ran is retired here instead of re-pooled, so a
+        # concurrent reader never preads a descriptor closed under it.
+        if self._closed:
+            self._close_fd(fd)
+        else:
+            self._fd_pool.put(fd)
+
+    def _close_fd(self, fd: int) -> None:
+        with self._fd_lock:
+            if fd in self._fds:
+                self._fds.remove(fd)
+            else:  # already retired by a racing close()
+                return
+        try:
+            os.close(fd)
+        except OSError:  # pragma: no cover
+            pass
+
     # -- reads ----------------------------------------------------------------
 
     def read_range(self, start: int, stop: int) -> np.ndarray:
@@ -109,8 +166,14 @@ class ChunkStore:
         if not 0 <= start < stop <= self.num_samples:
             raise IndexError((start, stop, self.num_samples))
         nbytes = (stop - start) * self.sample_bytes
-        with self._lock:
-            buf = os.pread(self._fd, nbytes, start * self.sample_bytes)
+        fd = self._acquire_fd()
+        try:
+            if self.simulated_latency_s > 0.0:
+                time.sleep(self.simulated_latency_s)
+            buf = os.pread(fd, nbytes, start * self.sample_bytes)
+        finally:
+            self._release_fd(fd)
+        with self._stats_lock:
             self.trace.append((start, stop - start))
             self.bytes_read += nbytes
             self.read_calls += 1
@@ -120,21 +183,66 @@ class ChunkStore:
     def read_one(self, idx: int) -> np.ndarray:
         return self.read_range(idx, idx + 1)[0]
 
+    def read_ranges(self, ranges) -> list[np.ndarray]:
+        """Ranged reads with adjacency coalescing.
+
+        ``ranges`` is a sequence of ``(start, stop)`` pairs.  Consecutive pairs
+        whose spans touch (``prev_stop == next_start``) are merged into one
+        pread and split back afterwards, so a run of adjacent
+        :class:`~repro.core.plan.ChunkRead`\\ s costs a single PFS call.
+        Returns one array per input range, in input order.
+        """
+        ranges = [(int(a), int(b)) for a, b in ranges]
+        out: list[np.ndarray | None] = [None] * len(ranges)
+        i = 0
+        while i < len(ranges):
+            j = i
+            while j + 1 < len(ranges) and ranges[j + 1][0] == ranges[j][1]:
+                j += 1
+            lo, hi = ranges[i][0], ranges[j][1]
+            arr = self.read_range(lo, hi)
+            for k in range(i, j + 1):
+                a, b = ranges[k]
+                out[k] = arr[a - lo : b - lo]
+            i = j + 1
+        return out  # type: ignore[return-value]
+
     def read_scattered(self, ids) -> np.ndarray:
-        """k single-sample reads (the random-access baseline pattern)."""
-        return np.stack([self.read_one(int(i)) for i in ids]) if len(ids) else (
-            np.empty((0,) + self.sample_shape, self.dtype)
-        )
+        """Scattered read of k samples, coalescing consecutive ids.
+
+        Ids are sorted, runs of adjacent ids become single ranged preads, and
+        rows come back in the caller's original order (duplicates allowed).
+        """
+        ids = np.asarray(ids, dtype=np.int64)
+        if ids.size == 0:
+            return np.empty((0,) + self.sample_shape, self.dtype)
+        order = np.argsort(ids, kind="stable")
+        sids = ids[order]
+        breaks = np.flatnonzero(np.diff(sids) > 1) + 1
+        starts = np.concatenate([[0], breaks])
+        ends = np.concatenate([breaks, [sids.size]])
+        out = np.empty((ids.size,) + self.sample_shape, self.dtype)
+        for a, b in zip(starts, ends):
+            lo, hi = int(sids[a]), int(sids[b - 1]) + 1
+            arr = self.read_range(lo, hi)
+            out[order[a:b]] = arr[sids[a:b] - lo]
+        return out
 
     def reset_counters(self) -> None:
-        self.trace.clear()
-        self.bytes_read = 0
-        self.read_calls = 0
+        with self._stats_lock:
+            self.trace.clear()
+            self.bytes_read = 0
+            self.read_calls = 0
 
     def close(self) -> None:
-        if self._fd >= 0:
-            os.close(self._fd)
-            self._fd = -1
+        with self._fd_lock:
+            self._closed = True
+        while True:  # drain + close idle descriptors; in-flight ones retire
+            try:     # themselves in _release_fd once their pread finishes
+                fd = self._fd_pool.get_nowait()
+            except queue.Empty:
+                break
+            self._close_fd(fd)
 
     def __del__(self):  # pragma: no cover - best effort
         try:

@@ -158,7 +158,10 @@ def constrain(x, *logical_spec):
     these constraints the 0.5B-vocab CE graph all-gathered the whole global
     batch per device (EXPERIMENTS.md §Perf, iteration 0).
     """
-    mesh = jax.sharding.get_abstract_mesh()
+    # jax >= 0.5 exposes the ambient abstract mesh; older versions only have
+    # the legacy thread-resources context, handled by the fallback below.
+    get_abstract_mesh = getattr(jax.sharding, "get_abstract_mesh", None)
+    mesh = get_abstract_mesh() if get_abstract_mesh is not None else None
     if mesh is None or not mesh.axis_names:
         # fall back to the legacy `with mesh:` context (what pjit resolves
         # bare PartitionSpecs against).

@@ -39,6 +39,10 @@ def main():
     ap.add_argument("--buffer", type=int, default=512)
     ap.add_argument("--epochs", type=int, default=4)
     ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--prefetch-depth", type=int, default=2,
+                    help="pipeline read-ahead in steps (0 = synchronous)")
+    ap.add_argument("--num-workers", type=int, default=4,
+                    help="I/O threads for schedule-driven chunk reads")
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--checkpoint-dir", default=None)
     ap.add_argument("--checkpoint-every", type=int, default=25)
@@ -60,6 +64,7 @@ def main():
     loader = make_loader(
         args.loader, store, args.nodes, args.local_batch, args.epochs,
         args.buffer, 0, collect_data=True,
+        prefetch_depth=args.prefetch_depth, num_workers=args.num_workers,
     )
     capacity = getattr(loader, "capacity", args.local_batch + 4)
 
@@ -98,6 +103,7 @@ def main():
         loader=loader, step_fn=step, state=state, make_batch=make_batch,
         checkpoint_dir=args.checkpoint_dir,
         checkpoint_every=args.checkpoint_every, skip_steps=skip,
+        prefetch_depth=args.prefetch_depth, num_workers=args.num_workers,
     )
     trainer.run(max_steps=args.steps)
     for rec in trainer.metrics_history[:: max(len(trainer.metrics_history) // 10, 1)]:

@@ -5,9 +5,10 @@ built around SOLAR's contract:
 
   * the loader yields uneven per-node batches; ``StepBatch.to_global`` pads
     to the fixed SPMD capacity with zero-weight rows (gradients unchanged),
-  * a background prefetch thread keeps ``prefetch_depth`` step batches ready
-    so PFS reads overlap the previous step's compute (the paper's Fig. 6
-    overlap, host-side),
+  * the :class:`~repro.data.prefetch.PrefetchExecutor` keeps
+    ``prefetch_depth`` step batches ready — schedule-driven parallel chunk
+    reads for SOLAR, background iteration for the baselines — so PFS reads
+    overlap the previous step's compute (the paper's Fig. 6 overlap),
   * the SOLAR schedule position is part of the checkpoint: restart resumes
     the exact global-batch sequence (fault tolerance / elasticity),
   * per-step wall times are tracked separately for load vs compute — the
@@ -15,8 +16,6 @@ built around SOLAR's contract:
 """
 from __future__ import annotations
 
-import queue
-import threading
 import time
 
 import jax
@@ -24,35 +23,9 @@ import numpy as np
 
 from repro.checkpoint.checkpoint import AsyncCheckpointer, latest_checkpoint, restore_checkpoint
 from repro.data.loaders import StepBatch
+from repro.data.prefetch import PrefetchExecutor
 
 __all__ = ["Trainer"]
-
-
-class _Prefetcher:
-    """Background thread pulling loader batches ahead of the consumer."""
-
-    def __init__(self, iterator, depth: int = 2):
-        self._q: queue.Queue = queue.Queue(maxsize=depth)
-        self._it = iterator
-        self._done = object()
-        self._thread = threading.Thread(target=self._run, daemon=True)
-        self._thread.start()
-
-    def _run(self):
-        try:
-            for item in self._it:
-                self._q.put(item)
-        finally:
-            self._q.put(self._done)
-
-    def __iter__(self):
-        return self
-
-    def __next__(self):
-        item = self._q.get()
-        if item is self._done:
-            raise StopIteration
-        return item
 
 
 class Trainer:
@@ -66,6 +39,7 @@ class Trainer:
         checkpoint_dir: str | None = None,
         checkpoint_every: int = 0,
         prefetch_depth: int = 2,
+        num_workers: int = 4,       # I/O threads for schedule-driven prefetch
         skip_steps: int = 0,        # resume: skip already-trained steps
     ):
         self.loader = loader
@@ -75,6 +49,7 @@ class Trainer:
         self.ckpt = AsyncCheckpointer(checkpoint_dir) if checkpoint_dir else None
         self.checkpoint_every = checkpoint_every
         self.prefetch_depth = prefetch_depth
+        self.num_workers = num_workers
         self.skip_steps = skip_steps
         self.metrics_history: list[dict] = []
         self.load_time_s = 0.0
@@ -94,34 +69,47 @@ class Trainer:
     # -- main loop -------------------------------------------------------------
 
     def run(self, max_steps: int | None = None):
-        it = _Prefetcher(iter(self.loader), self.prefetch_depth)
+        if isinstance(self.loader, PrefetchExecutor):
+            executor = self.loader
+        elif self.prefetch_depth > 0:
+            executor = PrefetchExecutor(
+                self.loader,
+                depth=self.prefetch_depth,
+                num_workers=self.num_workers,
+            )
+        else:  # prefetch_depth=0: fully synchronous loading
+            executor = None
         global_step = 0
-        for sb in it:
-            if global_step < self.skip_steps:
+        try:
+            for sb in executor if executor is not None else self.loader:
+                if global_step < self.skip_steps:
+                    global_step += 1
+                    continue
+                t0 = time.perf_counter()
+                batch = self.make_batch(sb)
+                t1 = time.perf_counter()
+                self.state, metrics = self.step_fn(self.state, batch)
+                jax.block_until_ready(metrics["loss"])
+                t2 = time.perf_counter()
+                self.load_time_s += t1 - t0
+                self.compute_time_s += t2 - t1
+                rec = {k: float(np.asarray(v)) for k, v in metrics.items()}
+                rec["step"] = global_step
+                self.metrics_history.append(rec)
                 global_step += 1
-                continue
-            t0 = time.perf_counter()
-            batch = self.make_batch(sb)
-            t1 = time.perf_counter()
-            self.state, metrics = self.step_fn(self.state, batch)
-            jax.block_until_ready(metrics["loss"])
-            t2 = time.perf_counter()
-            self.load_time_s += t1 - t0
-            self.compute_time_s += t2 - t1
-            rec = {k: float(np.asarray(v)) for k, v in metrics.items()}
-            rec["step"] = global_step
-            self.metrics_history.append(rec)
-            global_step += 1
-            if (
-                self.ckpt
-                and self.checkpoint_every
-                and global_step % self.checkpoint_every == 0
-            ):
-                self.ckpt.save(
-                    global_step, self.state, extra={"solar_step": global_step}
-                )
-            if max_steps is not None and global_step >= max_steps:
-                break
+                if (
+                    self.ckpt
+                    and self.checkpoint_every
+                    and global_step % self.checkpoint_every == 0
+                ):
+                    self.ckpt.save(
+                        global_step, self.state, extra={"solar_step": global_step}
+                    )
+                if max_steps is not None and global_step >= max_steps:
+                    break
+        finally:
+            if executor is not None:
+                executor.close()
         if self.ckpt:
             self.ckpt.wait()
         return self.state

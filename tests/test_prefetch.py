@@ -1,0 +1,206 @@
+"""Prefetch pipeline correctness: the async executor must be invisible.
+
+Bit-identical batches, identical accounting, clean shutdown (no leaked
+threads), and the lock-free parallel/coalescing read paths of ChunkStore.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.data import ChunkStore, PrefetchExecutor, create_synthetic_store, make_loader
+
+ALL = ["naive", "lru", "nopfs", "deepio", "solar"]
+
+
+@pytest.fixture(scope="module")
+def store_path(tmp_path_factory):
+    p = tmp_path_factory.mktemp("pf") / "ds.bin"
+    create_synthetic_store(
+        str(p), num_samples=512, sample_shape=(8,), dtype=np.float32, kind="arange"
+    )
+    return str(p)
+
+
+def _alive_extra(before):
+    return [t for t in threading.enumerate() if t not in before and t.is_alive()]
+
+
+# ---------------------------------------------------------------------------
+# Executor output == synchronous iteration
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_async_bit_identical(store_path, name):
+    s1, s2 = ChunkStore(store_path), ChunkStore(store_path)
+    ld_sync = make_loader(name, s1, 4, 8, 3, 64, 0, collect_data=True)
+    ld_async = make_loader(name, s2, 4, 8, 3, 64, 0, collect_data=True)
+    with PrefetchExecutor(ld_async, depth=3, num_workers=4) as ex:
+        batches = list(zip(list(ld_sync), list(ex)))
+    assert batches, name
+    for a, b in batches:
+        assert a.epoch == b.epoch and a.step == b.step
+        for ia, ib, da, db, ma, mb in zip(
+            a.node_ids, b.node_ids, a.node_data, b.node_data,
+            a.hit_masks, b.hit_masks,
+        ):
+            assert np.array_equal(ia, ib)
+            assert np.array_equal(ma, mb)
+            assert np.array_equal(da, db)
+    ra, rb = ld_sync.report, ld_async.report
+    assert ra.pfs_counts == rb.pfs_counts        # numPFS accounting
+    assert ra.miss_counts == rb.miss_counts
+    assert ra.batch_sizes == rb.batch_sizes
+    assert ra.remote_counts == rb.remote_counts
+    assert ra.total_hits == rb.total_hits
+    assert ra.total_samples == rb.total_samples
+    assert ra.modeled_time_s == pytest.approx(rb.modeled_time_s)
+    # identical physical read pattern too (both coalesce the same way)
+    assert s1.read_calls == s2.read_calls
+    assert s1.bytes_read == s2.bytes_read
+
+
+def test_async_counting_only(store_path):
+    """collect_data=False: executor still yields plans + accounting."""
+    ld = make_loader("solar", ChunkStore(store_path), 4, 8, 2, 64, 0)
+    with PrefetchExecutor(ld, depth=2) as ex:
+        n = sum(1 for sb in ex if sb.node_data is None)
+    assert n == 2 * (512 // 32)
+    assert ld.report.total_samples == n * 32
+
+
+def test_solar_executor_uses_schedule_mode(store_path):
+    ld = make_loader("solar", ChunkStore(store_path), 4, 8, 1, 64, 0)
+    assert PrefetchExecutor(ld).mode == "schedule"
+    ld2 = make_loader("naive", ChunkStore(store_path), 4, 8, 1, 64, 0)
+    assert PrefetchExecutor(ld2).mode == "iterator"
+
+
+def test_make_loader_prefetch_knobs(store_path):
+    ex = make_loader(
+        "solar", ChunkStore(store_path), 4, 8, 1, 64, 0,
+        collect_data=True, prefetch_depth=2, num_workers=2,
+    )
+    assert isinstance(ex, PrefetchExecutor)
+    assert ex.capacity == ex.loader.capacity  # attribute proxying
+    with ex:
+        steps = sum(1 for _ in ex)
+    assert steps == 512 // 32
+
+
+# ---------------------------------------------------------------------------
+# Shutdown / cancellation
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ["solar", "naive"])
+def test_cancel_mid_epoch_leaks_no_threads(store_path, name):
+    before = set(threading.enumerate())
+    ld = make_loader(name, ChunkStore(store_path), 4, 8, 3, 64, 0, collect_data=True)
+    ex = PrefetchExecutor(ld, depth=2, num_workers=4)
+    it = iter(ex)
+    for _ in range(3):
+        next(it)
+    ex.close()
+    assert _alive_extra(before) == []
+    # closing again is a no-op; a fresh iteration still works after close
+    ex.close()
+    first = next(iter(ex))
+    assert first is not None
+    ex.close()
+    assert _alive_extra(before) == []
+
+
+def test_stale_iterator_finalization_does_not_cancel_new_run(store_path):
+    """Rebinding `it = iter(ex)` finalizes the old generator *after* the new
+    run started; that cleanup must only tear down its own run."""
+    ld = make_loader("solar", ChunkStore(store_path), 4, 8, 2, 64, 0, collect_data=True)
+    with PrefetchExecutor(ld, depth=2) as ex:
+        it = iter(ex)
+        next(it)
+        it = iter(ex)  # old generator GC'd here, new run must survive
+        steps = sum(1 for _ in it)
+    assert steps == 2 * (512 // 32)
+
+
+def test_abandoned_iterator_cleans_up(store_path):
+    before = set(threading.enumerate())
+    ld = make_loader("solar", ChunkStore(store_path), 4, 8, 2, 64, 0, collect_data=True)
+    with PrefetchExecutor(ld, depth=2) as ex:
+        for i, _ in enumerate(ex):
+            if i == 2:
+                break  # generator finalization must close the pipeline
+    assert _alive_extra(before) == []
+
+
+def test_producer_exception_propagates(store_path):
+    class _Boom(Exception):
+        pass
+
+    class _BadLoader:
+        collect_data = False
+
+        def __iter__(self):
+            yield "one"
+            raise _Boom("loader died")
+
+    ex = PrefetchExecutor(_BadLoader(), depth=2)
+    it = iter(ex)
+    assert next(it) == "one"
+    with pytest.raises(_Boom):
+        for _ in it:
+            pass
+    ex.close()
+
+
+# ---------------------------------------------------------------------------
+# ChunkStore parallel + coalescing read paths
+# ---------------------------------------------------------------------------
+
+
+def test_read_ranges_coalesces_adjacent(store_path):
+    s = ChunkStore(store_path)
+    s.reset_counters()
+    out = s.read_ranges([(0, 4), (4, 8), (10, 12)])
+    assert s.read_calls == 2                       # [0,8) merged, [10,12) alone
+    assert [a.shape[0] for a in out] == [4, 4, 2]
+    assert np.array_equal(out[1][:, 0].astype(np.int64), np.arange(4, 8))
+    assert np.array_equal(out[2][:, 0].astype(np.int64), np.arange(10, 12))
+
+
+def test_read_scattered_coalesces_runs(store_path):
+    s = ChunkStore(store_path)
+    s.reset_counters()
+    ids = [5, 1, 2, 3, 9, 9]
+    out = s.read_scattered(ids)
+    assert s.read_calls == 3                       # runs [1,4), [5,6), [9,10)
+    assert np.array_equal(out[:, 0].astype(np.int64), np.asarray(ids))
+
+
+def test_parallel_reads_are_correct_and_counted(store_path):
+    s = ChunkStore(store_path)
+    s.reset_counters()
+    errors = []
+
+    def hammer(seed):
+        rng = np.random.default_rng(seed)
+        for _ in range(50):
+            i = int(rng.integers(0, 500))
+            arr = s.read_range(i, i + 8)
+            if not np.array_equal(
+                arr[:, 0].astype(np.int64), np.arange(i, i + 8)
+            ):
+                errors.append(i)
+
+    threads = [threading.Thread(target=hammer, args=(t,)) for t in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert errors == []
+    assert s.read_calls == 8 * 50
+    assert s.bytes_read == 8 * 50 * 8 * s.sample_bytes
+    s.close()
+    with pytest.raises(ValueError):
+        s.read_range(0, 1)  # reads after close must fail loudly

@@ -1,6 +1,10 @@
 """SOLAR core invariants (paper §4) — unit + property tests."""
 import numpy as np
 import pytest
+
+# hypothesis is an optional dev dependency (requirements-dev.txt); skip the
+# property tests cleanly on machines without it instead of failing collection.
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (

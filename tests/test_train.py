@@ -62,7 +62,12 @@ def test_node_sample_remap_invariance():
                                    lambda p, b: lm.train_loss(p, b, CFG)))
     s1, _ = step(init_train_state(params, OPT), batch)
     s2, _ = step(init_train_state(params, OPT), shuffled)
-    assert _max_delta(s1["params"], s2["params"]) < 1e-6
+    # float32 reduction order differs under permutation: on jax 0.4.37/CPU
+    # the XLA sum ordering yields ~1.6e-6 max delta for a bit-invariant
+    # update, so 1e-6 was unattainable.  5e-6 still bounds the divergence to
+    # reassociation noise (weights are O(1e-1), lr 1e-3); a genuine remap
+    # regression would blow far past it within a few steps.
+    assert _max_delta(s1["params"], s2["params"]) < 5e-6
 
 
 def test_grad_accum_invariance():
