@@ -1,0 +1,184 @@
+"""Storage-backend shoot-out (``BENCH_backends.json``).
+
+Two measurements on a >= 64 MiB store (16384 x 4 KiB float32 samples):
+
+  * **loader sweep** — the same SOLAR schedule executed with real reads
+    against every available backend (binary, memory, sharded, hdf5).  Batch
+    digests are verified identical to the binary reference first, so the
+    walls compare equal work; numPFS / physical read calls / bytes expose
+    each layout's access anatomy (e.g. HDF5 chunk waste, sharded
+    boundary splits).
+  * **hdf5 access ablation** — the paper's §5.4 claim in isolation: the
+    epoch-0 chunk-read plan issued through chunk-aligned *aggregated*
+    ``read_ranges`` vs naive per-sample dataset access, under an injected
+    per-call latency (``simulated_latency_s``) emulating a remote
+    Lustre/GPFS where the PFS round-trip dominates small reads.  (On the
+    local page cache bandwidth dominates instead, so chunk-waste bytes cost
+    more than the saved calls and the comparison is meaningless — the same
+    reason ``benchmarks/pipeline.py`` injects latency.)  Aggregation must
+    win; both paths are digest-verified to deliver identical payloads.
+
+    PYTHONPATH=src python -m benchmarks.backends
+    PYTHONPATH=src python -m benchmarks.run --only backends --json-out BENCH_backends.json
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, get_store
+from repro.data import LoaderSpec, build_pipeline
+from repro.data.backends import HAVE_H5PY, backend_names
+
+
+def _digest(batches) -> str:
+    h = hashlib.sha256()
+    for sb in batches:
+        for ids, arr in zip(sb.node_ids, sb.node_data):
+            h.update(np.ascontiguousarray(ids).tobytes())
+            h.update(np.ascontiguousarray(arr).tobytes())
+    return h.hexdigest()[:16]
+
+
+def _epoch_chunk_plan(store, nodes, local_batch, buffer) -> list[tuple[int, int]]:
+    """Epoch-0 ChunkRead spans of the SOLAR schedule, in execution order."""
+    ld = build_pipeline(
+        LoaderSpec(loader="solar", store=store, num_nodes=nodes,
+                   local_batch=local_batch, num_epochs=1, buffer_size=buffer)
+    )
+    plan = []
+    for _, sp in ld.plan_steps():
+        for npn in sp.nodes:
+            plan.extend((c.start, c.stop) for c in npn.chunks)
+    return plan
+
+
+def run(
+    num_samples: int = 16384,
+    sample_floats: int = 1024,       # 4 KiB/sample -> 64 MiB store
+    nodes: int = 4,
+    local_batch: int = 128,      # dense per-step misses -> chunkable runs,
+    epochs: int = 1,             # the regime aggregation is designed for
+    buffer: int = 2048,
+    latency_s: float = 5e-4,
+    json_out: str | None = None,
+) -> dict:
+    # The HDF5 layout is designed *for* the access pattern (paper §5.4): the
+    # chunk height matches the scheduler's aggregated-read granularity
+    # (SolarConfig.max_chunk ~ 15 samples), so an aligned window covers one
+    # plan read with minimal waste instead of a megabyte-scale default chunk.
+    layout_cfg = {
+        "hdf5": dict(tag="c16", create_options={"chunk_samples": 16}),
+        # actually multi-file: exercise shard-boundary splits + per-shard
+        # fd pools, not a single shard degenerating to the binary layout.
+        "sharded": dict(tag="s8", create_options={"num_shards": 8}),
+    }
+
+    def _get(backend):
+        return get_store(num_samples=num_samples, sample_floats=sample_floats,
+                         backend=backend, **layout_cfg.get(backend, {}))
+
+    backends = [b for b in backend_names() if b != "hdf5" or HAVE_H5PY]
+    results: dict = {
+        "store_bytes": num_samples * sample_floats * 4,
+        "backends": {},
+        "hdf5_access": None,
+    }
+    ref_digest = None
+    for backend in backends:
+        store = _get(backend)
+        assert store.num_samples * store.sample_bytes >= 64 << 20
+        ld = build_pipeline(
+            LoaderSpec(loader="solar", store=store, num_nodes=nodes,
+                       local_batch=local_batch, num_epochs=epochs,
+                       buffer_size=buffer, collect_data=True)
+        )
+        t0 = time.perf_counter()
+        digest = _digest(iter(ld))
+        wall = time.perf_counter() - t0
+        if ref_digest is None:
+            ref_digest = digest
+        assert digest == ref_digest, f"{backend}: batches diverged from binary"
+        emit(f"backends/{backend}/epoch_wall", wall * 1e6,
+             f"{wall:.3f}s digest={digest}")
+        results["backends"][backend] = {
+            "epoch_wall_s": round(wall, 4),
+            "numPFS": ld.report.total_pfs,
+            "read_calls": store.read_calls,
+            "bytes_read": store.bytes_read,
+            "digest": digest,
+        }
+
+    if HAVE_H5PY:
+        results["hdf5_access"] = _hdf5_access_ablation(
+            _get("hdf5"), nodes, local_batch, buffer, latency_s
+        )
+    else:  # tier-1 environments without h5py still produce a valid suite run
+        emit("backends/hdf5", 0.0, "SKIP (h5py unavailable)")
+
+    if json_out:
+        with open(json_out, "w") as f:
+            json.dump(results, f, indent=1, sort_keys=True)
+        emit("backends/json", 0.0, json_out)
+    return results
+
+
+def _hdf5_access_ablation(store, nodes, local_batch, buffer,
+                          latency_s) -> dict:
+    """Chunk-aligned aggregated reads vs naive per-sample HDF5 access on the
+    same epoch-0 SOLAR chunk plan, under injected per-call PFS latency."""
+    from repro.data.backends import Hdf5Backend
+
+    plan = _epoch_chunk_plan(store, nodes, local_batch, buffer)
+    want = sum(b - a for a, b in plan)
+
+    def _sweep(align: bool):
+        be = Hdf5Backend(store.path, align_chunks=align,
+                         simulated_latency_s=latency_s)
+        h = hashlib.sha256()
+        t0 = time.perf_counter()
+        if align:
+            for arr in be.read_ranges(plan):
+                h.update(np.ascontiguousarray(arr).tobytes())
+        else:
+            for a, b in plan:
+                for i in range(a, b):
+                    h.update(np.ascontiguousarray(be.read_one(i)).tobytes())
+        wall = time.perf_counter() - t0
+        calls, nbytes = be.read_calls, be.bytes_read
+        be.close()
+        return wall, calls, nbytes, h.hexdigest()[:16]
+
+    aligned_wall, aligned_calls, aligned_bytes, d_a = _sweep(True)
+    naive_wall, naive_calls, _, d_n = _sweep(False)
+    assert d_a == d_n, "aligned and per-sample reads delivered different bytes"
+
+    speedup = naive_wall / aligned_wall if aligned_wall else float("inf")
+    emit("backends/hdf5/aligned_wall", aligned_wall * 1e6,
+         f"{aligned_calls} calls for {want} samples")
+    emit("backends/hdf5/per_sample_wall", naive_wall * 1e6,
+         f"{naive_calls} calls")
+    emit("backends/hdf5/aggregation_speedup", 0.0, f"{speedup:.2f}x")
+    assert speedup > 1.0, "aggregated HDF5 reads must beat per-sample access"
+    return {
+        "plan_ranges": len(plan),
+        "plan_samples": want,
+        "latency_s": latency_s,
+        "aligned": {
+            "wall_s": round(aligned_wall, 4),
+            "read_calls": aligned_calls,
+            "bytes_read": aligned_bytes,
+        },
+        "per_sample": {
+            "wall_s": round(naive_wall, 4),
+            "read_calls": naive_calls,
+        },
+        "speedup": round(speedup, 3),
+    }
+
+
+if __name__ == "__main__":
+    run(json_out="BENCH_backends.json")

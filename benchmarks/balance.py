@@ -9,7 +9,7 @@ import numpy as np
 
 from benchmarks.common import emit, get_store
 from repro.core.scheduler import SolarConfig
-from repro.data import make_loader
+from repro.data import LoaderSpec, build_pipeline
 
 
 def run(num_epochs: int = 4, nodes: int = 16, local_batch: int = 32,
@@ -21,8 +21,11 @@ def run(num_epochs: int = 4, nodes: int = 16, local_batch: int = 32,
         cfg = SolarConfig(num_nodes=nodes, local_batch=local_batch,
                           buffer_size=buffer, enable_balance=balance,
                           enable_chunking=False)
-        ld = make_loader("solar", store, nodes, local_batch, num_epochs,
-                         buffer, 0, solar_config=cfg)
+        ld = build_pipeline(LoaderSpec(
+            loader="solar", store=store, num_nodes=nodes,
+            local_batch=local_batch, num_epochs=num_epochs,
+            buffer_size=buffer, seed=0, solar=cfg,
+        ))
         for _ in ld:
             pass
         miss = np.asarray(ld.report.miss_counts)  # [steps, nodes]

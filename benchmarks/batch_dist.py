@@ -5,13 +5,16 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import emit, get_store
-from repro.data import make_loader
+from repro.data import LoaderSpec, build_pipeline
 
 
 def run(num_epochs: int = 3, nodes: int = 16, local_batch: int = 512 // 16,
         buffer: int = 2048):
     store = get_store()
-    ld = make_loader("solar", store, nodes, local_batch, num_epochs, buffer, 0)
+    ld = build_pipeline(LoaderSpec(
+        loader="solar", store=store, num_nodes=nodes, local_batch=local_batch,
+        num_epochs=num_epochs, buffer_size=buffer, seed=0,
+    ))
     for _ in ld:
         pass
     sizes = np.asarray(ld.report.batch_sizes, dtype=np.float64)  # [steps, nodes]

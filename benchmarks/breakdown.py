@@ -12,7 +12,7 @@ import numpy as np
 
 from benchmarks.common import cost_model, emit, get_store
 from repro.configs.surrogates import SURROGATES
-from repro.data import make_loader
+from repro.data import LoaderSpec, build_pipeline
 from repro.models import cnn
 from repro.optim.adamw import AdamWConfig
 from repro.train.step import init_train_state, make_train_step
@@ -75,8 +75,11 @@ def run(steps: int = 24, nodes: int = 4, local_batch: int = 16,
     out = {}
     for name in ("naive", "solar"):
         store.reset_counters()
-        ld = make_loader(name, store, nodes, local_batch, 3, buffer, 0,
-                         collect_data=True, cost_model=cm)
+        ld = build_pipeline(LoaderSpec(
+            loader=name, store=store, num_nodes=nodes,
+            local_batch=local_batch, num_epochs=3, buffer_size=buffer,
+            seed=0, collect_data=True, cost_model=cm,
+        ))
         params = cnn.init_surrogate(key, cfg)
         opt = AdamWConfig(lr=1e-3)
         step = jax.jit(make_train_step(

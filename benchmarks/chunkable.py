@@ -3,7 +3,7 @@ across training runs (different seeds)."""
 from __future__ import annotations
 
 from benchmarks.common import emit, get_store
-from repro.data import make_loader
+from repro.data import LoaderSpec, build_pipeline
 
 
 def run(num_epochs: int = 3, nodes: int = 8, local_batch: int = 64,
@@ -12,8 +12,11 @@ def run(num_epochs: int = 3, nodes: int = 8, local_batch: int = 64,
     fracs = []
     for seed in range(runs):
         store.reset_counters()
-        ld = make_loader("solar", store, nodes, local_batch, num_epochs,
-                         buffer, seed)
+        ld = build_pipeline(LoaderSpec(
+            loader="solar", store=store, num_nodes=nodes,
+            local_batch=local_batch, num_epochs=num_epochs,
+            buffer_size=buffer, seed=seed,
+        ))
         for _ in ld:
             pass
         # stats from the schedule itself

@@ -2,38 +2,62 @@
 
 All benchmarks print ``name,us_per_call,derived`` CSV rows (one per
 measurement) so ``python -m benchmarks.run`` output is machine-readable.
+
+Stores are created once per (backend, geometry) under the system tmpdir and
+cached across suites in this process; every backend stores bit-identical
+sample bytes (shared synthetic generator), so cross-backend results are
+directly comparable.
 """
 from __future__ import annotations
 
 import os
 import tempfile
 
-import numpy as np
-
 from repro.core.costmodel import PFSCostModel
-from repro.data.storage import ChunkStore, create_synthetic_store
+from repro.data import DatasetSpec, StorageBackend, create_store, get_backend, open_store
 
 _STORES: dict = {}
 
 
-def get_store(num_samples: int = 32768, sample_floats: int = 1024) -> ChunkStore:
-    """Cached synthetic dataset: ``num_samples`` x 4 KiB float32 samples."""
-    key = (num_samples, sample_floats)
+def get_store(
+    num_samples: int = 32768,
+    sample_floats: int = 1024,
+    backend: str = "binary",
+    tag: str = "",
+    create_options: dict | None = None,
+    **backend_options,
+) -> StorageBackend:
+    """Cached synthetic dataset: ``num_samples`` x 4 KiB float32 samples.
+
+    ``create_options`` are layout knobs applied only when the dataset is
+    first written (e.g. ``chunk_samples`` for hdf5, ``num_shards`` for
+    sharded); ``tag`` namespaces the on-disk file so differently-laid-out
+    variants of the same geometry don't collide.  ``backend_options`` go to
+    every open.
+    """
+    key = (
+        backend, tag, num_samples, sample_floats,
+        tuple(sorted((create_options or {}).items())),
+        tuple(sorted(backend_options.items())),
+    )
     if key not in _STORES:
         path = os.path.join(
-            tempfile.gettempdir(), f"solar_bench_{num_samples}_{sample_floats}.bin"
+            tempfile.gettempdir(),
+            f"solar_bench_{backend}{tag and '_' + tag}_{num_samples}_{sample_floats}",
         )
-        if not (os.path.exists(path) and os.path.exists(path + ".header.json")):
-            create_synthetic_store(
-                path, num_samples=num_samples, sample_shape=(sample_floats,),
-                dtype=np.float32, kind="arange",
+        spec = DatasetSpec(num_samples, (sample_floats,), "<f4")
+        if get_backend(backend).exists(path):
+            _STORES[key] = open_store(path, backend, **backend_options)
+        else:
+            _STORES[key] = create_store(
+                path, backend, spec=spec, fill="arange",
+                **(create_options or {}), **backend_options,
             )
-        _STORES[key] = ChunkStore(path)
     _STORES[key].reset_counters()
     return _STORES[key]
 
 
-def cost_model(store: ChunkStore) -> PFSCostModel:
+def cost_model(store: StorageBackend) -> PFSCostModel:
     return PFSCostModel(sample_bytes=store.sample_bytes)
 
 

@@ -8,7 +8,7 @@ PyTorch-DataLoader analog (naive).
 from __future__ import annotations
 
 from benchmarks.common import emit, get_store
-from repro.data import make_loader
+from repro.data import LoaderSpec, build_pipeline
 
 SCENARIOS = {
     # name: (buffer per node, in samples); dataset = 32768, nodes = 8
@@ -25,7 +25,11 @@ def run(num_epochs: int = 6, nodes: int = 8, local_batch: int = 32):
         times = {}
         for name in ("naive", "lru", "nopfs", "deepio", "solar"):
             store.reset_counters()
-            ld = make_loader(name, store, nodes, local_batch, num_epochs, buf, 0)
+            ld = build_pipeline(LoaderSpec(
+                loader=name, store=store, num_nodes=nodes,
+                local_batch=local_batch, num_epochs=num_epochs,
+                buffer_size=buf, seed=0,
+            ))
             for _ in ld:
                 pass
             times[name] = ld.report.modeled_time_s

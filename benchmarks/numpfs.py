@@ -4,7 +4,7 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import emit, get_store
-from repro.data import make_loader
+from repro.data import LoaderSpec, build_pipeline
 
 
 def run(num_epochs: int = 6, nodes: int = 8, local_batch: int = 64,
@@ -26,12 +26,15 @@ def _run_tier(num_epochs: int, nodes: int, local_batch: int, buffer: int):
         if name == "solar":
             # Fig. 11 isolates the access-order effect: count true misses
             # (chunk-prefetch waste would shift loads between steps).
-            kw["solar_config"] = SolarConfig(
+            kw["solar"] = SolarConfig(
                 num_nodes=nodes, local_batch=local_batch, buffer_size=buffer,
                 enable_chunking=False,
             )
-        ld = make_loader(name, store, nodes, local_batch, num_epochs, buffer,
-                         0, **kw)
+        ld = build_pipeline(LoaderSpec(
+            loader=name, store=store, num_nodes=nodes,
+            local_batch=local_batch, num_epochs=num_epochs,
+            buffer_size=buffer, seed=0, **kw,
+        ))
         for _ in ld:
             pass
         mx = np.asarray(ld.report.miss_counts).max(axis=1)

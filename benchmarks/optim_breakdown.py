@@ -7,7 +7,7 @@ from __future__ import annotations
 
 from benchmarks.common import emit, get_store
 from repro.core.scheduler import SolarConfig
-from repro.data import make_loader
+from repro.data import LoaderSpec, build_pipeline
 
 STEPS = [
     ("naive", "naive", {}),
@@ -28,12 +28,15 @@ def run(num_epochs: int = 6, nodes: int = 8, local_batch: int = 32,
         store.reset_counters()
         kw = {}
         if name == "solar":
-            kw["solar_config"] = SolarConfig(
+            kw["solar"] = SolarConfig(
                 num_nodes=nodes, local_batch=local_batch, buffer_size=buffer,
                 **toggles,
             )
-        ld = make_loader(name, store, nodes, local_batch, num_epochs, buffer,
-                         0, **kw)
+        ld = build_pipeline(LoaderSpec(
+            loader=name, store=store, num_nodes=nodes,
+            local_batch=local_batch, num_epochs=num_epochs,
+            buffer_size=buffer, seed=0, **kw,
+        ))
         for _ in ld:
             pass
         t = ld.report.modeled_time_s

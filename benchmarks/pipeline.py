@@ -27,16 +27,17 @@ import time
 import numpy as np
 
 from benchmarks.common import emit, get_store
-from repro.data import make_loader
+from repro.data import LoaderSpec, build_pipeline
 from repro.data.prefetch import PrefetchExecutor
 
 LOADERS = ["naive", "lru", "nopfs", "deepio", "solar"]
 
 
-def _verify_identical(store, name: str, **cfg) -> None:
+def _verify_identical(store, spec: LoaderSpec) -> None:
     """Zip-compare sync vs async iteration (latency off — correctness only)."""
-    ld_sync = make_loader(name, store, collect_data=True, **cfg)
-    ld_async = make_loader(name, store, collect_data=True, **cfg)
+    name = spec.loader
+    ld_sync = build_pipeline(spec, store=store)
+    ld_async = build_pipeline(spec, store=store)
     ex = PrefetchExecutor(ld_async, depth=4, num_workers=8)
     for a, b in zip(ld_sync, ex):
         assert a.epoch == b.epoch and a.step == b.step, name
@@ -77,23 +78,19 @@ def run(
 ) -> dict:
     store = get_store(num_samples=num_samples, sample_floats=sample_floats)
     assert store.num_samples * store.sample_bytes >= 64 << 20, "store must be >= 64 MiB"
-    cfg = dict(
-        num_nodes=nodes, local_batch=local_batch, num_epochs=epochs,
-        buffer_size=buffer, seed=0,
+    base = LoaderSpec(
+        store=store, num_nodes=nodes, local_batch=local_batch,
+        num_epochs=epochs, buffer_size=buffer, seed=0, collect_data=True,
     )
 
-    def _mk(name, collect=True):
-        return make_loader(
-            name, store, cfg["num_nodes"], cfg["local_batch"],
-            cfg["num_epochs"], cfg["buffer_size"], cfg["seed"],
-            collect_data=collect,
-        )
+    def _mk(name):
+        return build_pipeline(base.replace(loader=name), store=store)
 
     results: dict = {}
     try:
         for name in loaders or LOADERS:
             results[name] = _one_loader(
-                store, name, nodes, local_batch, buffer, _mk,
+                store, base.replace(loader=name), _mk,
                 latency_s, compute_s, depth, workers,
             )
     finally:
@@ -108,15 +105,12 @@ def run(
     return results
 
 
-def _one_loader(store, name, nodes, local_batch, buffer, _mk,
-                latency_s, compute_s, depth, workers) -> dict:
+def _one_loader(store, spec, _mk, latency_s, compute_s, depth, workers) -> dict:
+    name = spec.loader
     # correctness first, with real (latency-free) reads
     store.simulated_latency_s = 0.0
     store.reset_counters()
-    _verify_identical(
-        store, name, num_nodes=nodes, local_batch=local_batch,
-        num_epochs=1, buffer_size=buffer, seed=0,
-    )
+    _verify_identical(store, spec.replace(num_epochs=1))
 
     store.simulated_latency_s = latency_s
     store.reset_counters()

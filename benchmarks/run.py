@@ -18,6 +18,7 @@ import traceback
 
 from benchmarks import (
     access_patterns,
+    backends,
     balance,
     batch_dist,
     breakdown,
@@ -40,6 +41,7 @@ SUITES = {
     "fig16": batch_dist.run,            # batch-size distribution
     "eoo": epoch_order.run,             # path-TSP solver comparison
     "pipeline": pipeline.run,           # sync vs async executor throughput
+    "backends": backends.run,           # storage-backend shoot-out
 }
 
 

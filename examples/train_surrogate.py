@@ -2,7 +2,8 @@
 for a few hundred steps and report the paper's headline numbers (loading
 time breakdown + SOLAR vs naive speedup).
 
-    PYTHONPATH=src python examples/train_surrogate.py [--steps 300]
+    PYTHONPATH=src python examples/train_surrogate.py [--steps 300] \
+        [--backend binary|hdf5|memory|sharded]
 """
 import argparse
 import tempfile
@@ -11,7 +12,7 @@ import jax
 import numpy as np
 
 from repro.configs.surrogates import SURROGATES
-from repro.data import create_synthetic_store, make_loader
+from repro.data import DatasetSpec, LoaderSpec, backend_names, build_pipeline, create_store
 from repro.models import cnn
 from repro.optim.adamw import AdamWConfig
 from repro.train.step import init_train_state, make_train_step
@@ -30,12 +31,14 @@ def main():
     ap.add_argument("--local-batch", type=int, default=16)
     ap.add_argument("--buffer", type=int, default=2048)
     ap.add_argument("--epochs", type=int, default=6)
+    ap.add_argument("--backend", default="binary", choices=backend_names(),
+                    help="storage layout serving the synthetic dataset")
     args = ap.parse_args()
 
     cfg = SURROGATES["ptychonn"].reduced()
-    store = create_synthetic_store(
-        tempfile.mktemp(suffix=".bin"), num_samples=8192,
-        sample_shape=cfg.input_shape, dtype=np.float32, kind="random",
+    store = create_store(
+        tempfile.mktemp(suffix=".bin"), args.backend,
+        spec=DatasetSpec(8192, cfg.input_shape, "<f4"), fill="random",
     )
 
     def make_batch_fn(capacity):
@@ -50,10 +53,14 @@ def main():
         return mk
 
     results = {}
+    spec = LoaderSpec(
+        store=store, num_nodes=args.nodes, local_batch=args.local_batch,
+        num_epochs=args.epochs, buffer_size=args.buffer, seed=0,
+        collect_data=True,
+    )
     for name in ("naive", "solar"):
         store.reset_counters()
-        ld = make_loader(name, store, args.nodes, args.local_batch,
-                         args.epochs, args.buffer, 0, collect_data=True)
+        ld = build_pipeline(spec.replace(loader=name))
         params = cnn.init_surrogate(jax.random.PRNGKey(0), cfg)
         opt = AdamWConfig(lr=1e-3, total_steps=args.steps)
         step = jax.jit(make_train_step(

@@ -1,0 +1,40 @@
+#!/usr/bin/env bash
+# Fast pre-merge gate: the non-slow tier-1 suite plus one tiny end-to-end
+# pipeline build per storage backend (build_pipeline -> iterate -> verify).
+#
+#   ./scripts/smoke.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m pytest -q -m "not slow"
+
+python - <<'PY'
+import os
+import tempfile
+
+import numpy as np
+
+from repro.data import DatasetSpec, LoaderSpec, build_pipeline, create_store
+from repro.data.backends import HAVE_H5PY, backend_names
+
+spec = DatasetSpec(num_samples=64, sample_shape=(4,), dtype="<f4")
+for backend in backend_names():
+    if backend == "hdf5" and not HAVE_H5PY:
+        print("smoke hdf5: SKIP (h5py unavailable)")
+        continue
+    path = os.path.join(tempfile.mkdtemp(), "smoke")
+    store = create_store(path, backend, spec=spec, fill="arange")
+    pipeline = build_pipeline(LoaderSpec(
+        loader="solar", store=store, num_nodes=2, local_batch=4,
+        num_epochs=1, buffer_size=16, collect_data=True, prefetch_depth=2,
+    ))
+    steps = 0
+    for sb in pipeline:
+        steps += 1
+        for ids, arr in zip(sb.node_ids, sb.node_data):
+            assert np.array_equal(arr[:, 0].astype(np.int64), ids), backend
+    pipeline.close()
+    store.close()
+    print(f"smoke {backend}: OK ({steps} steps)")
+PY

@@ -1,6 +1,23 @@
-"""Data substrate: chunked sample store ("PFS"), loaders, and the device
-feed pipeline."""
+"""Data substrate: pluggable storage backends, loader zoo, and the async
+device-feed pipeline.
+
+Typical entry point::
+
+    from repro.data import DatasetSpec, LoaderSpec, build_pipeline, create_store
+
+    store = create_store(path, "hdf5", spec=DatasetSpec(16384, (1024,)))
+    pipeline = build_pipeline(LoaderSpec(loader="solar", store=store, ...))
+"""
+from repro.data.backends import (
+    DatasetSpec,
+    StorageBackend,
+    backend_names,
+    create_store,
+    get_backend,
+    open_store,
+)
 from repro.data.loaders import (
+    LOADERS,
     DeepIOLoader,
     LoaderReport,
     LRULoader,
@@ -10,15 +27,26 @@ from repro.data.loaders import (
     StepBatch,
     make_loader,
 )
+from repro.data.pipeline import LoaderSpec, build_pipeline, build_store
 from repro.data.prefetch import PrefetchExecutor
 from repro.data.storage import ChunkStore, create_synthetic_store
 
 __all__ = [
     "ChunkStore",
+    "DatasetSpec",
+    "LoaderSpec",
+    "StorageBackend",
+    "backend_names",
+    "build_pipeline",
+    "build_store",
+    "create_store",
     "create_synthetic_store",
+    "get_backend",
+    "open_store",
     "PrefetchExecutor",
     "DeepIOLoader",
     "LoaderReport",
+    "LOADERS",
     "LRULoader",
     "NaiveLoader",
     "NoPFSLoader",

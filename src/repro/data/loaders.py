@@ -20,11 +20,18 @@ loader-agnostic:
 Each loader yields :class:`StepBatch` objects and accumulates a
 :class:`LoaderReport` with numPFS / modeled PFS time / wall time, which is
 what the paper's figures plot.
+
+Loaders are storage-agnostic: ``store`` is any
+:class:`~repro.data.backends.base.StorageBackend` (flat binary, HDF5,
+RAM-staged, sharded, ...) — every access goes through the protocol's
+``read_ranges`` / ``read_scattered`` coalescing read paths.  Construct
+loaders declaratively via :func:`repro.data.pipeline.build_pipeline`.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 
 import numpy as np
 
@@ -37,7 +44,7 @@ from repro.core.shuffle import (
     generate_epoch_permutations,
     split_global_batches,
 )
-from repro.data.storage import ChunkStore
+from repro.data.backends.base import StorageBackend
 
 __all__ = [
     "StepBatch",
@@ -47,6 +54,7 @@ __all__ = [
     "NoPFSLoader",
     "DeepIOLoader",
     "SolarLoader",
+    "LOADERS",
     "make_loader",
 ]
 
@@ -191,7 +199,7 @@ class _Base:
 
     def __init__(
         self,
-        store: ChunkStore,
+        store: StorageBackend,
         num_nodes: int,
         local_batch: int,
         num_epochs: int,
@@ -662,9 +670,12 @@ class SolarLoader(_Base):
             yield self.execute_step(ep, sp)
 
 
-_LOADERS = {
+#: loader-kind registry: the names :class:`repro.data.pipeline.LoaderSpec`
+#: resolves its ``loader`` field through.
+LOADERS = {
     c.name: c for c in (NaiveLoader, LRULoader, NoPFSLoader, DeepIOLoader, SolarLoader)
 }
+_LOADERS = LOADERS  # backwards-compat alias (pre-backend-API name)
 
 
 def make_loader(
@@ -674,13 +685,25 @@ def make_loader(
     num_workers: int | None = None,
     **kwargs,
 ):
-    """Build a loader; with ``prefetch_depth`` set, wrap it in the async
+    """Deprecated: build pipelines with
+    :func:`repro.data.pipeline.build_pipeline` \\(:class:`~repro.data.
+    pipeline.LoaderSpec`\\) instead — it validates the whole configuration
+    (loader kind, storage backend, scheduler config, prefetch shape) in one
+    place.  This shim survives exactly one PR for migration.
+
+    Builds a loader; with ``prefetch_depth`` set, wraps it in the async
     :class:`~repro.data.prefetch.PrefetchExecutor` (``num_workers`` I/O
     threads, ``prefetch_depth`` steps of read-ahead)."""
+    warnings.warn(
+        "make_loader is deprecated; use "
+        "repro.data.pipeline.build_pipeline(LoaderSpec(...)) instead",
+        DeprecationWarning,
+        stacklevel=2,
+    )
     try:
-        loader = _LOADERS[name](*args, **kwargs)
+        loader = LOADERS[name](*args, **kwargs)
     except KeyError:
-        raise ValueError(f"unknown loader {name!r}; have {sorted(_LOADERS)}") from None
+        raise ValueError(f"unknown loader {name!r}; have {sorted(LOADERS)}") from None
     if prefetch_depth:
         from repro.data.prefetch import PrefetchExecutor
 

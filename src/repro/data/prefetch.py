@@ -18,6 +18,13 @@ does exactly that:
     consumer's compute, but intra-step reads stay sequential because these
     loaders decide their accesses online.
 
+The executor is storage-agnostic: chunk reads go through the wrapped
+loader's ``store.read_ranges`` — any :class:`~repro.data.backends.base.
+StorageBackend` whose open/close lifecycle tolerates concurrent in-flight
+reads (the fd/handle-pool contract every built-in backend implements).
+Build one declaratively by setting ``prefetch_depth`` on a
+:class:`~repro.data.pipeline.LoaderSpec`.
+
 The output queue is bounded (``depth`` entries, default 2 = double
 buffering).  In schedule mode up to ``depth`` *assembled* batches queue for
 the consumer while up to ``depth`` further steps of raw chunk reads are in

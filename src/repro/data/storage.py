@@ -1,9 +1,8 @@
-"""Chunked sample store — the "PFS + HDF5" layer.
+"""Flat-binary chunked sample store — the original "PFS + HDF5" stand-in.
 
-h5py is unavailable in this offline container, so we implement a minimal
-HDF5-like chunked dataset: a JSON header + one flat binary file holding
-``num_samples`` fixed-shape samples contiguously.  What matters for SOLAR is
-preserved exactly:
+A minimal HDF5-like chunked dataset: a JSON header + one flat binary file
+holding ``num_samples`` fixed-shape samples contiguously.  What matters for
+SOLAR is preserved exactly:
 
   * a *ranged* read of samples ``[start, stop)`` is a single seek + one
     sequential read (this is what makes aggregated chunk loading win), and
@@ -13,6 +12,13 @@ preserved exactly:
 Every read is a real ``pread`` against the filesystem; benchmarks additionally
 price the same access trace under :class:`repro.core.costmodel.PFSCostModel`
 to model a remote Lustre/GPFS where the per-call cost dominates.
+
+:class:`ChunkStore` is one implementation of the
+:class:`repro.data.backends.base.StorageBackend` protocol (registered as the
+``binary`` backend via :class:`repro.data.backends.binary.BinaryBackend`);
+the geometry, stats, and coalescing read paths live in
+:class:`~repro.data.backends.base.BaseBackend` and are shared with the
+``hdf5``/``memory``/``sharded`` layouts.
 
 Concurrency: reads are safe from any number of threads.  Each in-flight read
 checks a private file descriptor out of a pool (growing it on demand, so fd
@@ -29,40 +35,69 @@ import json
 import os
 import queue
 import threading
-import time
 
 import numpy as np
 
-__all__ = ["ChunkStore", "create_synthetic_store"]
+from repro.data.backends.base import BaseBackend, synthetic_blocks
+
+__all__ = ["ChunkStore", "create_synthetic_store", "write_binary_layout"]
 
 _HEADER_SUFFIX = ".header.json"
 
 
-class ChunkStore:
+def write_binary_layout(
+    path: str,
+    data: np.ndarray | None = None,
+    *,
+    num_samples: int | None = None,
+    sample_shape: tuple[int, ...] | None = None,
+    dtype=np.float32,
+    fill: str = "zeros",
+    seed: int = 0,
+) -> None:
+    """Write the flat-binary layout (header + data file) without opening a
+    store — shared by :meth:`ChunkStore.create` and the ``binary``/``memory``
+    backends' creation paths."""
+    if data is not None:
+        num_samples = data.shape[0]
+        sample_shape = tuple(data.shape[1:])
+        dtype = data.dtype
+    assert num_samples is not None and sample_shape is not None
+    hdr = {
+        "num_samples": int(num_samples),
+        "sample_shape": [int(x) for x in sample_shape],
+        "dtype": np.dtype(dtype).str,
+    }
+    with open(path + _HEADER_SUFFIX, "w") as f:
+        json.dump(hdr, f)
+    if data is not None:
+        data.tofile(path)
+    else:
+        with open(path, "wb") as f:
+            for _, block in synthetic_blocks(
+                num_samples, sample_shape, dtype, fill, seed
+            ):
+                block.tofile(f)
+
+
+class ChunkStore(BaseBackend):
     """Fixed-shape sample array stored contiguously in one file."""
 
+    backend_name = "binary"
+
     def __init__(self, path: str, simulated_latency_s: float = 0.0):
-        self.path = path
         with open(path + _HEADER_SUFFIX) as f:
             hdr = json.load(f)
-        self.num_samples = int(hdr["num_samples"])
-        self.sample_shape = tuple(hdr["sample_shape"])
-        self.dtype = np.dtype(hdr["dtype"])
-        self.sample_bytes = int(
-            self.dtype.itemsize * int(np.prod(self.sample_shape, dtype=np.int64))
+        super().__init__(
+            int(hdr["num_samples"]),
+            tuple(hdr["sample_shape"]),
+            np.dtype(hdr["dtype"]),
+            path=path,
+            simulated_latency_s=simulated_latency_s,
         )
-        #: per-pread sleep emulating remote-PFS call latency (benchmarks only).
-        self.simulated_latency_s = float(simulated_latency_s)
         self._fd_pool: queue.SimpleQueue = queue.SimpleQueue()
         self._fds: list[int] = []       # every fd ever opened, for close()
         self._fd_lock = threading.Lock()
-        self._closed = False
-        self._stats_lock = threading.Lock()
-        #: access trace: list of (sample_offset, run_length) — consumed by the
-        #: cost model and the access-pattern benchmark; cheap to record.
-        self.trace: list[tuple[int, int]] = []
-        self.bytes_read = 0
-        self.read_calls = 0
         self._release_fd(self._open_fd())  # fail on a bad path right here
 
     # -- construction --------------------------------------------------------
@@ -79,46 +114,15 @@ class ChunkStore:
         fill: str = "zeros",
         seed: int = 0,
     ) -> "ChunkStore":
-        if data is not None:
-            num_samples = data.shape[0]
-            sample_shape = tuple(data.shape[1:])
-            dtype = data.dtype
-        assert num_samples is not None and sample_shape is not None
-        hdr = {
-            "num_samples": int(num_samples),
-            "sample_shape": [int(x) for x in sample_shape],
-            "dtype": np.dtype(dtype).str,
-        }
-        with open(path + _HEADER_SUFFIX, "w") as f:
-            json.dump(hdr, f)
-        if data is not None:
-            data.tofile(path)
-        else:
-            sample_elems = int(np.prod(sample_shape, dtype=np.int64))
-            rng = np.random.Generator(np.random.PCG64(seed))
-            with open(path, "wb") as f:
-                block = 4096
-                for start in range(0, num_samples, block):
-                    n = min(block, num_samples - start)
-                    if fill == "zeros":
-                        arr = np.zeros((n, sample_elems), np.dtype(dtype))
-                    elif fill == "random":
-                        if np.issubdtype(np.dtype(dtype), np.integer):
-                            arr = rng.integers(
-                                0, 255, size=(n, sample_elems)
-                            ).astype(dtype)
-                        else:
-                            arr = rng.standard_normal((n, sample_elems)).astype(dtype)
-                    elif fill == "arange":
-                        # sample i filled with value i — lets tests verify reads.
-                        arr = np.broadcast_to(
-                            np.arange(start, start + n, dtype=np.int64)[:, None],
-                            (n, sample_elems),
-                        ).astype(dtype)
-                    else:
-                        raise ValueError(f"unknown fill {fill!r}")
-                    arr.tofile(f)
+        write_binary_layout(
+            path, data, num_samples=num_samples, sample_shape=sample_shape,
+            dtype=dtype, fill=fill, seed=seed,
+        )
         return cls(path)
+
+    @classmethod
+    def exists(cls, path: str) -> bool:
+        return os.path.exists(path) and os.path.exists(path + _HEADER_SUFFIX)
 
     # -- fd pool --------------------------------------------------------------
 
@@ -159,80 +163,17 @@ class ChunkStore:
         except OSError:  # pragma: no cover
             pass
 
-    # -- reads ----------------------------------------------------------------
+    # -- physical read + lifecycle --------------------------------------------
 
-    def read_range(self, start: int, stop: int) -> np.ndarray:
-        """One ranged read: samples [start, stop) in a single pread."""
-        if not 0 <= start < stop <= self.num_samples:
-            raise IndexError((start, stop, self.num_samples))
+    def _read_span(self, start: int, stop: int) -> np.ndarray:
         nbytes = (stop - start) * self.sample_bytes
         fd = self._acquire_fd()
         try:
-            if self.simulated_latency_s > 0.0:
-                time.sleep(self.simulated_latency_s)
             buf = os.pread(fd, nbytes, start * self.sample_bytes)
         finally:
             self._release_fd(fd)
-        with self._stats_lock:
-            self.trace.append((start, stop - start))
-            self.bytes_read += nbytes
-            self.read_calls += 1
         arr = np.frombuffer(buf, dtype=self.dtype)
         return arr.reshape((stop - start,) + self.sample_shape)
-
-    def read_one(self, idx: int) -> np.ndarray:
-        return self.read_range(idx, idx + 1)[0]
-
-    def read_ranges(self, ranges) -> list[np.ndarray]:
-        """Ranged reads with adjacency coalescing.
-
-        ``ranges`` is a sequence of ``(start, stop)`` pairs.  Consecutive pairs
-        whose spans touch (``prev_stop == next_start``) are merged into one
-        pread and split back afterwards, so a run of adjacent
-        :class:`~repro.core.plan.ChunkRead`\\ s costs a single PFS call.
-        Returns one array per input range, in input order.
-        """
-        ranges = [(int(a), int(b)) for a, b in ranges]
-        out: list[np.ndarray | None] = [None] * len(ranges)
-        i = 0
-        while i < len(ranges):
-            j = i
-            while j + 1 < len(ranges) and ranges[j + 1][0] == ranges[j][1]:
-                j += 1
-            lo, hi = ranges[i][0], ranges[j][1]
-            arr = self.read_range(lo, hi)
-            for k in range(i, j + 1):
-                a, b = ranges[k]
-                out[k] = arr[a - lo : b - lo]
-            i = j + 1
-        return out  # type: ignore[return-value]
-
-    def read_scattered(self, ids) -> np.ndarray:
-        """Scattered read of k samples, coalescing consecutive ids.
-
-        Ids are sorted, runs of adjacent ids become single ranged preads, and
-        rows come back in the caller's original order (duplicates allowed).
-        """
-        ids = np.asarray(ids, dtype=np.int64)
-        if ids.size == 0:
-            return np.empty((0,) + self.sample_shape, self.dtype)
-        order = np.argsort(ids, kind="stable")
-        sids = ids[order]
-        breaks = np.flatnonzero(np.diff(sids) > 1) + 1
-        starts = np.concatenate([[0], breaks])
-        ends = np.concatenate([breaks, [sids.size]])
-        out = np.empty((ids.size,) + self.sample_shape, self.dtype)
-        for a, b in zip(starts, ends):
-            lo, hi = int(sids[a]), int(sids[b - 1]) + 1
-            arr = self.read_range(lo, hi)
-            out[order[a:b]] = arr[sids[a:b] - lo]
-        return out
-
-    def reset_counters(self) -> None:
-        with self._stats_lock:
-            self.trace.clear()
-            self.bytes_read = 0
-            self.read_calls = 0
 
     def close(self) -> None:
         with self._fd_lock:
@@ -243,12 +184,6 @@ class ChunkStore:
             except queue.Empty:
                 break
             self._close_fd(fd)
-
-    def __del__(self):  # pragma: no cover - best effort
-        try:
-            self.close()
-        except Exception:
-            pass
 
 
 def create_synthetic_store(

@@ -1,7 +1,8 @@
 """Training launcher: SOLAR input pipeline + jitted step + checkpointing.
 
     PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b \
-        --reduced --steps 50 --loader solar --data /tmp/tokens.bin
+        --reduced --steps 50 --loader solar --backend sharded \
+        --data /tmp/tokens.bin
 
 Runs on whatever devices are visible (CPU here; the same code path drives
 the production mesh — the dry-run proves the sharded lowering).
@@ -10,14 +11,12 @@ from __future__ import annotations
 
 import argparse
 import json
-import os
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config
-from repro.data import create_synthetic_store, make_loader
+from repro.data import DatasetSpec, LoaderSpec, backend_names, build_pipeline, build_store
 from repro.models import encdec, lm
 from repro.optim.adamw import AdamWConfig
 from repro.train.step import init_train_state, make_train_step
@@ -31,7 +30,13 @@ def main():
                     help="smoke-scale model (CPU-trainable)")
     ap.add_argument("--loader", default="solar",
                     choices=["naive", "lru", "nopfs", "deepio", "solar"])
-    ap.add_argument("--data", default="/tmp/solar_tokens.bin")
+    ap.add_argument("--backend", default="binary", choices=backend_names(),
+                    help="storage backend serving --data (created on first "
+                         "run in that layout)")
+    ap.add_argument("--data", default=None,
+                    help="dataset path (default: /tmp/solar_tokens.<backend> "
+                         "— per-backend so switching --backend never reopens "
+                         "another layout's bytes)")
     ap.add_argument("--num-samples", type=int, default=2048)
     ap.add_argument("--seq-len", type=int, default=64)
     ap.add_argument("--nodes", type=int, default=2)
@@ -53,19 +58,21 @@ def main():
     if args.reduced:
         cfg = cfg.reduced()
 
-    if not os.path.exists(args.data):
-        create_synthetic_store(
-            args.data, num_samples=args.num_samples,
-            sample_shape=(args.seq_len + 1,), dtype=np.int32, kind="random",
-        )
-    from repro.data.storage import ChunkStore
-
-    store = ChunkStore(args.data)
-    loader = make_loader(
-        args.loader, store, args.nodes, args.local_batch, args.epochs,
-        args.buffer, 0, collect_data=True,
-        prefetch_depth=args.prefetch_depth, num_workers=args.num_workers,
+    if args.data is None:
+        args.data = f"/tmp/solar_tokens.{args.backend}"
+    spec = LoaderSpec(
+        loader=args.loader, backend=args.backend, path=args.data,
+        num_nodes=args.nodes, local_batch=args.local_batch,
+        num_epochs=args.epochs, buffer_size=args.buffer, seed=0,
+        collect_data=True, prefetch_depth=args.prefetch_depth,
+        num_workers=args.num_workers,
     )
+    store = build_store(
+        spec, create=True,
+        dataset=DatasetSpec(args.num_samples, (args.seq_len + 1,), "<i4"),
+        fill="random",
+    )
+    loader = build_pipeline(spec, store=store)
     capacity = getattr(loader, "capacity", args.local_batch + 4)
 
     key = jax.random.PRNGKey(0)

@@ -23,6 +23,7 @@ import numpy as np
 
 from repro.checkpoint.checkpoint import AsyncCheckpointer, latest_checkpoint, restore_checkpoint
 from repro.data.loaders import StepBatch
+from repro.data.pipeline import LoaderSpec, build_pipeline
 from repro.data.prefetch import PrefetchExecutor
 
 __all__ = ["Trainer"]
@@ -32,7 +33,7 @@ class Trainer:
     def __init__(
         self,
         *,
-        loader,
+        loader,                     # a loader, PrefetchExecutor, or LoaderSpec
         step_fn,                    # jitted (state, batch) -> (state, metrics)
         state,
         make_batch,                 # StepBatch -> model batch dict (numpy)
@@ -42,6 +43,14 @@ class Trainer:
         num_workers: int = 4,       # I/O threads for schedule-driven prefetch
         skip_steps: int = 0,        # resume: skip already-trained steps
     ):
+        if isinstance(loader, LoaderSpec):
+            # declarative pipelines: the spec resolves backend + loader +
+            # prefetch in one validated place (repro.data.pipeline) and its
+            # prefetch shape wins over the Trainer kwargs — in particular
+            # prefetch_depth=0 stays fully synchronous.
+            prefetch_depth = loader.prefetch_depth
+            num_workers = loader.num_workers
+            loader = build_pipeline(loader)
         self.loader = loader
         self.step_fn = step_fn
         self.state = state
