@@ -27,6 +27,7 @@ from benchmarks import (
     loaders,
     numpfs,
     optim_breakdown,
+    peer,
     pipeline,
 )
 
@@ -42,6 +43,7 @@ SUITES = {
     "eoo": epoch_order.run,             # path-TSP solver comparison
     "pipeline": pipeline.run,           # sync vs async executor throughput
     "backends": backends.run,           # storage-backend shoot-out
+    "peer": peer.run,                   # peer-fetch tier vs PFS-only
 }
 
 

@@ -38,3 +38,22 @@ for backend in backend_names():
     store.close()
     print(f"smoke {backend}: OK ({steps} steps)")
 PY
+
+python - <<'PY'
+# fig13 regression parameters (ROADMAP bug, fixed in PR 3): at nodes=8,
+# local_batch=64, buffer=3072, seed=3 the schedule's recorded admission/
+# eviction deltas must replay within the Belady capacity.
+import numpy as np
+
+from repro.data import LoaderSpec, build_pipeline
+from repro.data.backends.memory import MemoryBackend
+
+store = MemoryBackend.from_array(np.zeros((32768, 1), np.float32))
+ld = build_pipeline(LoaderSpec(
+    loader="solar", store=store, num_nodes=8, local_batch=64,
+    num_epochs=3, buffer_size=3072, seed=3,
+))
+steps = sum(1 for _ in ld)  # trips the occupancy assert if the bug returns
+assert steps == 3 * (32768 // 512), steps
+print(f"smoke fig13 occupancy regression: OK ({steps} steps)")
+PY

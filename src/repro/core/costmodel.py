@@ -18,7 +18,7 @@ import dataclasses
 
 import numpy as np
 
-__all__ = ["PFSCostModel"]
+__all__ = ["PFSCostModel", "PeerCostModel"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -57,3 +57,44 @@ class PFSCostModel:
                 t += self.backward_seek_penalty_s
             prev_end = off + int(k)
         return t
+
+
+@dataclasses.dataclass(frozen=True)
+class PeerCostModel:
+    """Inter-node buffer-fetch pricing + the peer-vs-PFS planning decision.
+
+    NoPFS (Dryden et al., 2021) measures inter-node buffer fetches at one to
+    two orders of magnitude cheaper than PFS reads: the transfer rides the
+    training interconnect (per-fetch RPC latency + link bandwidth) and skips
+    the PFS metadata/stripe-lock round-trip entirely.  The scheduler uses
+    :meth:`prefer_peer` to decide, per coalesced chunk, whether serving a
+    chunk's misses from sibling buffers beats issuing the ranged PFS read —
+    a chunk whose read is amortized by co-resident *non-peer* misses is never
+    split (the bytes travel anyway, so peer-resident riders stay on the PFS
+    path), which is why the decision is taken at chunk granularity
+    (DESIGN.md §6).
+    """
+
+    sample_bytes: int = 4096
+    #: per-fetch RPC cost (request + response headers), seconds.
+    per_fetch_latency_s: float = 5e-5
+    #: sustained interconnect bandwidth per node pair, bytes/s.
+    bandwidth_bytes_per_s: float = 1.0e10
+    #: PFS pricing the peer alternative is compared against; a default
+    #: :class:`PFSCostModel` over ``sample_bytes`` when None.
+    pfs: PFSCostModel | None = None
+
+    def pfs_model(self) -> PFSCostModel:
+        return self.pfs or PFSCostModel(sample_bytes=self.sample_bytes)
+
+    def fetch_time(self, num_samples: int) -> float:
+        """Time to pull ``num_samples`` individual samples from peer buffers."""
+        return num_samples * (
+            self.per_fetch_latency_s
+            + self.sample_bytes / self.bandwidth_bytes_per_s
+        )
+
+    def prefer_peer(self, num_peer: int, chunk_span: int) -> bool:
+        """True when ``num_peer`` peer fetches beat the ranged PFS read of
+        ``chunk_span`` samples that chunk coalescing would otherwise issue."""
+        return self.fetch_time(num_peer) < self.pfs_model().read_time(chunk_span)

@@ -22,6 +22,7 @@ import numpy as np
 
 __all__ = [
     "ChunkRead",
+    "PeerFetch",
     "NodeStepPlan",
     "StepPlan",
     "EpochPlan",
@@ -52,6 +53,23 @@ class ChunkRead:
         return self.span - self.wanted
 
 
+@dataclasses.dataclass(frozen=True)
+class PeerFetch:
+    """One planned inter-node buffer fetch (DESIGN.md §6).
+
+    ``sample`` is trained on the plan's node this step but resides in
+    ``source``'s simulated buffer at the *start* of the step (the source may
+    evict it in the same step — the runtime fetches every peer sample before
+    applying any node's admission/eviction deltas, so the plan stays valid).
+    ``source`` may equal the training node itself: a capacity-spilled hit
+    that the load balancer sent back to its own holder is served from the
+    local buffer at zero transfer cost.
+    """
+
+    sample: int
+    source: int
+
+
 @dataclasses.dataclass
 class NodeStepPlan:
     """What node ``node`` does at one training step."""
@@ -68,6 +86,9 @@ class NodeStepPlan:
     admissions: np.ndarray
     #: sample ids evicted from this node's buffer after this step.
     evictions: np.ndarray
+    #: misses served from a sibling node's buffer instead of the PFS
+    #: (the planned peer-fetch tier, DESIGN.md §6).
+    peer_fetches: tuple[PeerFetch, ...] = ()
 
     @property
     def num_real(self) -> int:
@@ -82,6 +103,15 @@ class NodeStepPlan:
         return self.num_real - self.num_hits
 
     @property
+    def num_peer(self) -> int:
+        return len(self.peer_fetches)
+
+    @property
+    def num_pfs_misses(self) -> int:
+        """Misses that actually hit the PFS (peer-served ones excluded)."""
+        return self.num_misses - self.num_peer
+
+    @property
     def pfs_samples(self) -> int:
         """Samples actually fetched from the PFS including chunk waste."""
         return sum(c.span for c in self.chunks)
@@ -89,12 +119,18 @@ class NodeStepPlan:
     def validate(self) -> None:
         assert self.sample_ids.shape == self.hit_mask.shape
         covered = sum(c.wanted for c in self.chunks)
-        assert covered == self.num_misses, (covered, self.num_misses)
+        assert covered == self.num_pfs_misses, (covered, self.num_pfs_misses)
         miss_ids = set(self.sample_ids[~self.hit_mask].tolist())
+        peer_ids = {f.sample for f in self.peer_fetches}
+        assert len(peer_ids) == len(self.peer_fetches), "duplicate peer fetch"
+        assert peer_ids <= miss_ids, "peer fetches must be misses"
         in_chunks = set()
         for c in self.chunks:
             in_chunks.update(range(c.start, c.stop))
-        assert miss_ids <= in_chunks, "chunk reads must cover every miss"
+        assert not (peer_ids & in_chunks), "peer fetch duplicated by a chunk"
+        assert miss_ids - peer_ids <= in_chunks, (
+            "chunk reads must cover every non-peer miss"
+        )
 
 
 @dataclasses.dataclass
@@ -134,12 +170,15 @@ class ScheduleStats:
     total_pfs_samples: int          # misses + chunk waste
     total_chunk_reads: int
     total_singleton_reads: int
-    #: per-(epoch, step) max over nodes of miss count — the loading critical path.
+    #: per-(epoch, step) max over nodes of *PFS* miss count — the loading
+    #: critical path (peer-served misses ride the interconnect, not the PFS).
     per_step_max_miss: np.ndarray
     #: per-(epoch, step, node) real batch size (Fig. 16 distribution).
     batch_sizes: np.ndarray
     #: per-(epoch, step, node) miss counts (Fig. 12).
     miss_counts: np.ndarray
+    #: misses served by the planned peer-fetch tier instead of the PFS.
+    total_peer_fetches: int = 0
 
     @property
     def hit_rate(self) -> float:
@@ -148,16 +187,20 @@ class ScheduleStats:
 
     @property
     def chunked_fraction(self) -> float:
-        """Fraction of miss samples that ride in a multi-sample chunk (Fig. 13)."""
-        if self.total_misses == 0:
+        """Fraction of *PFS* miss samples riding in a multi-sample chunk
+        (Fig. 13; peer-served misses never touch the PFS so they are out of
+        both numerator and denominator)."""
+        pfs_misses = self.total_misses - self.total_peer_fetches
+        if pfs_misses == 0:
             return 0.0
-        chunked = self.total_misses - self.total_singleton_reads
-        return chunked / self.total_misses
+        chunked = pfs_misses - self.total_singleton_reads
+        return chunked / pfs_misses
 
     def summary(self) -> dict:
         return {
             "hit_rate": round(self.hit_rate, 4),
             "total_misses": int(self.total_misses),
+            "total_peer_fetches": int(self.total_peer_fetches),
             "total_pfs_samples": int(self.total_pfs_samples),
             "chunked_fraction": round(self.chunked_fraction, 4),
             "mean_step_max_miss": float(self.per_step_max_miss.mean())
@@ -187,7 +230,7 @@ class Schedule:
         return sum(len(ep.steps) for ep in self.epochs)
 
     def stats(self) -> ScheduleStats:
-        hits = misses = pfs = chunk_reads = singleton = trained = 0
+        hits = misses = pfs = chunk_reads = singleton = trained = peer = 0
         max_miss, bsz, msc = [], [], []
         for ep in self.epochs:
             for sp in ep.steps:
@@ -196,13 +239,14 @@ class Schedule:
                     trained += n.num_real
                     hits += n.num_hits
                     misses += n.num_misses
+                    peer += n.num_peer
                     pfs += n.pfs_samples
                     for c in n.chunks:
                         if c.wanted > 1:
                             chunk_reads += 1
                         else:
                             singleton += 1
-                    step_miss.append(n.num_misses)
+                    step_miss.append(n.num_pfs_misses)
                     bsz.append(n.num_real)
                     msc.append(n.num_misses)
                 max_miss.append(max(step_miss) if step_miss else 0)
@@ -221,4 +265,5 @@ class Schedule:
             per_step_max_miss=np.asarray(max_miss, dtype=np.int64),
             batch_sizes=np.asarray(bsz, dtype=np.int64).reshape(nsteps, nodes),
             miss_counts=np.asarray(msc, dtype=np.int64).reshape(nsteps, nodes),
+            total_peer_fetches=peer,
         )

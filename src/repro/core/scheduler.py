@@ -11,6 +11,10 @@ Turns the pre-determined multi-epoch shuffle into a fully materialized
      node performs the same number of PFS reads.
   4. **Aggregated chunking** (§4.4): coalesce each node's miss list into
      ranged reads.
+  4b. **Peer-fetch planning** (our extension, DESIGN.md §6): misses resident
+     in a sibling node's simulated buffer (capacity-spilled hits) are served
+     over the interconnect instead of the PFS whenever the cost model says a
+     chunk's ranged read is not amortized by co-resident true misses.
   5. **Belady buffer simulation**: the full future access string is known,
      so eviction decisions are clairvoyant-optimal and are *recorded in the
      plan* — the runtime replays them instead of re-deciding.
@@ -36,7 +40,15 @@ import numpy as np
 from repro.core import balance as balance_mod
 from repro.core import chunking, epoch_order, locality, shuffle
 from repro.core.buffer import BeladyBuffer
-from repro.core.plan import ChunkRead, EpochPlan, NodeStepPlan, Schedule, StepPlan
+from repro.core.costmodel import PeerCostModel
+from repro.core.plan import (
+    ChunkRead,
+    EpochPlan,
+    NodeStepPlan,
+    PeerFetch,
+    Schedule,
+    StepPlan,
+)
 
 __all__ = ["SolarConfig", "OfflineScheduler", "build_next_use_index"]
 
@@ -62,6 +74,12 @@ class SolarConfig:
     enable_chunking: bool = True
     #: admit chunk-waste samples to the buffer when Belady says they help.
     admit_waste: bool = True
+    #: plan the peer-fetch tier (DESIGN.md §6): misses resident in a sibling
+    #: node's simulated buffer become interconnect fetches instead of PFS
+    #: reads when the cost model prefers it.
+    enable_peer: bool = False
+    #: peer-vs-PFS pricing for the chunk-level decision; defaults when None.
+    peer_cost: PeerCostModel | None = None
     seed: int = 0
 
     @property
@@ -194,20 +212,43 @@ class OfflineScheduler:
     ) -> StepPlan:
         cfg = self.config
         pos_of = {int(s): base + i for i, s in enumerate(batch.tolist())}
+        peer_cost = (cfg.peer_cost or PeerCostModel()) if cfg.enable_peer else None
 
+        def find_holders(samples):
+            """Nodes buffering each sample at the *start* of this step."""
+            return {
+                s: [p for p in range(cfg.num_nodes) if s in buffers[p]]
+                for s in samples
+            }
+
+        holders: dict[int, list[int]] = {}
         if cfg.enable_locality:
             # Without O2 (balance) every node trains exactly local_batch
             # samples, so hits must not exceed that quota either.
             hit_cap = cfg.capacity if cfg.enable_balance else cfg.local_batch
             hits, misses = locality.assign_hits(batch, buffers, hit_cap)
             hit_counts = np.asarray([len(h) for h in hits], dtype=np.int64)
-            miss_assign = balance_mod.distribute_misses(
-                misses,
-                hit_counts,
-                cfg.local_batch,
-                cfg.capacity,
-                balance=cfg.enable_balance,
-            )
+            if peer_cost is not None:
+                # Misses with a holder are capacity-spilled hits: the remap
+                # wanted to train them on their holder but B_cap was full.
+                holders = find_holders(misses)
+                miss_assign, peer_assign = balance_mod.distribute_tiered(
+                    [s for s in misses if not holders[s]],
+                    [s for s in misses if holders[s]],
+                    hit_counts,
+                    cfg.local_batch,
+                    cfg.capacity,
+                    balance=cfg.enable_balance,
+                )
+            else:
+                miss_assign = balance_mod.distribute_misses(
+                    misses,
+                    hit_counts,
+                    cfg.local_batch,
+                    cfg.capacity,
+                    balance=cfg.enable_balance,
+                )
+                peer_assign = [[] for _ in range(cfg.num_nodes)]
         else:
             split = shuffle.default_node_assignment(batch, cfg.num_nodes)
             hits, miss_assign = [], []
@@ -216,47 +257,74 @@ class OfflineScheduler:
                 m = [int(s) for s in ids.tolist() if s not in buffers[n]]
                 hits.append(h)
                 miss_assign.append(m)
+            peer_assign = [[] for _ in range(cfg.num_nodes)]
+            if peer_cost is not None:
+                holders = find_holders([s for m in miss_assign for s in m])
+                peer_assign = [[s for s in m if holders[s]] for m in miss_assign]
+                miss_assign = [
+                    [s for s in m if not holders[s]] for m in miss_assign
+                ]
 
+        #: per-step serve counts, so peer traffic spreads over source nodes.
+        serve_load = [0] * cfg.num_nodes
         node_plans: list[NodeStepPlan] = []
         for n in range(cfg.num_nodes):
-            h, m = hits[n], miss_assign[n]
+            h = hits[n]
+            m = sorted(miss_assign[n] + peer_assign[n])
             if cfg.enable_chunking:
                 chunks = chunking.plan_chunks(m, cfg.max_chunk, cfg.max_waste)
             else:
-                chunks = tuple(ChunkRead(s, s + 1, 1) for s in sorted(m))
+                chunks = tuple(ChunkRead(s, s + 1, 1) for s in m)
+
+            peer_fetches: list[PeerFetch] = []
+            if peer_assign[n]:
+                cand = set(peer_assign[n])
+                kept: list[ChunkRead] = []
+                for c in chunks:
+                    wanted = [s for s in m if c.start <= s < c.stop]
+                    # Chunk-level decision: a chunk whose PFS read is
+                    # amortized by non-peer misses is issued anyway, so
+                    # peer-resident riders stay on it for free.
+                    if all(s in cand for s in wanted) and peer_cost.prefer_peer(
+                        len(wanted), c.span
+                    ):
+                        for s in wanted:
+                            hs = holders[s]
+                            if n in hs:
+                                src = n  # bounced back home: free local read
+                            else:
+                                src = min(hs, key=lambda p: (serve_load[p], p))
+                                serve_load[src] += 1
+                            peer_fetches.append(PeerFetch(s, src))
+                    else:
+                        kept.append(c)
+                chunks = tuple(kept)
 
             buf = buffers[n]
-            evicted: list[int] = []
-            admitted: list[int] = []
+            start_resident = buf.resident
             for s in h:
                 buf.update_next_use(s, int(next_use[pos_of[s]]))
             for s in m:
-                v = buf.admit(s, int(next_use[pos_of[s]]))
-                if v != s and s in buf:
-                    admitted.append(s)
-                if v is not None and v != s:
-                    evicted.append(v)
+                buf.admit(s, int(next_use[pos_of[s]]))
             if cfg.admit_waste:
-                wanted = set(m)
+                wanted_set = set(m)
                 for c in chunks:
                     for w in range(c.start, c.stop):
-                        if w in wanted or w in buf:
+                        if w in wanted_set or w in buf:
                             continue
                         # A copy on any node already serves future accesses
                         # (locality remap hits it there): admitting another
                         # copy would only evict useful residents.
                         if any(w in other for other in buffers):
                             continue
-                        v = buf.admit(w, occ.next_after(w, base))
-                        if v != w and w in buf:
-                            admitted.append(w)
-                        if v is not None and v != w:
-                            evicted.append(v)
+                        buf.admit(w, occ.next_after(w, base))
 
-            # Reconcile intra-step churn (admit -> evict -> re-admit) so the
-            # recorded delta matches the buffer's end-of-step state exactly.
-            admitted = sorted({s for s in admitted if s in buf})
-            evicted = sorted({s for s in evicted if s not in buf})
+            # The recorded delta is the start-vs-end resident-set difference,
+            # so intra-step churn (admit -> evict -> re-admit) cancels out and
+            # replaying deltas reproduces the simulated occupancy exactly.
+            end_resident = buf.resident
+            admitted = sorted(end_resident - start_resident)
+            evicted = sorted(start_resident - end_resident)
 
             ids = np.asarray(h + m, dtype=np.int64)
             mask = np.zeros(ids.size, dtype=bool)
@@ -269,6 +337,7 @@ class OfflineScheduler:
                     chunks=chunks,
                     admissions=np.asarray(admitted, dtype=np.int64),
                     evictions=np.asarray(evicted, dtype=np.int64),
+                    peer_fetches=tuple(peer_fetches),
                 )
             )
         return StepPlan(step=step, nodes=node_plans)

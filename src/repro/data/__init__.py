@@ -25,8 +25,8 @@ from repro.data.loaders import (
     NoPFSLoader,
     SolarLoader,
     StepBatch,
-    make_loader,
 )
+from repro.data.peer import PeerExchange, SharedViewTransport, SocketTransport
 from repro.data.pipeline import LoaderSpec, build_pipeline, build_store
 from repro.data.prefetch import PrefetchExecutor
 from repro.data.storage import ChunkStore, create_synthetic_store
@@ -43,7 +43,10 @@ __all__ = [
     "create_synthetic_store",
     "get_backend",
     "open_store",
+    "PeerExchange",
     "PrefetchExecutor",
+    "SharedViewTransport",
+    "SocketTransport",
     "DeepIOLoader",
     "LoaderReport",
     "LOADERS",
@@ -52,5 +55,4 @@ __all__ = [
     "NoPFSLoader",
     "SolarLoader",
     "StepBatch",
-    "make_loader",
 ]

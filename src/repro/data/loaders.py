@@ -31,12 +31,11 @@ from __future__ import annotations
 
 import dataclasses
 import time
-import warnings
 
 import numpy as np
 
 from repro.core.buffer import BeladyBuffer, LRUBuffer
-from repro.core.costmodel import PFSCostModel
+from repro.core.costmodel import PeerCostModel, PFSCostModel
 from repro.core.plan import Schedule
 from repro.core.scheduler import OfflineScheduler, SolarConfig, build_next_use_index
 from repro.core.shuffle import (
@@ -55,7 +54,6 @@ __all__ = [
     "DeepIOLoader",
     "SolarLoader",
     "LOADERS",
-    "make_loader",
 ]
 
 
@@ -96,9 +94,11 @@ class LoaderReport:
     num_nodes: int
     #: per-(step, node) PFS sample counts (misses incl. chunk waste).
     pfs_counts: list[list[int]] = dataclasses.field(default_factory=list)
-    #: per-(step, node) miss counts (wanted samples only).
+    #: per-(step, node) PFS miss counts (wanted samples only; misses served
+    #: from a remote buffer are in ``remote_counts`` instead).
     miss_counts: list[list[int]] = dataclasses.field(default_factory=list)
-    #: per-(step, node) remote-buffer fetch counts (NoPFS only).
+    #: per-(step, node) remote-buffer fetch counts (NoPFS online fetches /
+    #: SOLAR planned peer fetches).
     remote_counts: list[list[int]] = dataclasses.field(default_factory=list)
     #: per-(step, node) batch sizes.
     batch_sizes: list[list[int]] = dataclasses.field(default_factory=list)
@@ -120,6 +120,10 @@ class LoaderReport:
         return self.total_hits / self.total_samples if self.total_samples else 0.0
 
     @property
+    def total_remote(self) -> int:
+        return int(np.sum(self.remote_counts)) if self.remote_counts else 0
+
+    @property
     def max_step_pfs(self) -> np.ndarray:
         return np.asarray(self.pfs_counts).max(axis=1)
 
@@ -128,6 +132,7 @@ class LoaderReport:
             "loader": self.name,
             "numPFS": self.total_pfs,
             "misses": self.total_misses,
+            "remote_fetches": self.total_remote,
             "hit_rate": round(self.hit_rate, 4),
             "modeled_time_s": round(self.modeled_time_s, 3),
             "wall_time_s": round(self.wall_time_s, 3),
@@ -232,7 +237,12 @@ class _Base:
         per_node_batch,
         per_node_hits,
         per_node_remote=None,
+        per_node_remote_billable=None,
     ) -> None:
+        """``per_node_remote_billable`` prices the remote fetches when it
+        differs from the reported count — SOLAR's self-source peer fetches
+        (sample bounced back to its own holder) are counted but cost no
+        transfer (DESIGN.md §6)."""
         r = self.report
         r.pfs_counts.append([sum(c.span for c in cs) for cs in per_node_chunks])
         r.miss_counts.append(list(per_node_miss))
@@ -242,11 +252,13 @@ class _Base:
         )
         r.total_hits += int(sum(per_node_hits))
         r.total_samples += int(sum(per_node_batch))
+        if per_node_remote_billable is None:
+            per_node_remote_billable = per_node_remote
         node_times = []
         for n, cs in enumerate(per_node_chunks):
             t = self.cost.chunks_time(cs)
-            if per_node_remote:
-                t += self.remote_time(per_node_remote[n])
+            if per_node_remote_billable:
+                t += self.remote_time(per_node_remote_billable[n])
             node_times.append(t)
         r.modeled_time_s += max(node_times) if node_times else 0.0
 
@@ -254,23 +266,30 @@ class _Base:
                     latency_s: float = 5e-5) -> float:
         return k * (latency_s + self.store.sample_bytes / interconnect_bps)
 
-    def _fetch(self, node: int, ids, chunks, delta=None) -> np.ndarray | None:
+    def _fetch(
+        self, node: int, ids, chunks, delta=None, extra=None
+    ) -> np.ndarray | None:
         """Materialize one node's batch: buffer hits from RAM, misses via reads."""
         if not self.collect_data:
             return None
         t0 = time.perf_counter()
         arrays = self.store.read_ranges([(c.start, c.stop) for c in chunks])
-        out = self._assemble(node, ids, chunks, arrays, delta)
+        out = self._assemble(node, ids, chunks, arrays, delta, extra=extra)
         self.report.wall_time_s += time.perf_counter() - t0
         return out
 
-    def _assemble(self, node: int, ids, chunks, chunk_arrays, delta=None) -> np.ndarray:
+    def _assemble(
+        self, node: int, ids, chunks, chunk_arrays, delta=None, extra=None
+    ) -> np.ndarray:
         """Gather one node's batch rows from pre-read chunks + the buffer mirror.
 
         Vectorized: misses come out of the concatenated chunk arrays via
         ``np.searchsorted``, hits out of the :class:`_DataMirror` arena, and
         anything uncovered (e.g. NoPFS remote-buffer fetches) falls back to a
-        coalesced scattered read.
+        coalesced scattered read.  ``extra`` is an optional ``(ids, rows)``
+        pair of already-fetched samples (the planned peer tier) merged into
+        the fetched pool, so peer rows serve both batch assembly and buffer
+        admission without touching the store.
         """
         ids = np.asarray(ids, np.int64)
         shape, dtype = self.store.sample_shape, self.store.dtype
@@ -283,12 +302,19 @@ class _Base:
                 if len(chunk_arrays) == 1
                 else np.concatenate(chunk_arrays)
             )
-            if fetched_ids.size > 1 and not (np.diff(fetched_ids) > 0).all():
-                order = np.argsort(fetched_ids, kind="stable")
-                fetched_ids, fetched_data = fetched_ids[order], fetched_data[order]
         else:
             fetched_ids = np.empty(0, np.int64)
             fetched_data = np.empty((0,) + shape, dtype)
+        if extra is not None and extra[0].size:
+            fetched_ids = np.concatenate([fetched_ids, extra[0]])
+            fetched_data = (
+                np.concatenate([fetched_data, extra[1]])
+                if fetched_data.size
+                else extra[1]
+            )
+        if fetched_ids.size > 1 and not (np.diff(fetched_ids) > 0).all():
+            order = np.argsort(fetched_ids, kind="stable")
+            fetched_ids, fetched_data = fetched_ids[order], fetched_data[order]
         out = np.empty((ids.size,) + shape, dtype)
         need = np.ones(ids.size, bool)
         if fetched_ids.size and ids.size:
@@ -581,18 +607,41 @@ class DeepIOLoader(_Base):
 
 
 class SolarLoader(_Base):
-    """Executes the SOLAR offline schedule against the store."""
+    """Executes the SOLAR offline schedule against the store.
+
+    With ``enable_peer`` set on the :class:`SolarConfig`, the schedule's
+    planned peer fetches (DESIGN.md §6) are served through a
+    :class:`~repro.data.peer.PeerExchange` — in-process shared-view transport
+    by default, or any :class:`~repro.data.peer.PeerTransport` passed as
+    ``peer_transport`` — instead of touching the PFS.
+    """
 
     name = "solar"
 
-    def __init__(self, *args, solar_config: SolarConfig | None = None, **kwargs):
+    def __init__(
+        self,
+        *args,
+        solar_config: SolarConfig | None = None,
+        peer_transport=None,
+        **kwargs,
+    ):
         super().__init__(*args, **kwargs)
-        self.solar_config = solar_config or SolarConfig(
+        cfg = solar_config or SolarConfig(
             num_nodes=self.num_nodes,
             local_batch=self.local_batch,
             buffer_size=self.buffer_size,
             seed=self.seed,
         )
+        if cfg.enable_peer and cfg.peer_cost is None:
+            # Price the peer-vs-PFS decision with this store's real sample
+            # size and the loader's PFS model.
+            cfg = dataclasses.replace(
+                cfg,
+                peer_cost=PeerCostModel(
+                    sample_bytes=self.store.sample_bytes, pfs=self.cost
+                ),
+            )
+        self.solar_config = cfg
         self.scheduler = OfflineScheduler(self.solar_config)
         t0 = time.perf_counter()
         self.schedule: Schedule = self.scheduler.build(
@@ -602,10 +651,25 @@ class SolarLoader(_Base):
         # Buffer occupancy per node, maintained from the plan's recorded
         # admission/eviction deltas — no per-step resident-set rebuild.
         self._occupancy = [0] * self.num_nodes
+        self.peer_exchange = None
+        if cfg.enable_peer:
+            from repro.data.peer import PeerExchange, SharedViewTransport
+
+            self.peer_exchange = PeerExchange(
+                peer_transport or SharedViewTransport(self._mirror),
+                self.store.sample_shape,
+                self.store.dtype,
+            )
 
     @property
     def capacity(self) -> int:
         return self.schedule.capacity
+
+    def remote_time(self, k: int, **kwargs) -> float:
+        cfg = self.solar_config
+        if cfg.peer_cost is not None:
+            return cfg.peer_cost.fetch_time(k)
+        return super().remote_time(k, **kwargs)
 
     def reset_execution(self) -> None:
         """Forget buffer state so the schedule can be replayed from step 0."""
@@ -624,22 +688,56 @@ class SolarLoader(_Base):
             for sp in ep.steps:
                 yield ep, sp
 
-    def execute_step(self, ep, sp, chunk_arrays=None) -> StepBatch:
+    def gather_peers(self, sp) -> list | None:
+        """Serve every node's planned peer fetches for one step, up front.
+
+        Must run before any of the step's admission/eviction deltas are
+        applied (the plan guarantees source residency only at step *start* —
+        a source may evict the fetched sample in this very step, see
+        :mod:`repro.data.peer`).  Returns per-node ``(ids, rows)`` pairs (or
+        ``None`` entries), ready for :meth:`execute_step`'s assembly; samples
+        the transport could not serve are simply absent and fall back to
+        store reads downstream.
+        """
+        if self.peer_exchange is None or not self.collect_data:
+            return None
+        t0 = time.perf_counter()
+        out = []
+        for npn in sp.nodes:
+            if npn.peer_fetches:
+                ids, rows, _missing = self.peer_exchange.gather(npn.peer_fetches)
+                out.append((ids, rows))
+            else:
+                out.append(None)
+        self.report.wall_time_s += time.perf_counter() - t0
+        return out
+
+    def execute_step(self, ep, sp, chunk_arrays=None, peer_arrays=None) -> StepBatch:
         """Account + assemble one planned step into a :class:`StepBatch`.
 
         ``chunk_arrays`` optionally supplies per-node pre-read chunk data (the
         async pipeline reads them concurrently ahead of time); when ``None``
         and ``collect_data`` is set, chunk reads are issued synchronously.
-        The plan's recorded admissions/evictions are replayed as deltas so the
-        data buffer mirrors the Belady simulation exactly.
+        ``peer_arrays`` optionally supplies the step's already-gathered peer
+        rows (the async pipeline overlaps :meth:`gather_peers` with in-flight
+        chunk reads); when ``None`` they are gathered here, before any delta
+        is applied.  The plan's recorded admissions/evictions are replayed as
+        deltas so the data buffer mirrors the Belady simulation exactly.
         """
         chunks = [n.chunks for n in sp.nodes]
         self._account(
             chunks,
-            [n.num_misses for n in sp.nodes],
+            [n.num_pfs_misses for n in sp.nodes],
             [n.num_real for n in sp.nodes],
             [n.num_hits for n in sp.nodes],
+            per_node_remote=[n.num_peer for n in sp.nodes],
+            per_node_remote_billable=[
+                sum(1 for f in n.peer_fetches if f.source != n.node)
+                for n in sp.nodes
+            ],
         )
+        if peer_arrays is None:
+            peer_arrays = self.gather_peers(sp)
         data = [] if self.collect_data else None
         for n, npn in enumerate(sp.nodes):
             self._occupancy[n] += npn.admissions.size - npn.evictions.size
@@ -647,13 +745,17 @@ class SolarLoader(_Base):
             if not self.collect_data:
                 continue
             delta = (npn.admissions, npn.evictions)
+            extra = peer_arrays[n] if peer_arrays is not None else None
             if chunk_arrays is None:
-                data.append(self._fetch(n, npn.sample_ids, npn.chunks, delta))
+                data.append(
+                    self._fetch(n, npn.sample_ids, npn.chunks, delta, extra=extra)
+                )
             else:
                 t0 = time.perf_counter()
                 data.append(
                     self._assemble(
-                        n, npn.sample_ids, npn.chunks, chunk_arrays[n], delta
+                        n, npn.sample_ids, npn.chunks, chunk_arrays[n], delta,
+                        extra=extra,
                     )
                 )
                 self.report.wall_time_s += time.perf_counter() - t0
@@ -675,39 +777,3 @@ class SolarLoader(_Base):
 LOADERS = {
     c.name: c for c in (NaiveLoader, LRULoader, NoPFSLoader, DeepIOLoader, SolarLoader)
 }
-_LOADERS = LOADERS  # backwards-compat alias (pre-backend-API name)
-
-
-def make_loader(
-    name: str,
-    *args,
-    prefetch_depth: int | None = None,
-    num_workers: int | None = None,
-    **kwargs,
-):
-    """Deprecated: build pipelines with
-    :func:`repro.data.pipeline.build_pipeline` \\(:class:`~repro.data.
-    pipeline.LoaderSpec`\\) instead — it validates the whole configuration
-    (loader kind, storage backend, scheduler config, prefetch shape) in one
-    place.  This shim survives exactly one PR for migration.
-
-    Builds a loader; with ``prefetch_depth`` set, wraps it in the async
-    :class:`~repro.data.prefetch.PrefetchExecutor` (``num_workers`` I/O
-    threads, ``prefetch_depth`` steps of read-ahead)."""
-    warnings.warn(
-        "make_loader is deprecated; use "
-        "repro.data.pipeline.build_pipeline(LoaderSpec(...)) instead",
-        DeprecationWarning,
-        stacklevel=2,
-    )
-    try:
-        loader = LOADERS[name](*args, **kwargs)
-    except KeyError:
-        raise ValueError(f"unknown loader {name!r}; have {sorted(LOADERS)}") from None
-    if prefetch_depth:
-        from repro.data.prefetch import PrefetchExecutor
-
-        return PrefetchExecutor(
-            loader, depth=prefetch_depth, num_workers=num_workers or 4
-        )
-    return loader

@@ -1,0 +1,160 @@
+"""Peer-fetch runtime: serving planned inter-node buffer fetches.
+
+The offline scheduler records, per node-step, which misses are served from a
+sibling node's buffer instead of the PFS (:class:`~repro.core.plan.PeerFetch`,
+DESIGN.md §6).  This module executes those fetches behind one transport
+interface:
+
+  * :class:`SharedViewTransport` — the in-process emulation used by the
+    loader zoo and the benchmarks: every "node" is a
+    :class:`~repro.data.loaders._DataMirror` in this process, so a fetch is
+    a vectorized arena gather.  This is the semantic reference: digest
+    parity against the PFS path is proved against it.
+  * :class:`SocketTransport` — the interface stub for a real deployment,
+    where each node runs a serving thread over its buffer arena and fetches
+    are RPCs on the training interconnect.  Construction (address book,
+    knobs) works so configs can be written and validated today; ``fetch``
+    raises :class:`NotImplementedError` until the wire protocol lands.
+
+Ordering contract: all of a step's peer fetches must be issued against the
+buffer state at the *start* of the step — i.e. before any node applies that
+step's admission/eviction deltas — because the plan guarantees residency
+only at step start (the source may evict the sample in the same step).
+:meth:`repro.data.loaders.SolarLoader.gather_peers` upholds this by
+gathering every node's peer rows before ``execute_step`` touches a mirror.
+
+Samples a transport cannot produce (possible only if the ordering contract
+is broken, or a remote node died) are *not* errors here: the exchange
+reports them as fallbacks and the loader re-reads them from the PFS, so the
+tier degrades to correctness-preserving slow paths, never wrong bytes.
+"""
+from __future__ import annotations
+
+from typing import Callable, Mapping, Protocol, Sequence, runtime_checkable
+
+import numpy as np
+
+from repro.core.plan import PeerFetch
+
+__all__ = [
+    "PeerTransport",
+    "SharedViewTransport",
+    "SocketTransport",
+    "PeerExchange",
+]
+
+
+@runtime_checkable
+class PeerTransport(Protocol):
+    """One fetch primitive: rows of ``ids`` out of ``source``'s buffer.
+
+    Returns ``(rows, ok)`` where ``ok`` is a boolean mask over ``ids`` and
+    ``rows`` holds one row per True entry, in ``ids[ok]`` order.
+    """
+
+    def fetch(
+        self, source: int, ids: np.ndarray
+    ) -> tuple[np.ndarray, np.ndarray]: ...
+
+
+class SharedViewTransport:
+    """In-process transport over the per-node buffer mirrors.
+
+    ``mirror_of`` resolves a node id to its live
+    :class:`~repro.data.loaders._DataMirror` (the loader passes its own
+    accessor, so mirrors created lazily are always current).  Rows are
+    copied out of the arena (numpy fancy indexing), so later evictions on
+    the source cannot corrupt an already-fetched batch.
+    """
+
+    def __init__(self, mirror_of: Callable[[int], object]):
+        self._mirror_of = mirror_of
+
+    def fetch(self, source: int, ids: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        mirror = self._mirror_of(source)
+        slots = mirror.lookup(np.asarray(ids, np.int64))
+        ok = slots >= 0
+        return mirror.rows(slots[ok]), ok
+
+
+class SocketTransport:
+    """Socket-RPC transport stub: same interface, wire protocol TBD.
+
+    ``endpoints`` maps node id -> ``(host, port)`` of that node's buffer
+    server.  The constructor validates the address book so deployment
+    configs can be built and round-tripped now; :meth:`fetch` raises until
+    the serving side exists.
+    """
+
+    def __init__(
+        self,
+        endpoints: Mapping[int, tuple[str, int]],
+        *,
+        timeout_s: float = 1.0,
+    ):
+        self.endpoints = {
+            int(node): (str(host), int(port))
+            for node, (host, port) in endpoints.items()
+        }
+        self.timeout_s = float(timeout_s)
+
+    def fetch(self, source: int, ids: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        if source not in self.endpoints:
+            raise KeyError(f"no endpoint registered for node {source}")
+        raise NotImplementedError(
+            "SocketTransport.fetch: the peer wire protocol is not implemented "
+            "yet; use SharedViewTransport (in-process) or fall back to PFS "
+            "reads by disabling peer_fetch"
+        )
+
+
+class PeerExchange:
+    """Executes one node-step's planned peer fetches through a transport.
+
+    Groups fetches by source node (one transport call per source), tracks
+    served/fallback counts and per-source serve totals, and returns only the
+    rows the transport produced — callers route the rest to the PFS.
+    """
+
+    def __init__(
+        self,
+        transport: PeerTransport,
+        sample_shape: tuple[int, ...],
+        dtype,
+    ):
+        self.transport = transport
+        self.sample_shape = tuple(int(x) for x in sample_shape)
+        self.dtype = np.dtype(dtype)
+        self.served = 0
+        self.fallbacks = 0
+        #: samples served *by* each source node (serving-load accounting).
+        self.served_by_source: dict[int, int] = {}
+
+    def gather(
+        self, fetches: Sequence[PeerFetch]
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Fetch every sample in ``fetches`` from its planned source.
+
+        Returns ``(ids, rows, missing_ids)``: ``rows[i]`` is the sample
+        ``ids[i]``, and ``missing_ids`` lists samples the transport could
+        not serve (counted as fallbacks; the caller reads them from the
+        store).
+        """
+        if not fetches:
+            empty = np.empty(0, np.int64)
+            return empty, np.empty((0,) + self.sample_shape, self.dtype), empty
+        ids = np.asarray([f.sample for f in fetches], np.int64)
+        srcs = np.asarray([f.source for f in fetches], np.int64)
+        rows = np.empty((ids.size,) + self.sample_shape, self.dtype)
+        ok_all = np.zeros(ids.size, bool)
+        for src in np.unique(srcs).tolist():
+            sel = np.flatnonzero(srcs == src)
+            got, ok = self.transport.fetch(src, ids[sel])
+            rows[sel[ok]] = got
+            ok_all[sel[ok]] = True
+            self.served_by_source[src] = (
+                self.served_by_source.get(src, 0) + int(ok.sum())
+            )
+        self.served += int(ok_all.sum())
+        self.fallbacks += int((~ok_all).sum())
+        return ids[ok_all], rows[ok_all], ids[~ok_all]

@@ -29,7 +29,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Any
 
-from repro.core.costmodel import PFSCostModel
+from repro.core.costmodel import PeerCostModel, PFSCostModel
 from repro.core.scheduler import SolarConfig
 from repro.data.backends.base import backend_names, create_store, open_store
 
@@ -64,6 +64,12 @@ class LoaderSpec:
     prefetch_depth: int = 0
     #: I/O threads for schedule-driven parallel chunk reads.
     num_workers: int = 4
+    #: plan + execute the peer-fetch tier (solar loader only, DESIGN.md §6):
+    #: capacity-spilled misses are served from sibling node buffers instead
+    #: of the PFS when the cost model prefers it.
+    peer_fetch: bool = False
+    #: peer-vs-PFS pricing override; derived from the store when None.
+    peer_cost: PeerCostModel | None = None
     #: scheduler overrides (solar loader only); derived from the fields
     #: above when None.
     solar: SolarConfig | None = None
@@ -111,6 +117,25 @@ class LoaderSpec:
                             f"solar config {cfg_f}={getattr(self.solar, cfg_f)} "
                             f"contradicts spec {spec_f}={getattr(self, spec_f)}"
                         )
+                if self.peer_fetch and not self.solar.enable_peer:
+                    errs.append(
+                        "peer_fetch=True contradicts solar config with "
+                        "enable_peer=False"
+                    )
+                if (
+                    self.peer_cost is not None
+                    and self.solar.peer_cost is not None
+                    and self.solar.peer_cost != self.peer_cost
+                ):
+                    errs.append(
+                        "peer_cost set on both the spec and the solar config"
+                    )
+        if self.peer_fetch and self.loader != "solar":
+            errs.append("peer_fetch requires loader='solar'")
+        if self.peer_cost is not None and not (
+            self.peer_fetch or (self.solar is not None and self.solar.enable_peer)
+        ):
+            errs.append("peer_cost is set but the peer-fetch tier is disabled")
         if errs:
             raise ValueError("invalid LoaderSpec: " + "; ".join(errs))
         return self
@@ -155,8 +180,21 @@ def build_pipeline(spec: LoaderSpec, *, store=None):
     kwargs: dict = dict(
         cost_model=spec.cost_model, collect_data=spec.collect_data
     )
-    if spec.loader == "solar" and spec.solar is not None:
-        kwargs["solar_config"] = spec.solar
+    if spec.loader == "solar":
+        if spec.solar is not None:
+            solar = spec.solar
+            if spec.peer_cost is not None and solar.peer_cost is None:
+                solar = dataclasses.replace(solar, peer_cost=spec.peer_cost)
+            kwargs["solar_config"] = solar
+        elif spec.peer_fetch:
+            kwargs["solar_config"] = SolarConfig(
+                num_nodes=spec.num_nodes,
+                local_batch=spec.local_batch,
+                buffer_size=spec.buffer_size,
+                seed=spec.seed,
+                enable_peer=True,
+                peer_cost=spec.peer_cost,
+            )
     loader = LOADERS[spec.loader](
         store,
         spec.num_nodes,

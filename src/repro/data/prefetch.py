@@ -12,7 +12,10 @@ does exactly that:
     thread pool, so PFS calls for *different* nodes and *future* steps are in
     flight concurrently; batches are then assembled strictly in plan order
     (buffer-mirror deltas are order-dependent) and handed to the consumer
-    through a bounded queue.
+    through a bounded queue.  A step's planned peer fetches (DESIGN.md §6)
+    are gathered at assembly time — the only point where the buffer mirrors
+    are in the start-of-step state the plan priced — overlapping the tail of
+    that step's still-in-flight chunk reads.
   * **iterator mode** (all other loaders): the loader's own ``__iter__`` runs
     on the pipeline thread behind the same bounded queue — reads overlap the
     consumer's compute, but intra-step reads stay sequential because these
@@ -206,6 +209,7 @@ class PrefetchExecutor:
     def _produce_schedule(self, run: _Run) -> None:
         ld = self.loader
         collect = ld.collect_data
+        gather_peers = getattr(ld, "gather_peers", None)
         steps = iter(ld.plan_steps())
         #: (EpochPlan, StepPlan, per-node futures) issued but not yet assembled.
         pending: deque = deque()
@@ -230,8 +234,17 @@ class PrefetchExecutor:
             if not pending:
                 return
             ep, sp, futs = pending.popleft()
+            # Peer fetches are legal exactly now — the previous step's deltas
+            # are applied, this step's are not — and they overlap the tail of
+            # this step's in-flight chunk reads.
+            peer_arrays = gather_peers(sp) if gather_peers is not None else None
             chunk_arrays = [f.result() for f in futs] if futs else None
-            sb = ld.execute_step(ep, sp, chunk_arrays=chunk_arrays)
+            if gather_peers is not None:
+                sb = ld.execute_step(
+                    ep, sp, chunk_arrays=chunk_arrays, peer_arrays=peer_arrays
+                )
+            else:
+                sb = ld.execute_step(ep, sp, chunk_arrays=chunk_arrays)
             if not self._put(run, sb):
                 break
         # Cancelled: wait out in-flight reads so pool shutdown is clean.

@@ -48,6 +48,10 @@ def main():
                     help="pipeline read-ahead in steps (0 = synchronous)")
     ap.add_argument("--num-workers", type=int, default=4,
                     help="I/O threads for schedule-driven chunk reads")
+    ap.add_argument("--peer-fetch", action="store_true",
+                    help="plan + execute the peer-fetch buffer tier "
+                         "(solar loader only): capacity-spilled misses are "
+                         "served from sibling node buffers instead of the PFS")
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--checkpoint-dir", default=None)
     ap.add_argument("--checkpoint-every", type=int, default=25)
@@ -65,7 +69,7 @@ def main():
         num_nodes=args.nodes, local_batch=args.local_batch,
         num_epochs=args.epochs, buffer_size=args.buffer, seed=0,
         collect_data=True, prefetch_depth=args.prefetch_depth,
-        num_workers=args.num_workers,
+        num_workers=args.num_workers, peer_fetch=args.peer_fetch,
     )
     store = build_store(
         spec, create=True,

@@ -399,12 +399,12 @@ def test_hdf5_exists_rejects_foreign_files(tmp_path, h5_path):
     assert Hdf5Backend.exists(h5_path)
 
 
-def test_make_loader_shim_still_works_but_warns(stores):
-    from repro.data import make_loader
+def test_make_loader_shim_removed():
+    # The deprecation shim survived exactly one PR (its documented window);
+    # pipelines are built via build_pipeline(LoaderSpec(...)) now.
+    import repro.data
 
-    with pytest.warns(DeprecationWarning, match="build_pipeline"):
-        ld = make_loader("naive", stores["binary"], 2, 8, 1, 16, 0)
-    assert sum(1 for _ in ld) == 512 // 16
+    assert not hasattr(repro.data, "make_loader")
 
 
 def test_all_backends_registered():

@@ -4,7 +4,16 @@ import numpy as np
 import pytest
 
 from repro.core.scheduler import SolarConfig
-from repro.data import create_synthetic_store, make_loader
+from repro.data import LoaderSpec, build_pipeline, create_synthetic_store
+
+
+def _ld(name, store, num_nodes, local_batch, num_epochs, buffer_size, seed=0, **kw):
+    solar = kw.pop("solar_config", None)
+    return build_pipeline(LoaderSpec(
+        loader=name, store=store, num_nodes=num_nodes, local_batch=local_batch,
+        num_epochs=num_epochs, buffer_size=buffer_size, seed=seed, solar=solar,
+        **kw,
+    ))
 
 
 @pytest.fixture(scope="module")
@@ -21,7 +30,7 @@ ALL = ["naive", "lru", "nopfs", "deepio", "solar"]
 @pytest.mark.parametrize("name", ALL)
 def test_loader_delivers_correct_samples(store, name):
     store.reset_counters()
-    ld = make_loader(name, store, 4, 8, 3, 64, 0, collect_data=True)
+    ld = _ld(name, store, 4, 8, 3, 64, 0, collect_data=True)
     steps = 0
     for sb in ld:
         steps += 1
@@ -40,7 +49,7 @@ def test_loader_delivers_correct_samples(store, name):
 def test_loader_trains_every_sample_each_epoch(store, name):
     """Full randomization loaders must touch each sample exactly once/epoch
     (DeepIO intentionally does not — that is its accuracy compromise)."""
-    ld = make_loader(name, store, 4, 8, 1, 64, 0, collect_data=False)
+    ld = _ld(name, store, 4, 8, 1, 64, 0, collect_data=False)
     seen = []
     for sb in ld:
         for ids in sb.node_ids:
@@ -51,7 +60,7 @@ def test_loader_trains_every_sample_each_epoch(store, name):
 def test_solar_beats_naive_and_lru_on_misses(store):
     reports = {}
     for name in ["naive", "lru", "nopfs", "solar"]:
-        ld = make_loader(name, store, 4, 8, 4, 64, 0)
+        ld = _ld(name, store, 4, 8, 4, 64, 0)
         for _ in ld:
             pass
         reports[name] = ld.report
@@ -62,7 +71,7 @@ def test_solar_beats_naive_and_lru_on_misses(store):
 
 
 def test_solar_balances_loading(store):
-    ld = make_loader("solar", store, 4, 8, 3, 64, 0)
+    ld = _ld("solar", store, 4, 8, 3, 64, 0)
     for _ in ld:
         pass
     miss = np.asarray(ld.report.miss_counts)
@@ -72,7 +81,7 @@ def test_solar_balances_loading(store):
 def test_solar_unbalanced_ablation(store):
     cfg = SolarConfig(num_nodes=4, local_batch=8, buffer_size=64,
                       enable_balance=False)
-    ld = make_loader("solar", store, 4, 8, 3, 64, 0, solar_config=cfg)
+    ld = _ld("solar", store, 4, 8, 3, 64, 0, solar_config=cfg)
     for _ in ld:
         pass
     sizes = np.asarray(ld.report.batch_sizes)
@@ -80,7 +89,7 @@ def test_solar_unbalanced_ablation(store):
 
 
 def test_to_global_padding(store):
-    ld = make_loader("solar", store, 2, 8, 1, 32, 0, collect_data=True)
+    ld = _ld("solar", store, 2, 8, 1, 32, 0, collect_data=True)
     sb = next(iter(ld))
     data, weights = sb.to_global(capacity=12)
     assert data.shape == (24, 8)

@@ -1,0 +1,409 @@
+"""Peer-fetch tier (DESIGN.md §6): planning invariants, runtime parity,
+the exchange/transport layer, and the fig13 occupancy regression.
+
+The tier's contract is threefold: (1) it never changes *what* trains — the
+per-step global batch content is bit-identical with the tier on or off —
+(2) every planned fetch names a source that holds the sample at the start
+of the step, and (3) the runtime survives the one legal race: the source
+evicting the fetched sample within the same step.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import balance
+from repro.core.costmodel import PeerCostModel, PFSCostModel
+from repro.core.plan import ChunkRead, NodeStepPlan, PeerFetch, StepPlan
+from repro.core.scheduler import OfflineScheduler, SolarConfig
+from repro.data import LoaderSpec, SocketTransport, build_pipeline, create_store
+from repro.data.backends.memory import MemoryBackend
+
+PEER_BACKENDS = ["binary", "memory", "sharded"]
+
+
+def _arange_store(tmp_path, backend, num_samples=1024, width=8):
+    from repro.data import DatasetSpec
+
+    path = str(tmp_path / f"peer_{backend}")
+    return create_store(
+        path, backend, spec=DatasetSpec(num_samples, (width,), "<f4"),
+        fill="arange",
+    )
+
+
+def _peer_spec(store, peer: bool, **overrides):
+    """capacity_factor=1.0 — the regime that actually produces peer traffic
+    (capacity-spilled hits); every node trains exactly local_batch samples."""
+    geo = dict(num_nodes=4, local_batch=16, buffer_size=128, seed=0)
+    geo.update(overrides)
+    solar = SolarConfig(
+        num_nodes=geo["num_nodes"], local_batch=geo["local_batch"],
+        buffer_size=geo["buffer_size"], seed=geo["seed"],
+        capacity_factor=1.0, enable_peer=peer,
+    )
+    return LoaderSpec(
+        loader="solar", store=store, num_epochs=3, collect_data=True,
+        solar=solar, peer_fetch=peer, **geo,
+    )
+
+
+def _global_steps(ld):
+    """Per-step global batch content, sorted by sample id (the object the
+    gradient depends on — per-node placement is free, DESIGN.md §3)."""
+    out = []
+    for sb in ld:
+        ids = np.concatenate(sb.node_ids)
+        order = np.argsort(ids, kind="stable")
+        out.append((ids[order], np.concatenate(sb.node_data)[order]))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Parity: the tier changes where bytes come from, never what trains
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", PEER_BACKENDS)
+def test_peer_on_off_bit_identical_batches(tmp_path, backend):
+    store = _arange_store(tmp_path, backend)
+    base = build_pipeline(_peer_spec(store, peer=False))
+    peer = build_pipeline(_peer_spec(store, peer=True))
+    steps_base = _global_steps(base)
+    steps_peer = _global_steps(peer)
+    assert len(steps_base) == len(steps_peer) > 0
+    for (ia, da), (ib, db) in zip(steps_base, steps_peer):
+        assert np.array_equal(ia, ib)
+        assert np.array_equal(da, db)
+    # the tier actually fired, served in-process, and saved PFS traffic
+    assert peer.report.total_remote > 0
+    assert peer.peer_exchange.served == peer.report.total_remote
+    assert peer.peer_exchange.fallbacks == 0
+    assert peer.report.total_pfs < base.report.total_pfs
+    # every row is the right sample (arange fill: value == id)
+    store.close()
+
+
+def test_peer_parity_across_backends(tmp_path):
+    """All three backends serve bit-identical peer-tier runs."""
+    runs = {}
+    for backend in PEER_BACKENDS:
+        store = _arange_store(tmp_path, backend)
+        runs[backend] = _global_steps(build_pipeline(_peer_spec(store, peer=True)))
+        store.close()
+    ref = runs[PEER_BACKENDS[0]]
+    for backend in PEER_BACKENDS[1:]:
+        for (ia, da), (ib, db) in zip(ref, runs[backend]):
+            assert np.array_equal(ia, ib), backend
+            assert np.array_equal(da, db), backend
+
+
+def test_peer_under_prefetch_bit_identical(tmp_path):
+    store = _arange_store(tmp_path, "binary")
+    sync = build_pipeline(_peer_spec(store, peer=True))
+    pre = build_pipeline(
+        _peer_spec(store, peer=True).replace(prefetch_depth=3, num_workers=4)
+    )
+    with pre:
+        for (ia, da), (ib, db) in zip(_global_steps(sync), _global_steps(pre)):
+            assert np.array_equal(ia, ib)
+            assert np.array_equal(da, db)
+    assert pre.peer_exchange.fallbacks == 0
+    store.close()
+
+
+# ---------------------------------------------------------------------------
+# Planning invariants
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("locality", [True, False])
+def test_peer_sources_resident_at_step_start(locality):
+    cfg = SolarConfig(
+        num_nodes=4, local_batch=16, buffer_size=128, capacity_factor=1.0,
+        enable_locality=locality, enable_peer=True,
+    )
+    sch = OfflineScheduler(cfg).build(1024, 3)
+    resident = [set() for _ in range(4)]
+    total = 0
+    for ep in sch.epochs:
+        for sp in ep.steps:
+            start = [set(r) for r in resident]
+            for n in sp.nodes:
+                n.validate()
+                for f in n.peer_fetches:
+                    total += 1
+                    assert f.sample in start[f.source], (f, sp.step)
+            for n in sp.nodes:
+                resident[n.node].update(n.admissions.tolist())
+                resident[n.node].difference_update(n.evictions.tolist())
+    assert total > 0  # the tier planned real traffic in this geometry
+
+
+def test_peer_all_nodes_miss_means_no_fetches():
+    """Samples resident nowhere must stay on the PFS path: with zero buffer
+    capacity nothing is ever resident, so the tier plans nothing."""
+    cfg = SolarConfig(
+        num_nodes=4, local_batch=16, buffer_size=0, capacity_factor=1.0,
+        enable_peer=True,
+    )
+    sch = OfflineScheduler(cfg).build(256, 2)
+    for ep in sch.epochs:
+        for sp in ep.steps:
+            for n in sp.nodes:
+                n.validate()
+                assert n.peer_fetches == ()
+                assert n.num_hits == 0
+
+
+def test_peer_off_schedule_unchanged_by_flag_default():
+    """enable_peer=False (default) plans byte-identical schedules to PR-2."""
+    cfg = SolarConfig(num_nodes=2, local_batch=8, buffer_size=64)
+    sch = OfflineScheduler(cfg).build(256, 2)
+    for ep in sch.epochs:
+        for sp in ep.steps:
+            for n in sp.nodes:
+                assert n.peer_fetches == ()
+                assert n.num_pfs_misses == n.num_misses
+
+
+# ---------------------------------------------------------------------------
+# The one legal race: source evicts the sample in the same step
+# ---------------------------------------------------------------------------
+
+
+def test_runtime_survives_source_evicting_fetched_sample_same_step(tmp_path):
+    """Hand-built plan: node 1 peer-fetches sample 5 from node 0 while node
+    0's own delta evicts 5 in the same step.  gather_peers must run against
+    the start-of-step mirrors, so the fetch succeeds with no PFS fallback."""
+    store = _arange_store(tmp_path, "binary", num_samples=64, width=4)
+    ld = build_pipeline(LoaderSpec(
+        loader="solar", store=store, num_nodes=2, local_batch=2, num_epochs=1,
+        buffer_size=4, collect_data=True, peer_fetch=True,
+    ))
+    ld.reset_execution()
+    ep = ld.schedule.epochs[0]
+
+    def node(n, ids, hits, chunks, adm, ev, peers=()):
+        ids = np.asarray(ids, np.int64)
+        return NodeStepPlan(
+            node=n, sample_ids=ids,
+            hit_mask=np.asarray(hits, bool), chunks=chunks,
+            admissions=np.asarray(adm, np.int64),
+            evictions=np.asarray(ev, np.int64), peer_fetches=peers,
+        )
+
+    # step A: node 0 reads + admits samples 5,6; node 1 reads 10,11.
+    step_a = StepPlan(step=0, nodes=[
+        node(0, [5, 6], [False, False], (ChunkRead(5, 7, 2),), [5, 6], []),
+        node(1, [10, 11], [False, False], (ChunkRead(10, 12, 2),), [10, 11], []),
+    ])
+    ld.execute_step(ep, step_a)
+    # step B: node 1 peer-fetches 5 from node 0; node 0 evicts 5 this step.
+    step_b = StepPlan(step=1, nodes=[
+        node(0, [7, 8], [False, False], (ChunkRead(7, 9, 2),), [7, 8], [5]),
+        node(1, [5, 12], [False, False], (ChunkRead(12, 13, 1),), [12], [],
+             peers=(PeerFetch(5, 0),)),
+    ])
+    for n in step_b.nodes:
+        n.validate()
+    store.reset_counters()
+    sb = ld.execute_step(ep, step_b)
+    # node 1's row for sample 5 is correct and came from node 0's buffer:
+    assert np.array_equal(sb.node_data[1][:, 0].astype(np.int64), [5, 12])
+    assert ld.peer_exchange.served == 1
+    assert ld.peer_exchange.fallbacks == 0
+    # the store saw only the two planned chunk reads, no fallback for 5
+    assert sorted(t[0] for t in store.trace) == [7, 12]
+    store.close()
+
+
+class _DeadTransport:
+    """Transport that can never serve — the tier must fall back to the PFS."""
+
+    def fetch(self, source, ids):
+        ids = np.asarray(ids, np.int64)
+        return np.empty((0, 8), np.float32), np.zeros(ids.size, bool)
+
+
+def test_dead_transport_falls_back_to_store_reads(tmp_path):
+    store = _arange_store(tmp_path, "binary")
+    spec = _peer_spec(store, peer=True)
+    from repro.data.loaders import SolarLoader
+
+    ld = SolarLoader(
+        store, spec.num_nodes, spec.local_batch, spec.num_epochs,
+        spec.buffer_size, spec.seed, collect_data=True,
+        solar_config=spec.solar, peer_transport=_DeadTransport(),
+    )
+    for sb in ld:
+        for ids, arr in zip(sb.node_ids, sb.node_data):
+            assert np.array_equal(arr[:, 0].astype(np.int64), ids)
+    assert ld.peer_exchange.served == 0
+    assert ld.peer_exchange.fallbacks == ld.report.total_remote > 0
+    store.close()
+
+
+# ---------------------------------------------------------------------------
+# fig13 regression: plan deltas must replay within the Belady capacity
+# ---------------------------------------------------------------------------
+
+
+def test_fig13_occupancy_regression():
+    """Exact failing parameters from the ROADMAP bug: nodes=8,
+    local_batch=64, buffer=3072, seed=3, 32768 samples — the recorded
+    admission/eviction deltas must never push occupancy past capacity."""
+    store = MemoryBackend.from_array(
+        np.zeros((32768, 1), np.float32)
+    )
+    ld = build_pipeline(LoaderSpec(
+        loader="solar", store=store, num_nodes=8, local_batch=64,
+        num_epochs=3, buffer_size=3072, seed=3,
+    ))
+    steps = sum(1 for _ in ld)  # trips the occupancy assert if broken
+    assert steps == 3 * (32768 // 512)
+    assert max(ld._occupancy) <= 3072
+
+
+# ---------------------------------------------------------------------------
+# Tiered balancing
+# ---------------------------------------------------------------------------
+
+
+def test_distribute_tiered_equalizes_pfs_misses():
+    hit_counts = np.asarray([10, 2, 6, 0])
+    pfs, peer = balance.distribute_tiered(
+        list(range(100, 112)), [200, 201], hit_counts,
+        local_batch=16, capacity=24,
+    )
+    assert sorted(s for m in pfs for s in m) == list(range(100, 112))
+    counts = [len(m) for m in pfs]
+    assert max(counts) - min(counts) <= 1       # PFS equalized ±1
+    assert sorted(s for m in peer for s in m) == [200, 201]
+    # peer fetches land on the least-loaded nodes
+    totals = hit_counts + np.asarray(counts)
+    for n, m in enumerate(peer):
+        if m:
+            assert totals[n] <= totals.max()
+
+
+def test_distribute_tiered_respects_capacity():
+    with pytest.raises(ValueError, match="capacity"):
+        balance.distribute_tiered(
+            list(range(10)), list(range(20, 30)),
+            np.asarray([14, 14]), local_batch=16, capacity=16,
+        )
+
+
+def test_distribute_tiered_unbalanced_ablation_splits_by_tier():
+    pfs, peer = balance.distribute_tiered(
+        [1, 2, 3], [4, 5], np.asarray([3, 2]),
+        local_batch=5, capacity=8, balance=False,
+    )
+    assert sorted(s for m in pfs for s in m) == [1, 2, 3]
+    assert sorted(s for m in peer for s in m) == [4, 5]
+    sizes = [3 + len(pfs[0]) + len(peer[0]), 2 + len(pfs[1]) + len(peer[1])]
+    assert sizes == [5, 5]                      # vanilla equal-batch fill
+
+
+# ---------------------------------------------------------------------------
+# Cost model + transports + spec validation
+# ---------------------------------------------------------------------------
+
+
+def test_peer_cost_model_decision():
+    pc = PeerCostModel(sample_bytes=4096)
+    assert pc.prefer_peer(1, 1)                 # RPC beats a 4ms PFS call
+    # expensive interconnect: many fetches lose to one amortized read
+    slow = PeerCostModel(sample_bytes=4096, per_fetch_latency_s=5e-3)
+    assert not slow.prefer_peer(2, 2)
+    # explicit PFS pricing is honored
+    cheap_pfs = PeerCostModel(
+        sample_bytes=4096,
+        pfs=PFSCostModel(sample_bytes=4096, per_call_latency_s=1e-6),
+    )
+    assert not cheap_pfs.prefer_peer(4, 4)
+
+
+def test_socket_transport_is_an_honest_stub():
+    t = SocketTransport({0: ("nodeA", 9000), 1: ("nodeB", 9000)})
+    assert t.endpoints[0] == ("nodeA", 9000)
+    with pytest.raises(NotImplementedError):
+        t.fetch(0, np.asarray([1, 2]))
+    with pytest.raises(KeyError):
+        t.fetch(7, np.asarray([1]))
+
+
+def test_loaderspec_peer_validation(tmp_path):
+    with pytest.raises(ValueError, match="peer_fetch requires loader='solar'"):
+        LoaderSpec(loader="naive", path="x", peer_fetch=True).validate()
+    with pytest.raises(ValueError, match="contradicts solar config"):
+        LoaderSpec(
+            loader="solar", path="x", peer_fetch=True,
+            solar=SolarConfig(num_nodes=1, local_batch=32, buffer_size=1024),
+        ).validate()
+    with pytest.raises(ValueError, match="peer_cost is set"):
+        LoaderSpec(loader="solar", path="x",
+                   peer_cost=PeerCostModel()).validate()
+    # peer configs survive a cache-key round trip (nested dataclasses)
+    cfg = SolarConfig(num_nodes=2, local_batch=8, buffer_size=64,
+                      enable_peer=True, peer_cost=PeerCostModel())
+    assert cfg.cache_key(256, 2) != dataclasses.replace(
+        cfg, enable_peer=False, peer_cost=None
+    ).cache_key(256, 2)
+
+
+def test_spec_peer_cost_reaches_scheduler_with_explicit_solar(tmp_path):
+    """spec.peer_cost must be honored even when a full SolarConfig is given:
+    a prohibitively slow interconnect means zero planned peer fetches."""
+    store = _arange_store(tmp_path, "binary")
+    slow = PeerCostModel(per_fetch_latency_s=10.0)
+    spec = _peer_spec(store, peer=True).replace(peer_cost=slow)
+    ld = build_pipeline(spec)
+    assert ld.solar_config.peer_cost == slow
+    assert ld.schedule.stats().total_peer_fetches == 0
+    # both places set: contradiction is reported, identical values pass
+    with pytest.raises(ValueError, match="peer_cost set on both"):
+        spec.replace(
+            solar=dataclasses.replace(spec.solar, peer_cost=PeerCostModel())
+        ).validate()
+    spec.replace(
+        solar=dataclasses.replace(spec.solar, peer_cost=slow)
+    ).validate()
+    store.close()
+
+
+def test_self_source_peer_fetches_are_free_in_modeled_time(tmp_path):
+    """A sample bounced back to its own holder costs no transfer: with every
+    fetch forced self-source, modeled time must equal the chunk time alone."""
+    store = _arange_store(tmp_path, "binary", num_samples=64, width=4)
+    ld = build_pipeline(LoaderSpec(
+        loader="solar", store=store, num_nodes=2, local_batch=2, num_epochs=1,
+        buffer_size=8, collect_data=False, peer_fetch=True,
+    ))
+    ld.reset_execution()
+    ep = ld.schedule.epochs[0]
+    ids = np.asarray([5, 6], np.int64)
+    sp = StepPlan(step=0, nodes=[
+        NodeStepPlan(
+            node=0, sample_ids=ids, hit_mask=np.zeros(2, bool),
+            chunks=(ChunkRead(6, 7, 1),),
+            admissions=np.asarray([6], np.int64),
+            evictions=np.empty(0, np.int64),
+            peer_fetches=(PeerFetch(5, 0),),      # self-source: free
+        ),
+        NodeStepPlan(
+            node=1, sample_ids=ids + 10, hit_mask=np.zeros(2, bool),
+            chunks=(ChunkRead(15, 17, 2),),
+            admissions=np.asarray([15, 16], np.int64),
+            evictions=np.empty(0, np.int64),
+        ),
+    ])
+    ld.execute_step(ep, sp)
+    expected = max(
+        ld.cost.chunks_time(sp.nodes[0].chunks),
+        ld.cost.chunks_time(sp.nodes[1].chunks),
+    )
+    assert ld.report.modeled_time_s == pytest.approx(expected)
+    assert ld.report.total_remote == 1            # still counted as a fetch
+    store.close()

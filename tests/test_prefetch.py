@@ -8,9 +8,22 @@ import threading
 import numpy as np
 import pytest
 
-from repro.data import ChunkStore, PrefetchExecutor, create_synthetic_store, make_loader
+from repro.data import (
+    ChunkStore,
+    LoaderSpec,
+    PrefetchExecutor,
+    build_pipeline,
+    create_synthetic_store,
+)
 
 ALL = ["naive", "lru", "nopfs", "deepio", "solar"]
+
+
+def _ld(name, store, num_nodes, local_batch, num_epochs, buffer_size, seed=0, **kw):
+    return build_pipeline(LoaderSpec(
+        loader=name, store=store, num_nodes=num_nodes, local_batch=local_batch,
+        num_epochs=num_epochs, buffer_size=buffer_size, seed=seed, **kw,
+    ))
 
 
 @pytest.fixture(scope="module")
@@ -34,8 +47,8 @@ def _alive_extra(before):
 @pytest.mark.parametrize("name", ALL)
 def test_async_bit_identical(store_path, name):
     s1, s2 = ChunkStore(store_path), ChunkStore(store_path)
-    ld_sync = make_loader(name, s1, 4, 8, 3, 64, 0, collect_data=True)
-    ld_async = make_loader(name, s2, 4, 8, 3, 64, 0, collect_data=True)
+    ld_sync = _ld(name, s1, 4, 8, 3, 64, 0, collect_data=True)
+    ld_async = _ld(name, s2, 4, 8, 3, 64, 0, collect_data=True)
     with PrefetchExecutor(ld_async, depth=3, num_workers=4) as ex:
         batches = list(zip(list(ld_sync), list(ex)))
     assert batches, name
@@ -63,7 +76,7 @@ def test_async_bit_identical(store_path, name):
 
 def test_async_counting_only(store_path):
     """collect_data=False: executor still yields plans + accounting."""
-    ld = make_loader("solar", ChunkStore(store_path), 4, 8, 2, 64, 0)
+    ld = _ld("solar", ChunkStore(store_path), 4, 8, 2, 64, 0)
     with PrefetchExecutor(ld, depth=2) as ex:
         n = sum(1 for sb in ex if sb.node_data is None)
     assert n == 2 * (512 // 32)
@@ -71,14 +84,14 @@ def test_async_counting_only(store_path):
 
 
 def test_solar_executor_uses_schedule_mode(store_path):
-    ld = make_loader("solar", ChunkStore(store_path), 4, 8, 1, 64, 0)
+    ld = _ld("solar", ChunkStore(store_path), 4, 8, 1, 64, 0)
     assert PrefetchExecutor(ld).mode == "schedule"
-    ld2 = make_loader("naive", ChunkStore(store_path), 4, 8, 1, 64, 0)
+    ld2 = _ld("naive", ChunkStore(store_path), 4, 8, 1, 64, 0)
     assert PrefetchExecutor(ld2).mode == "iterator"
 
 
-def test_make_loader_prefetch_knobs(store_path):
-    ex = make_loader(
+def test_pipeline_prefetch_knobs(store_path):
+    ex = _ld(
         "solar", ChunkStore(store_path), 4, 8, 1, 64, 0,
         collect_data=True, prefetch_depth=2, num_workers=2,
     )
@@ -97,7 +110,7 @@ def test_make_loader_prefetch_knobs(store_path):
 @pytest.mark.parametrize("name", ["solar", "naive"])
 def test_cancel_mid_epoch_leaks_no_threads(store_path, name):
     before = set(threading.enumerate())
-    ld = make_loader(name, ChunkStore(store_path), 4, 8, 3, 64, 0, collect_data=True)
+    ld = _ld(name, ChunkStore(store_path), 4, 8, 3, 64, 0, collect_data=True)
     ex = PrefetchExecutor(ld, depth=2, num_workers=4)
     it = iter(ex)
     for _ in range(3):
@@ -115,7 +128,7 @@ def test_cancel_mid_epoch_leaks_no_threads(store_path, name):
 def test_stale_iterator_finalization_does_not_cancel_new_run(store_path):
     """Rebinding `it = iter(ex)` finalizes the old generator *after* the new
     run started; that cleanup must only tear down its own run."""
-    ld = make_loader("solar", ChunkStore(store_path), 4, 8, 2, 64, 0, collect_data=True)
+    ld = _ld("solar", ChunkStore(store_path), 4, 8, 2, 64, 0, collect_data=True)
     with PrefetchExecutor(ld, depth=2) as ex:
         it = iter(ex)
         next(it)
@@ -126,7 +139,7 @@ def test_stale_iterator_finalization_does_not_cancel_new_run(store_path):
 
 def test_abandoned_iterator_cleans_up(store_path):
     before = set(threading.enumerate())
-    ld = make_loader("solar", ChunkStore(store_path), 4, 8, 2, 64, 0, collect_data=True)
+    ld = _ld("solar", ChunkStore(store_path), 4, 8, 2, 64, 0, collect_data=True)
     with PrefetchExecutor(ld, depth=2) as ex:
         for i, _ in enumerate(ex):
             if i == 2:

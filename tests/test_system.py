@@ -9,13 +9,22 @@ import pytest
 
 from repro.configs.surrogates import SURROGATES
 from repro.core.scheduler import SolarConfig
-from repro.data import create_synthetic_store, make_loader
+from repro.data import LoaderSpec, build_pipeline, create_synthetic_store
 from repro.models import cnn
 from repro.optim.adamw import AdamWConfig
 from repro.train.step import init_train_state, make_train_step
 from repro.train.trainer import Trainer
 
 KEY = jax.random.PRNGKey(0)
+
+
+def _ld(name, store, num_nodes, local_batch, num_epochs, buffer_size, seed=0, **kw):
+    solar = kw.pop("solar_config", None)
+    return build_pipeline(LoaderSpec(
+        loader=name, store=store, num_nodes=num_nodes, local_batch=local_batch,
+        num_epochs=num_epochs, buffer_size=buffer_size, seed=seed, solar=solar,
+        **kw,
+    ))
 
 
 class _DummyCfg:
@@ -51,7 +60,7 @@ def _make_batch_fn(cfg, capacity):
 
 def _trainer(cfg, store, loader_name, steps=8, ckpt=None, every=0, skip=0):
     store.reset_counters()
-    ld = make_loader(loader_name, store, 2, 8, 2, 64, 0, collect_data=True)
+    ld = _ld(loader_name, store, 2, 8, 2, 64, 0, collect_data=True)
     capacity = getattr(ld, "capacity", 12)
     params = cnn.init_surrogate(KEY, cfg)
     opt = AdamWConfig(lr=1e-3)
@@ -109,7 +118,7 @@ def test_solar_gradient_equals_vanilla_gradient(surrogate_setup):
 
     def grads_for(loader_name, solar_config=None):
         kw = {"solar_config": solar_config} if solar_config else {}
-        ld = make_loader(loader_name, store, 2, 8, 1, 64, 0,
+        ld = _ld(loader_name, store, 2, 8, 1, 64, 0,
                          collect_data=True, **kw)
         capacity = getattr(ld, "capacity", 12)
         params = cnn.init_surrogate(KEY, cfg)
