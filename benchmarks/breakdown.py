@@ -25,7 +25,7 @@ class _Cfg:
 
 
 def _buffer_sync_micro(ld) -> None:
-    """Micro-benchmark: per-step buffer-mirror maintenance for SolarLoader.
+    """Micro-benchmark: per-step buffer-mirror maintenance for the executor.
 
     The runtime used to rebuild each node's resident *set* every step
     (``set(admissions) | resident - set(evictions)`` plus a full membership

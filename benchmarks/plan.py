@@ -1,0 +1,155 @@
+"""Plan-once / train-many amortization (``BENCH_plan.json``).
+
+The paper argues the offline scheduler's one-time cost is amortized over
+runs (§4.5); the plan-first API makes that measurable instead of asserted.
+Per strategy this benchmark times, on one geometry:
+
+  * **cold plan** — compile the schedule from scratch and persist it into a
+    :class:`~repro.core.planners.PlanCache` (the first run of a config),
+  * **cached load** — resolve the same spec again: a config-hash cache hit
+    that deserializes the ``.npz`` artifact (every later run),
+  * **execution** — replay the loaded plan (counting mode), the per-step
+    cost that planning is amortized against.
+
+Correctness is checked before anything is reported: the cold-planned and
+cache-loaded schedules must have identical artifact digests AND produce
+digest-identical batch streams, and a small data-collecting config verifies
+byte-identical sample payloads end to end.
+
+    PYTHONPATH=src python -m benchmarks.plan
+    PYTHONPATH=src python -m benchmarks.run --only plan --json-out BENCH_plan.json
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+
+from benchmarks.common import emit, get_store
+from repro.data import (
+    STRATEGIES,
+    LoaderSpec,
+    build_pipeline,
+    execute,
+    plan,
+    stream_digest,
+)
+
+
+def _one_strategy(store, spec: LoaderSpec, cache_dir: str) -> dict:
+    name = spec.loader
+    t0 = time.perf_counter()
+    cold = plan(spec)                       # compile + persist into the cache
+    cold_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    warm = plan(spec)                       # config-hash hit: load the artifact
+    warm_s = time.perf_counter() - t0
+    assert warm.artifact_digest() == cold.artifact_digest(), name
+
+    d_cold = stream_digest(execute(spec, cold))
+    d_warm = stream_digest(execute(spec, warm))
+    assert d_cold == d_warm, f"{name}: cached plan changed the batch stream"
+
+    t0 = time.perf_counter()
+    steps = sum(1 for _ in execute(spec, warm))
+    exec_s = time.perf_counter() - t0
+
+    from repro.data import PlanCache, make_planner
+
+    key = make_planner(spec, sample_bytes=store.sample_bytes).cache_key(
+        store.num_samples, spec.num_epochs
+    )
+    artifact = PlanCache(cache_dir).path_for(key)
+    speedup = cold_s / max(warm_s, 1e-9)
+    emit(f"plan/{name}/cold_plan", cold_s * 1e6, f"{cold_s:.4f}s")
+    emit(f"plan/{name}/cached_load", warm_s * 1e6, f"{warm_s:.4f}s")
+    emit(f"plan/{name}/startup_speedup", 0.0, f"{speedup:.1f}x")
+    emit(f"plan/{name}/execute", exec_s / max(steps, 1) * 1e6,
+         f"{steps} steps in {exec_s:.4f}s")
+    return {
+        "cold_plan_s": round(cold_s, 5),
+        "cached_load_s": round(warm_s, 5),
+        "startup_speedup": round(speedup, 2),
+        "execute_s": round(exec_s, 5),
+        "steps": steps,
+        "artifact_bytes": os.path.getsize(artifact),
+        "config_hash": warm.config_hash,
+        "stream_digest": d_warm[:16],
+    }
+
+
+def _byte_identity_check(cache_dir: str) -> str:
+    """Small data-collecting config: cached plans must serve identical bytes."""
+    import numpy as np
+
+    from repro.data import DatasetSpec, create_store
+
+    path = os.path.join(tempfile.mkdtemp(), "plan_bytes")
+    store = create_store(path, "binary",
+                         spec=DatasetSpec(1024, (64,), "<f4"), fill="arange")
+    spec = LoaderSpec(loader="solar", store=store, num_nodes=4, local_batch=16,
+                      num_epochs=2, buffer_size=128, collect_data=True,
+                      plan_cache=cache_dir)
+    d1 = stream_digest(build_pipeline(spec))     # cold: compiles + caches
+    d2 = stream_digest(build_pipeline(spec))     # warm: loads the artifact
+    assert d1 == d2, "cached plan changed the sample bytes"
+    store.close()
+    return d1[:16]
+
+
+def run(
+    num_samples: int = 32768,
+    sample_floats: int = 1024,
+    nodes: int = 8,
+    local_batch: int = 32,
+    epochs: int = 4,
+    buffer: int = 3072,
+    strategies=None,
+    cache_dir: str | None = None,
+    min_speedup: float | None = 5.0,
+    #: strategies the >= min_speedup claim is enforced on: the ones with a
+    #: real offline planning cost to amortize.  naive/deepio planning is a
+    #: bare shuffle/partition — recomputing it is already as cheap as any
+    #: load could be, so the cache is about correctness there, not speed.
+    enforce=("lru", "nopfs", "solar"),
+    json_out: str | None = None,
+) -> dict:
+    store = get_store(num_samples=num_samples, sample_floats=sample_floats)
+    cache_dir = cache_dir or tempfile.mkdtemp(prefix="solar_plan_cache_")
+    base = LoaderSpec(
+        store=store, num_nodes=nodes, local_batch=local_batch,
+        num_epochs=epochs, buffer_size=buffer, seed=0, plan_cache=cache_dir,
+    )
+    results: dict = {
+        "geometry": {
+            "num_samples": num_samples, "nodes": nodes,
+            "local_batch": local_batch, "epochs": epochs, "buffer": buffer,
+        },
+        "strategies": {},
+    }
+    for name in strategies or STRATEGIES:
+        results["strategies"][name] = _one_strategy(
+            store, base.replace(loader=name), cache_dir
+        )
+    results["byte_identity_digest"] = _byte_identity_check(cache_dir)
+    emit("plan/byte_identity", 0.0, results["byte_identity_digest"])
+    if min_speedup is not None:
+        slow = {
+            n: r["startup_speedup"]
+            for n, r in results["strategies"].items()
+            if n in enforce and r["startup_speedup"] < min_speedup
+        }
+        assert not slow, (
+            f"cached-plan startup must be >= {min_speedup}x faster than cold "
+            f"planning; got {slow}"
+        )
+    if json_out:
+        with open(json_out, "w") as f:
+            json.dump(results, f, indent=1, sort_keys=True)
+        emit("plan/json", 0.0, json_out)
+    return results
+
+
+if __name__ == "__main__":
+    run(json_out="BENCH_plan.json")

@@ -29,6 +29,7 @@ from benchmarks import (
     optim_breakdown,
     peer,
     pipeline,
+    plan,
 )
 
 SUITES = {
@@ -44,6 +45,7 @@ SUITES = {
     "pipeline": pipeline.run,           # sync vs async executor throughput
     "backends": backends.run,           # storage-backend shoot-out
     "peer": peer.run,                   # peer-fetch tier vs PFS-only
+    "plan": plan.run,                   # plan-once/train-many amortization
 }
 
 

@@ -1,16 +1,23 @@
-"""Quickstart: SOLAR in 60 seconds.
+"""Quickstart: SOLAR in 60 seconds, plan-first.
 
-Builds a synthetic scientific dataset, runs the offline scheduler, and
-compares SOLAR against the PyTorch-DataLoader analog on hit rate, PFS loads,
-and modeled loading time — then points the same pipeline at a different
-storage backend to show the loaders are layout-agnostic.
+Builds a synthetic scientific dataset, compiles the loading plan as an
+explicit artifact (every strategy compiles to the same Schedule IR), and
+compares SOLAR against the PyTorch-DataLoader analog on hit rate, PFS
+loads, and modeled loading time — then points the same plan at a different
+storage backend to show the executor is layout-agnostic.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import tempfile
 
-from repro.core import OfflineScheduler, SolarConfig
-from repro.data import DatasetSpec, LoaderSpec, build_pipeline, create_store
+from repro.data import (
+    DatasetSpec,
+    LoaderSpec,
+    build_pipeline,
+    create_store,
+    execute,
+    plan,
+)
 
 # 1. A "terabyte-scale" dataset, miniaturized: 16k samples of 4 KiB, created
 #    through the storage-backend registry (binary | hdf5 | memory | sharded).
@@ -19,15 +26,20 @@ store = create_store(
     tempfile.mktemp(suffix=".bin"), "binary", spec=dataset, fill="arange",
 )
 
-# 2. The offline scheduler alone: epoch-order + locality + balance + chunking.
-cfg = SolarConfig(num_nodes=8, local_batch=32, buffer_size=1024)
-schedule = OfflineScheduler(cfg).build(num_samples=16384, num_epochs=6)
-print("SOLAR schedule:", schedule.stats().summary())
-
-# 3. Head-to-head as data loaders (counting mode: no actual reads).  One
-#    LoaderSpec describes the pipeline; .replace() sweeps the loader kind.
+# 2. Plan first: one LoaderSpec describes the pipeline; plan() compiles the
+#    entire multi-epoch access order offline into a Schedule artifact.
 base = LoaderSpec(store=store, num_nodes=8, local_batch=32, num_epochs=6,
                   buffer_size=1024, seed=0)
+schedule = plan(base.replace(loader="solar"))
+print(f"SOLAR plan [{schedule.config_hash}]:", schedule.stats().summary())
+path = tempfile.mktemp(suffix=".plan.npz")
+schedule.save(path)
+print("saved plan artifact:", path, "| node 0 share:",
+      schedule.for_node(0).stats().total_misses, "misses")
+
+# 3. Head-to-head (counting mode: no actual reads).  Every strategy — the
+#    baselines included — compiles to the same IR and replays through the
+#    same executor; .replace() sweeps the strategy.
 for name in ("naive", "lru", "nopfs", "solar"):
     ld = build_pipeline(base.replace(loader=name))
     for _ in ld:
@@ -36,18 +48,18 @@ for name in ("naive", "lru", "nopfs", "solar"):
     print(f"{name:6s} numPFS={r.total_pfs:7d} hit_rate={r.hit_rate:.3f} "
           f"modeled_load={r.modeled_time_s:8.2f}s")
 
-# 4. SOLAR with real reads, feeding padded SPMD batches.
-ld = build_pipeline(base.replace(loader="solar", num_epochs=1,
-                                 collect_data=True))
+# 4. Execute the saved plan with real reads, feeding padded SPMD batches.
+#    plan_path loads + hash-verifies the artifact instead of recompiling.
+spec = base.replace(loader="solar", collect_data=True, plan_path=path)
+ld = build_pipeline(spec)
 sb = next(iter(ld))
 data, weights = sb.to_global(ld.capacity)
 print(f"global batch {data.shape}, real rows {int(weights.sum())} "
       f"(padding rows carry zero loss weight -> identical gradients)")
 
-# 5. Same pipeline, different physical layout: stage the dataset into RAM.
+# 5. Same plan, different physical layout: stage the dataset into RAM.
 mem = create_store(tempfile.mktemp(), "memory", spec=dataset, fill="arange")
-ld = build_pipeline(base.replace(loader="solar", store=mem, num_epochs=1,
-                                 collect_data=True))
-sb2 = next(iter(ld))
+ld2 = execute(spec.replace(store=None, plan_path=None), schedule, store=mem)
+sb2 = next(iter(ld2))
 assert all((a == b).all() for a, b in zip(sb.node_data, sb2.node_data))
 print("memory backend serves bit-identical batches on the same plan")

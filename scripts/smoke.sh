@@ -40,6 +40,20 @@ for backend in backend_names():
 PY
 
 python - <<'PY'
+# plan-cache correctness at smoke scale (benchmarks/plan.py, small config):
+# cold compile -> cached artifact load must yield digest-identical batch
+# streams for every strategy, and byte-identical payloads end to end.
+# (min_speedup=None: timing claims belong to the full benchmark config.)
+import tempfile
+
+from benchmarks.plan import run
+
+run(num_samples=2048, sample_floats=64, nodes=2, local_batch=16, epochs=2,
+    buffer=256, min_speedup=None, cache_dir=tempfile.mkdtemp())
+print("smoke plan cache: OK")
+PY
+
+python - <<'PY'
 # fig13 regression parameters (ROADMAP bug, fixed in PR 3): at nodes=8,
 # local_batch=64, buffer=3072, seed=3 the schedule's recorded admission/
 # eviction deltas must replay within the Belady capacity.

@@ -8,8 +8,12 @@ the checkpoint (**elastic**: e.g. written on 256 chips, restored on 512).
 
 Fault-tolerance contract (tested):
   * restore(save(state)) is bit-exact, including optimizer moments,
-  * the loader cursor (epoch-order position, step) resumes the exact global
-    batch sequence (the SOLAR schedule is deterministic in its config),
+  * the plan cursor (:func:`plan_cursor_extra` / :func:`resume_cursor`)
+    resumes the exact global batch sequence — every strategy's schedule is
+    deterministic in its config, and the executor's ``fast_forward`` makes
+    a mid-epoch resume cost zero I/O,
+  * a recorded plan config hash lets the trainer refuse to resume against a
+    *different* plan than the one that produced the checkpoint,
   * partial/corrupt checkpoints are detected via a terminal COMMIT marker and
     skipped by ``latest_checkpoint`` — a crash mid-save never poisons restart.
 """
@@ -25,7 +29,45 @@ import jax
 import numpy as np
 
 __all__ = ["save_checkpoint", "restore_checkpoint", "latest_checkpoint",
-           "AsyncCheckpointer"]
+           "AsyncCheckpointer", "plan_cursor_extra", "resume_cursor"]
+
+
+def plan_cursor_extra(
+    global_step: int, epoch: int, step: int, plan_hash: str | None = None
+) -> dict:
+    """The checkpoint ``extra`` record for plan-cursor resume.
+
+    ``epoch``/``step`` name the last *completed* plan position (epoch id +
+    step within the epoch, i.e. ``StepBatch.epoch``/``StepBatch.step``);
+    ``global_step`` is the next plan step to execute — what
+    ``ScheduleExecutor.fast_forward`` takes.  ``plan_hash`` records the
+    schedule's ``config_hash`` so restore can detect a changed plan.
+    """
+    extra = {
+        "solar_step": int(global_step),  # legacy key, kept for old readers
+        "plan_cursor": {
+            "epoch": int(epoch),
+            "step": int(step),
+            "global_step": int(global_step),
+        },
+    }
+    if plan_hash:
+        extra["plan_hash"] = str(plan_hash)
+    return extra
+
+
+def resume_cursor(meta: dict) -> tuple[int, dict | None]:
+    """Read ``(resume_step, plan_cursor | None)`` out of checkpoint meta.
+
+    Falls back through the legacy ``solar_step`` key and finally the bare
+    checkpoint step, so checkpoints from before the plan-cursor era restore
+    the same way they always did.
+    """
+    extra = meta.get("extra", {})
+    cursor = extra.get("plan_cursor")
+    if cursor is not None:
+        return int(cursor["global_step"]), cursor
+    return int(extra.get("solar_step", meta["step"])), None
 
 _COMMIT = "COMMITTED"
 

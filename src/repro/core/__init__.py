@@ -3,14 +3,26 @@ offline scheduler + runtime buffer strategy.
 
 Public API:
   * :func:`repro.core.shuffle.generate_epoch_permutations`
+  * :class:`repro.core.planners.Planner` + the strategy planner registry
+    (``PLANNERS``) — every strategy compiles to the same Schedule IR
   * :class:`repro.core.scheduler.SolarConfig` / :class:`OfflineScheduler`
-  * :class:`repro.core.plan.Schedule` (the schedule IR)
+  * :class:`repro.core.plan.Schedule` (the schedule IR; ``save``/``load``
+    make it an on-disk artifact, ``for_node`` slices per-rank views)
+  * :class:`repro.core.planners.PlanCache` (disk memoization by config hash)
   * :class:`repro.core.buffer.BeladyBuffer` / :class:`LRUBuffer`
   * :class:`repro.core.costmodel.PFSCostModel`
 """
 from repro.core.buffer import BeladyBuffer, LRUBuffer
 from repro.core.costmodel import PFSCostModel
-from repro.core.plan import ChunkRead, EpochPlan, NodeStepPlan, Schedule, StepPlan
+from repro.core.plan import (
+    ChunkRead,
+    EpochPlan,
+    NodeStepPlan,
+    PlanArtifactError,
+    Schedule,
+    StepPlan,
+)
+from repro.core.planners import PLANNERS, STRATEGIES, PlanCache, Planner, get_planner
 from repro.core.scheduler import OfflineScheduler, SolarConfig
 from repro.core.shuffle import generate_epoch_permutations
 
@@ -21,8 +33,14 @@ __all__ = [
     "ChunkRead",
     "EpochPlan",
     "NodeStepPlan",
+    "PlanArtifactError",
     "Schedule",
     "StepPlan",
+    "Planner",
+    "PlanCache",
+    "PLANNERS",
+    "STRATEGIES",
+    "get_planner",
     "OfflineScheduler",
     "SolarConfig",
     "generate_epoch_permutations",

@@ -25,8 +25,10 @@ ablation benchmark is produced.
 Complexity: O(E·D) for the shuffle and next-use index, O(E²·|Buffer|) for the
 reuse matrix (vectorized), O(T log) for the simulation with T = total trained
 samples.  The paper notes this one-time cost is amortized over runs and can
-overlap the first epoch; we additionally memoize schedules on disk keyed by a
-config hash (:meth:`OfflineScheduler.cache_key`).
+overlap the first epoch; schedules are additionally memoized on disk keyed
+by a config hash (:meth:`OfflineScheduler.cache_key`) through
+:class:`repro.core.planners.PlanCache` — set ``plan_cache`` on a
+:class:`~repro.data.pipeline.LoaderSpec` to turn it on.
 """
 from __future__ import annotations
 
@@ -144,6 +146,10 @@ class OfflineScheduler:
 
     def __init__(self, config: SolarConfig):
         self.config = config
+
+    def cache_key(self, num_samples: int, num_epochs: int) -> str:
+        """Config hash keying the on-disk plan memoization (PlanCache)."""
+        return self.config.cache_key(num_samples, num_epochs)
 
     # -- schedule construction ------------------------------------------------
 

@@ -1,5 +1,5 @@
-"""Data substrate: pluggable storage backends, loader zoo, and the async
-device-feed pipeline.
+"""Data substrate: pluggable storage backends, the plan-first loader
+pipeline, and the async device-feed executor.
 
 Typical entry point::
 
@@ -7,7 +7,15 @@ Typical entry point::
 
     store = create_store(path, "hdf5", spec=DatasetSpec(16384, (1024,)))
     pipeline = build_pipeline(LoaderSpec(loader="solar", store=store, ...))
+
+or, with the plan made explicit (precompute once, execute many)::
+
+    from repro.data import plan, execute
+
+    schedule = plan(spec)              # -> repro.core.plan.Schedule artifact
+    pipeline = execute(spec, schedule)
 """
+from repro.core.planners import PLANNERS, STRATEGIES, PlanCache
 from repro.data.backends import (
     DatasetSpec,
     StorageBackend,
@@ -17,17 +25,21 @@ from repro.data.backends import (
     open_store,
 )
 from repro.data.loaders import (
-    LOADERS,
-    DeepIOLoader,
     LoaderReport,
-    LRULoader,
-    NaiveLoader,
-    NoPFSLoader,
-    SolarLoader,
+    ScheduleExecutor,
     StepBatch,
+    stream_digest,
+    update_batch_digest,
 )
 from repro.data.peer import PeerExchange, SharedViewTransport, SocketTransport
-from repro.data.pipeline import LoaderSpec, build_pipeline, build_store
+from repro.data.pipeline import (
+    LoaderSpec,
+    build_pipeline,
+    build_store,
+    execute,
+    make_planner,
+    plan,
+)
 from repro.data.prefetch import PrefetchExecutor
 from repro.data.storage import ChunkStore, create_synthetic_store
 
@@ -41,18 +53,21 @@ __all__ = [
     "build_store",
     "create_store",
     "create_synthetic_store",
+    "execute",
     "get_backend",
+    "make_planner",
     "open_store",
+    "plan",
     "PeerExchange",
     "PrefetchExecutor",
     "SharedViewTransport",
     "SocketTransport",
-    "DeepIOLoader",
     "LoaderReport",
-    "LOADERS",
-    "LRULoader",
-    "NaiveLoader",
-    "NoPFSLoader",
-    "SolarLoader",
+    "PlanCache",
+    "PLANNERS",
+    "STRATEGIES",
+    "ScheduleExecutor",
     "StepBatch",
+    "stream_digest",
+    "update_batch_digest",
 ]

@@ -1,59 +1,51 @@
-"""Data loaders: SOLAR and every baseline the paper compares against.
+"""The schedule executor: one runtime replays any strategy's plan.
 
-All loaders share one interface so the benchmarks and the trainer are
-loader-agnostic:
+Every loading strategy — SOLAR and all four baselines — compiles offline to
+the same :class:`~repro.core.plan.Schedule` IR (see
+:mod:`repro.core.planners`), so the runtime no longer needs a zoo of loader
+classes improvising their access order inside ``__iter__``.  One
+:class:`ScheduleExecutor` replays any plan against any
+:class:`~repro.data.backends.base.StorageBackend`:
 
-  * :class:`NaiveLoader`   — PyTorch-DataLoader analog: fresh shuffle each
-    epoch, contiguous node split, no buffer, per-sample PFS reads.
-  * :class:`LRULoader`     — Naive + per-node LRU buffer (paper §5.3's
-    "PyTorch DataLoader + LRU" ablation baseline).
-  * :class:`NoPFSLoader`   — clairvoyant-*next-epoch* prefetch/buffer analog
-    of Dryden et al. (2021): eviction by next-use distance, but the horizon is
-    only the following epoch, and misses may be served from *remote* node
-    buffers (inter-node fetch) before falling back to the PFS.
-  * :class:`DeepIOLoader`  — Zhu et al. (2018) analog: partition-resident
-    buffers, shuffle only *within* each node's resident set (sacrifices
-    randomness — which is exactly why SOLAR rejects this design).
-  * :class:`SolarLoader`   — executes the offline :class:`Schedule`: Belady
-    buffer, locality remap, load-balanced misses, aggregated chunk reads.
+  * buffer hits come out of a per-node :class:`_DataMirror` arena,
+  * misses ride the plan's coalesced :class:`~repro.core.plan.ChunkRead`
+    ranged reads (``store.read_ranges``),
+  * planned :class:`~repro.core.plan.PeerFetch` records are served through a
+    :class:`~repro.data.peer.PeerExchange` when a transport is configured
+    (SOLAR's interconnect tier, DESIGN.md §6) and fall back to coalesced
+    scattered store reads otherwise (how NoPFS's emulated remote fetches are
+    billed without a transport),
+  * buffer state is maintained purely from the plan's recorded
+    admission/eviction deltas — the runtime never re-decides.
 
-Each loader yields :class:`StepBatch` objects and accumulates a
+The executor yields :class:`StepBatch` objects and accumulates a
 :class:`LoaderReport` with numPFS / modeled PFS time / wall time, which is
-what the paper's figures plot.
+what the paper's figures plot.  ``fast_forward(n)`` replays the first ``n``
+steps' deltas without reading data — mid-epoch resume from a checkpointed
+plan cursor costs no I/O.
 
-Loaders are storage-agnostic: ``store`` is any
-:class:`~repro.data.backends.base.StorageBackend` (flat binary, HDF5,
-RAM-staged, sharded, ...) — every access goes through the protocol's
-``read_ranges`` / ``read_scattered`` coalescing read paths.  Construct
-loaders declaratively via :func:`repro.data.pipeline.build_pipeline`.
+Construct executors declaratively via :func:`repro.data.pipeline.plan` /
+:func:`~repro.data.pipeline.execute` (or their composition
+:func:`~repro.data.pipeline.build_pipeline`).
 """
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import time
 
 import numpy as np
 
-from repro.core.buffer import BeladyBuffer, LRUBuffer
 from repro.core.costmodel import PeerCostModel, PFSCostModel
 from repro.core.plan import Schedule
-from repro.core.scheduler import OfflineScheduler, SolarConfig, build_next_use_index
-from repro.core.shuffle import (
-    default_node_assignment,
-    generate_epoch_permutations,
-    split_global_batches,
-)
 from repro.data.backends.base import StorageBackend
 
 __all__ = [
     "StepBatch",
     "LoaderReport",
-    "NaiveLoader",
-    "LRULoader",
-    "NoPFSLoader",
-    "DeepIOLoader",
-    "SolarLoader",
-    "LOADERS",
+    "ScheduleExecutor",
+    "update_batch_digest",
+    "stream_digest",
 ]
 
 
@@ -86,6 +78,27 @@ class StepBatch:
             data[i, :k] = arr[:k]
             weights[i, :k] = 1.0
         return data.reshape((n * capacity,) + shape), weights.reshape(-1)
+
+
+def update_batch_digest(h, sb: StepBatch) -> None:
+    """Feed one batch's canonical bytes (epoch, step, ids, masks, data) to
+    a hashlib object — the digest the parity tests and benchmarks pin."""
+    h.update(np.int64(sb.epoch).tobytes())
+    h.update(np.int64(sb.step).tobytes())
+    for ids, mask in zip(sb.node_ids, sb.hit_masks):
+        h.update(np.ascontiguousarray(ids, dtype=np.int64).tobytes())
+        h.update(np.ascontiguousarray(mask, dtype=bool).tobytes())
+    if sb.node_data is not None:
+        for arr in sb.node_data:
+            h.update(np.ascontiguousarray(arr).tobytes())
+
+
+def stream_digest(batches) -> str:
+    """SHA-256 over a whole :class:`StepBatch` stream, canonical encoding."""
+    h = hashlib.sha256()
+    for sb in batches:
+        update_batch_digest(h, sb)
+    return h.hexdigest()
 
 
 @dataclasses.dataclass
@@ -199,36 +212,238 @@ class _DataMirror:
         self._slots = all_slots[order]
 
 
-class _Base:
-    name = "base"
+class ScheduleExecutor:
+    """Replay one :class:`~repro.core.plan.Schedule` against one store.
+
+    The executor is strategy-agnostic: everything it does — which samples a
+    node trains, which bytes come from the buffer / a peer / the PFS, what
+    enters and leaves the buffer — is recorded in the plan.  Peer serving is
+    enabled by passing ``solar_config`` with ``enable_peer`` set (the
+    pipeline layer does this) or an explicit ``peer_transport``; without
+    either, planned peer fetches are billed as remote transfers but the
+    bytes come from coalesced scattered store reads — which is exactly how
+    the NoPFS baseline's emulated hierarchical fetches behave.
+    """
 
     def __init__(
         self,
         store: StorageBackend,
-        num_nodes: int,
-        local_batch: int,
-        num_epochs: int,
-        buffer_size: int,
-        seed: int = 0,
-        cost_model: PFSCostModel | None = None,
+        schedule: Schedule,
+        *,
         collect_data: bool = False,
+        cost_model: PFSCostModel | None = None,
+        peer_cost: PeerCostModel | None = None,
+        peer_transport=None,
+        solar_config=None,
     ):
         self.store = store
-        self.num_nodes = num_nodes
-        self.local_batch = local_batch
-        self.num_epochs = num_epochs
-        self.buffer_size = buffer_size
-        self.seed = seed
-        self.cost = cost_model or PFSCostModel(sample_bytes=store.sample_bytes)
+        self.schedule = schedule
+        self.name = schedule.strategy
+        self.num_nodes = schedule.num_nodes
+        self.local_batch = schedule.local_batch
+        self.num_epochs = len(schedule.epochs)
+        self.buffer_size = schedule.buffer_size
         self.collect_data = collect_data
-        self.report = LoaderReport(name=self.name, num_nodes=num_nodes)
-        self.perms = generate_epoch_permutations(
-            store.num_samples, num_epochs, seed
+        self.cost = cost_model or PFSCostModel(sample_bytes=store.sample_bytes)
+        self.solar_config = solar_config
+        serve_peers = peer_transport is not None or bool(
+            solar_config is not None and solar_config.enable_peer
         )
-        # per-node data buffers (actual arrays) when materializing batches.
-        self._data_buf: list[_DataMirror | None] = [None] * num_nodes
+        if peer_cost is None and solar_config is not None:
+            peer_cost = solar_config.peer_cost
+        if serve_peers and peer_cost is None:
+            # price the peer tier with this store's real sample size
+            peer_cost = PeerCostModel(
+                sample_bytes=store.sample_bytes, pfs=self.cost
+            )
+        self.peer_cost = peer_cost
+        self.report = LoaderReport(name=self.name, num_nodes=self.num_nodes)
+        #: per-node data buffers (actual arrays) when materializing batches.
+        self._data_buf: list[_DataMirror | None] = [None] * self.num_nodes
+        #: buffer occupancy per node, maintained from the plan's recorded
+        #: admission/eviction deltas — no per-step resident-set rebuild.
+        self._occupancy = [0] * self.num_nodes
+        #: first plan step to *execute*; earlier steps replay deltas only.
+        self._start_step = 0
+        self.peer_exchange = None
+        if serve_peers:
+            from repro.data.peer import PeerExchange, SharedViewTransport
 
-    # subclasses implement __iter__ yielding StepBatch.
+            self.peer_exchange = PeerExchange(
+                peer_transport or SharedViewTransport(self._mirror),
+                self.store.sample_shape,
+                self.store.dtype,
+            )
+
+    @property
+    def capacity(self) -> int:
+        return self.schedule.capacity
+
+    @property
+    def config_hash(self) -> str:
+        return self.schedule.config_hash
+
+    def remote_time(self, k: int, interconnect_bps: float = 1.0e10,
+                    latency_s: float = 5e-5) -> float:
+        if self.peer_cost is not None:
+            return self.peer_cost.fetch_time(k)
+        return k * (latency_s + self.store.sample_bytes / interconnect_bps)
+
+    # -- plan walking ---------------------------------------------------------
+
+    def reset_execution(self) -> None:
+        """Forget buffer state so the schedule can be replayed from step 0."""
+        self._occupancy = [0] * self.num_nodes
+        self._data_buf = [None] * self.num_nodes
+
+    def fast_forward(self, num_steps: int) -> None:
+        """Start subsequent iterations at plan step ``num_steps``.
+
+        The skipped steps' admission/eviction deltas are replayed without
+        reading any batch data or accounting anything; then, when data is
+        being collected, each node's buffer is re-staged with **one**
+        coalesced scattered read of its resident set — so a resumed run pays
+        a single bounded buffer refill instead of re-reading every skipped
+        batch, and every later planned hit is served from RAM exactly as in
+        an uninterrupted run.  Resumed batches stay bit-identical either
+        way (an unstaged row would fall back to a store read).
+        """
+        self._start_step = max(int(num_steps), 0)
+
+    def _skip_step(self, sp, resident: list[set]) -> None:
+        for npn in sp.nodes:
+            r = npn.node
+            self._occupancy[r] += npn.admissions.size - npn.evictions.size
+            resident[r].update(npn.admissions.tolist())
+            resident[r].difference_update(npn.evictions.tolist())
+
+    def _restage_buffers(self, resident: list[set]) -> None:
+        """Refill the data mirrors after a fast-forward: one coalesced
+        scattered read per node covering exactly its resident samples."""
+        for r, ids in enumerate(resident):
+            if not ids:
+                continue
+            ordered = np.fromiter(ids, np.int64, count=len(ids))
+            ordered.sort()
+            self._mirror(r).admit(ordered, self.store.read_scattered(ordered))
+
+    def plan_steps(self):
+        """Walk the schedule in execution order, yielding (EpochPlan, StepPlan).
+
+        This is the surface the :class:`repro.data.prefetch.PrefetchExecutor`
+        pipelines over: every future ChunkRead is visible here.  Each walk
+        replays the buffer simulation from an empty buffer, honoring
+        :meth:`fast_forward`.
+        """
+        self.reset_execution()
+        idx = 0
+        resident: list[set] = [set() for _ in range(self.num_nodes)]
+        staged = self._start_step == 0
+        for ep in self.schedule.epochs:
+            for sp in ep.steps:
+                if idx < self._start_step:
+                    self._skip_step(sp, resident)
+                    idx += 1
+                    continue
+                if not staged:
+                    staged = True
+                    if self.collect_data:
+                        self._restage_buffers(resident)
+                idx += 1
+                yield ep, sp
+
+    def __iter__(self):
+        for ep, sp in self.plan_steps():
+            yield self.execute_step(ep, sp)
+
+    # -- one step -------------------------------------------------------------
+
+    def gather_peers(self, sp) -> list | None:
+        """Serve every node's planned peer fetches for one step, up front.
+
+        Must run before any of the step's admission/eviction deltas are
+        applied (the plan guarantees source residency only at step *start* —
+        a source may evict the fetched sample in this very step, see
+        :mod:`repro.data.peer`).  Returns per-node ``(ids, rows)`` pairs (or
+        ``None`` entries), ready for :meth:`execute_step`'s assembly; samples
+        the transport could not serve are simply absent and fall back to
+        store reads downstream.
+        """
+        if self.peer_exchange is None or not self.collect_data:
+            return None
+        t0 = time.perf_counter()
+        out = []
+        for npn in sp.nodes:
+            if npn.peer_fetches:
+                ids, rows, _missing = self.peer_exchange.gather(npn.peer_fetches)
+                out.append((ids, rows))
+            else:
+                out.append(None)
+        self.report.wall_time_s += time.perf_counter() - t0
+        return out
+
+    def execute_step(self, ep, sp, chunk_arrays=None, peer_arrays=None) -> StepBatch:
+        """Account + assemble one planned step into a :class:`StepBatch`.
+
+        ``chunk_arrays`` optionally supplies per-node pre-read chunk data (the
+        async pipeline reads them concurrently ahead of time); when ``None``
+        and ``collect_data`` is set, chunk reads are issued synchronously.
+        ``peer_arrays`` optionally supplies the step's already-gathered peer
+        rows (the async pipeline overlaps :meth:`gather_peers` with in-flight
+        chunk reads); when ``None`` they are gathered here, before any delta
+        is applied.  The plan's recorded admissions/evictions are replayed as
+        deltas so the data buffer mirrors the planned simulation exactly.
+        """
+        chunks = [n.chunks for n in sp.nodes]
+        self._account(
+            chunks,
+            [n.num_pfs_misses for n in sp.nodes],
+            [n.num_real for n in sp.nodes],
+            [n.num_hits for n in sp.nodes],
+            per_node_remote=[n.num_peer for n in sp.nodes],
+            per_node_remote_billable=[
+                sum(1 for f in n.peer_fetches if f.source != n.node)
+                for n in sp.nodes
+            ],
+        )
+        if peer_arrays is None:
+            peer_arrays = self.gather_peers(sp)
+        data = [] if self.collect_data else None
+        # Per-node state (occupancy, mirrors) is keyed by the plan's global
+        # node id, not list position: a for_node() slice carries one plan
+        # per step whose ``node`` is the rank, and must not alias rank 0's
+        # buffer.  chunk_arrays/peer_arrays stay positional (parallel to
+        # sp.nodes).
+        for n, npn in enumerate(sp.nodes):
+            r = npn.node
+            self._occupancy[r] += npn.admissions.size - npn.evictions.size
+            assert self._occupancy[r] <= self.buffer_size
+            if not self.collect_data:
+                continue
+            delta = (npn.admissions, npn.evictions)
+            extra = peer_arrays[n] if peer_arrays is not None else None
+            if chunk_arrays is None:
+                data.append(
+                    self._fetch(r, npn.sample_ids, npn.chunks, delta, extra=extra)
+                )
+            else:
+                t0 = time.perf_counter()
+                data.append(
+                    self._assemble(
+                        r, npn.sample_ids, npn.chunks, chunk_arrays[n], delta,
+                        extra=extra,
+                    )
+                )
+                self.report.wall_time_s += time.perf_counter() - t0
+        return StepBatch(
+            ep.epoch_id,
+            sp.step,
+            [n.sample_ids for n in sp.nodes],
+            data,
+            [n.hit_mask for n in sp.nodes],
+        )
+
+    # -- accounting -----------------------------------------------------------
 
     def _account(
         self,
@@ -262,9 +477,7 @@ class _Base:
             node_times.append(t)
         r.modeled_time_s += max(node_times) if node_times else 0.0
 
-    def remote_time(self, k: int, interconnect_bps: float = 1.0e10,
-                    latency_s: float = 5e-5) -> float:
-        return k * (latency_s + self.store.sample_bytes / interconnect_bps)
+    # -- batch materialization ------------------------------------------------
 
     def _fetch(
         self, node: int, ids, chunks, delta=None, extra=None
@@ -285,7 +498,8 @@ class _Base:
 
         Vectorized: misses come out of the concatenated chunk arrays via
         ``np.searchsorted``, hits out of the :class:`_DataMirror` arena, and
-        anything uncovered (e.g. NoPFS remote-buffer fetches) falls back to a
+        anything uncovered (e.g. peer fetches with no transport, or hits on
+        rows the mirror dropped across a ``fast_forward``) falls back to a
         coalesced scattered read.  ``extra`` is an optional ``(ids, rows)``
         pair of already-fetched samples (the planned peer tier) merged into
         the fetched pool, so peer rows serve both batch assembly and buffer
@@ -331,7 +545,20 @@ class _Base:
                 out[idx] = mirror.rows(slots[found])
                 need[idx] = False
         if need.any():  # remote fetch / uncovered: coalesced direct reads
-            out[need] = self.store.read_scattered(ids[need])
+            fallback = self.store.read_scattered(ids[need])
+            out[need] = fallback
+            # merge into the fetched pool so the delta replay below can admit
+            # these rows (e.g. transport-less peer fetches the plan buffers)
+            # without issuing a second read for the same samples.
+            uids, first = np.unique(ids[need], return_index=True)
+            fetched_ids = np.concatenate([fetched_ids, uids])
+            fetched_data = (
+                np.concatenate([fetched_data, fallback[first]])
+                if fetched_data.size
+                else fallback[first]
+            )
+            order = np.argsort(fetched_ids, kind="stable")
+            fetched_ids, fetched_data = fetched_ids[order], fetched_data[order]
         self._sync_data_buffer(node, fetched_ids, fetched_data, delta)
         return out
 
@@ -343,437 +570,33 @@ class _Base:
         return self._data_buf[node]
 
     def _sync_data_buffer(
-        self, node: int, fetched_ids: np.ndarray, fetched_data: np.ndarray, delta=None
+        self, node: int, fetched_ids: np.ndarray, fetched_data: np.ndarray, delta
     ) -> None:
-        """Mirror the logical buffer: keep rows only for resident ids.
+        """Replay the plan's ``(admissions, evictions)`` delta on the mirror.
 
-        When ``delta`` is ``(admissions, evictions)`` (the SOLAR plan records
-        them), the mirror is updated from the deltas alone; otherwise the
-        resident set is re-derived from :meth:`_resident_ids`.
+        Admitted rows come from the fetched pool (chunks + peer rows); any
+        admission the pool does not cover — defensive, plans normally cover
+        them — is read back from the store so the mirror never holds wrong
+        bytes.
         """
-        if delta is not None:
-            admissions, evictions = delta
-            mirror = self._mirror(node)
-            mirror.evict(evictions)
-            admissions = np.asarray(admissions, np.int64)
-            if admissions.size:
-                pos = np.minimum(
-                    np.searchsorted(fetched_ids, admissions),
-                    max(fetched_ids.size - 1, 0),
-                )
-                covered = (
-                    fetched_ids[pos] == admissions
-                    if fetched_ids.size
-                    else np.zeros(admissions.size, bool)
-                )
-                rows = np.empty(
-                    (admissions.size,) + self.store.sample_shape, self.store.dtype
-                )
-                rows[covered] = fetched_data[pos[covered]]
-                if not covered.all():  # defensive: plan admissions ⊆ chunks
-                    rows[~covered] = self.store.read_scattered(admissions[~covered])
-                mirror.admit(admissions, rows)
-            return
-        resident = self._resident_ids(node)
-        if not resident and self._data_buf[node] is None:
-            return
+        admissions, evictions = delta
         mirror = self._mirror(node)
-        res = np.fromiter(resident, np.int64, count=len(resident))
-        res.sort()
-        if mirror.ids.size:
-            gone = (
-                mirror.ids[~np.isin(mirror.ids, res, assume_unique=True)]
-                if res.size
-                else mirror.ids
+        mirror.evict(evictions)
+        admissions = np.asarray(admissions, np.int64)
+        if admissions.size:
+            pos = np.minimum(
+                np.searchsorted(fetched_ids, admissions),
+                max(fetched_ids.size - 1, 0),
             )
-            mirror.evict(gone)
-        if fetched_ids.size and res.size:
-            keep = np.isin(fetched_ids, res, assume_unique=True)
-            if keep.any():
-                mirror.admit(fetched_ids[keep], fetched_data[keep])
-
-    def _resident_ids(self, node: int) -> set:
-        return set()
-
-
-def _singleton_chunks(ids):
-    from repro.core.plan import ChunkRead
-
-    return tuple(ChunkRead(int(s), int(s) + 1, 1) for s in sorted(ids))
-
-
-class NaiveLoader(_Base):
-    """Fresh shuffle, contiguous split, no buffer, per-sample reads."""
-
-    name = "naive"
-
-    def __iter__(self):
-        for e in range(self.num_epochs):
-            batches = split_global_batches(
-                self.perms[e], self.num_nodes * self.local_batch
+            covered = (
+                fetched_ids[pos] == admissions
+                if fetched_ids.size
+                else np.zeros(admissions.size, bool)
             )
-            for k in range(batches.shape[0]):
-                split = default_node_assignment(batches[k], self.num_nodes)
-                chunks = [_singleton_chunks(ids) for ids in split]
-                self._account(
-                    chunks,
-                    [len(s) for s in split],
-                    [len(s) for s in split],
-                    [0] * self.num_nodes,
-                )
-                data = [self._fetch(n, split[n], chunks[n]) for n in range(self.num_nodes)]
-                yield StepBatch(
-                    e,
-                    k,
-                    list(split),
-                    data if self.collect_data else None,
-                    [np.zeros(len(s), bool) for s in split],
-                )
-
-
-class LRULoader(_Base):
-    """Naive + per-node LRU buffer (paper §5.3 baseline)."""
-
-    name = "lru"
-
-    def __init__(self, *args, **kwargs):
-        super().__init__(*args, **kwargs)
-        self.bufs = [LRUBuffer(self.buffer_size) for _ in range(self.num_nodes)]
-
-    def _resident_ids(self, node):
-        return self.bufs[node].resident
-
-    def __iter__(self):
-        for e in range(self.num_epochs):
-            batches = split_global_batches(
-                self.perms[e], self.num_nodes * self.local_batch
+            rows = np.empty(
+                (admissions.size,) + self.store.sample_shape, self.store.dtype
             )
-            for k in range(batches.shape[0]):
-                split = default_node_assignment(batches[k], self.num_nodes)
-                chunks, hits, masks = [], [], []
-                for n, ids in enumerate(split):
-                    m = np.asarray([int(s) in self.bufs[n] for s in ids])
-                    miss = [int(s) for s in ids[~m]]
-                    chunks.append(_singleton_chunks(miss))
-                    hits.append(int(m.sum()))
-                    masks.append(m)
-                    for s in ids:
-                        self.bufs[n].admit(int(s))
-                self._account(
-                    chunks,
-                    [len(ids) - h for ids, h in zip(split, hits)],
-                    [len(s) for s in split],
-                    hits,
-                )
-                data = [self._fetch(n, split[n], chunks[n]) for n in range(self.num_nodes)]
-                yield StepBatch(e, k, list(split), data if self.collect_data else None, masks)
-
-
-class NoPFSLoader(_Base):
-    """Clairvoyant-next-epoch buffering + remote-buffer fetches (NoPFS analog).
-
-    Eviction uses exact next-use distances but only *within a one-epoch
-    horizon* (NoPFS predicts the next epoch's distribution); a miss checks the
-    other nodes' buffers (hierarchical storage) before touching the PFS —
-    faster than PFS, slower than local, and it is inter-node traffic SOLAR
-    avoids by construction.
-    """
-
-    name = "nopfs"
-
-    def __init__(self, *args, **kwargs):
-        super().__init__(*args, **kwargs)
-        self.bufs = [BeladyBuffer(self.buffer_size) for _ in range(self.num_nodes)]
-
-    def _resident_ids(self, node):
-        return self.bufs[node].resident
-
-    def __iter__(self):
-        d = self.perms.shape[1]
-        gb = self.num_nodes * self.local_batch
-        steps = d // gb
-        span = steps * gb
-        horizon = 2 * span  # current + next epoch
-        for e in range(self.num_epochs):
-            # Access string visible to NoPFS: this epoch + the next one.
-            cur = self.perms[e, :span]
-            nxt_ep = self.perms[e + 1, :span] if e + 1 < self.num_epochs else None
-            window = np.concatenate([cur, nxt_ep]) if nxt_ep is not None else cur
-            next_use = build_next_use_index(window)
-            batches = cur.reshape(steps, gb)
-            for k in range(steps):
-                split = default_node_assignment(batches[k], self.num_nodes)
-                base = k * gb
-                chunks, missc, hits, remote, masks = [], [], [], [], []
-                for n, ids in enumerate(split):
-                    m = np.zeros(len(ids), bool)
-                    miss_pfs, n_remote = [], 0
-                    for i, s in enumerate(ids.tolist()):
-                        pos = base + n * self.local_batch + i
-                        nu = int(next_use[pos]) if pos < window.size else horizon
-                        if s in self.bufs[n]:
-                            m[i] = True
-                            self.bufs[n].update_next_use(s, nu)
-                        elif any(s in self.bufs[r] for r in range(self.num_nodes) if r != n):
-                            n_remote += 1
-                            self.bufs[n].admit(s, nu)
-                        else:
-                            miss_pfs.append(s)
-                            self.bufs[n].admit(s, nu)
-                    chunks.append(_singleton_chunks(miss_pfs))
-                    missc.append(len(miss_pfs))
-                    hits.append(int(m.sum()))
-                    remote.append(n_remote)
-                    masks.append(m)
-                self._account(chunks, missc, [len(s) for s in split], hits, remote)
-                data = [self._fetch(n, split[n], chunks[n]) for n in range(self.num_nodes)]
-                yield StepBatch(e, k, list(split), data if self.collect_data else None, masks)
-
-
-class DeepIOLoader(_Base):
-    """Partition-resident buffers + node-local shuffle (DeepIO analog).
-
-    Maximum reuse, but the randomization is node-local only — the design SOLAR
-    rejects because it degrades surrogate accuracy (paper §4.2.2).
-    """
-
-    name = "deepio"
-
-    def __init__(self, *args, **kwargs):
-        super().__init__(*args, **kwargs)
-        d = self.store.num_samples
-        per = min(self.buffer_size, (d + self.num_nodes - 1) // self.num_nodes)
-        self._partition = [
-            np.arange(n * per, min((n + 1) * per, d)) for n in range(self.num_nodes)
-        ]
-        leftover_start = min(per * self.num_nodes, d)
-        self._leftover = np.arange(leftover_start, d)
-        self._primed = [False] * self.num_nodes
-
-    def _resident_ids(self, node):
-        return set(self._partition[node].tolist())
-
-    def __iter__(self):
-        from repro.core.chunking import plan_chunks
-        from repro.core.plan import ChunkRead
-
-        rng = np.random.Generator(np.random.PCG64(self.seed + 7))
-        steps = self.store.num_samples // (self.num_nodes * self.local_batch)
-        for e in range(self.num_epochs):
-            local_orders = [rng.permutation(p) for p in self._partition]
-            leftover = rng.permutation(self._leftover)
-            lo_steps = (
-                np.array_split(leftover, steps)
-                if leftover.size
-                else [np.empty(0, np.int64)] * steps
-            )
-            for k in range(steps):
-                ids_n, chunks, missc, hits, masks = [], [], [], [], []
-                lo_split = np.array_split(lo_steps[k], self.num_nodes)
-                for n in range(self.num_nodes):
-                    want = self.local_batch - lo_split[n].size
-                    res = np.take(
-                        local_orders[n],
-                        np.arange(k * want, (k + 1) * want),
-                        mode="wrap",
-                    ) if local_orders[n].size else np.empty(0, np.int64)
-                    ids = np.concatenate([res, lo_split[n]])
-                    m = np.zeros(ids.size, bool)
-                    if self._primed[n]:
-                        # Residents are hits; only the leftover tail hits PFS.
-                        m[: res.size] = True
-                        cs = plan_chunks(lo_split[n], max_chunk=16)
-                        miss = int(lo_split[n].size)
-                    else:
-                        # Stage-in: one ranged read of the whole partition
-                        # (DeepIO's whole point) + this step's leftovers.
-                        part = self._partition[n]
-                        cs = ()
-                        if part.size:
-                            cs = (ChunkRead(int(part[0]), int(part[-1]) + 1, part.size),)
-                        cs = cs + plan_chunks(lo_split[n], max_chunk=16)
-                        miss = int(ids.size)
-                        self._primed[n] = True
-                    chunks.append(cs)
-                    ids_n.append(ids)
-                    missc.append(miss)
-                    hits.append(int(m.sum()))
-                    masks.append(m)
-                self._account(chunks, missc, [i.size for i in ids_n], hits)
-                data = [
-                    self._fetch(n, ids_n[n], chunks[n]) for n in range(self.num_nodes)
-                ]
-                yield StepBatch(e, k, ids_n, data if self.collect_data else None, masks)
-
-
-class SolarLoader(_Base):
-    """Executes the SOLAR offline schedule against the store.
-
-    With ``enable_peer`` set on the :class:`SolarConfig`, the schedule's
-    planned peer fetches (DESIGN.md §6) are served through a
-    :class:`~repro.data.peer.PeerExchange` — in-process shared-view transport
-    by default, or any :class:`~repro.data.peer.PeerTransport` passed as
-    ``peer_transport`` — instead of touching the PFS.
-    """
-
-    name = "solar"
-
-    def __init__(
-        self,
-        *args,
-        solar_config: SolarConfig | None = None,
-        peer_transport=None,
-        **kwargs,
-    ):
-        super().__init__(*args, **kwargs)
-        cfg = solar_config or SolarConfig(
-            num_nodes=self.num_nodes,
-            local_batch=self.local_batch,
-            buffer_size=self.buffer_size,
-            seed=self.seed,
-        )
-        if cfg.enable_peer and cfg.peer_cost is None:
-            # Price the peer-vs-PFS decision with this store's real sample
-            # size and the loader's PFS model.
-            cfg = dataclasses.replace(
-                cfg,
-                peer_cost=PeerCostModel(
-                    sample_bytes=self.store.sample_bytes, pfs=self.cost
-                ),
-            )
-        self.solar_config = cfg
-        self.scheduler = OfflineScheduler(self.solar_config)
-        t0 = time.perf_counter()
-        self.schedule: Schedule = self.scheduler.build(
-            self.store.num_samples, self.num_epochs, perms=self.perms
-        )
-        self.schedule_build_s = time.perf_counter() - t0
-        # Buffer occupancy per node, maintained from the plan's recorded
-        # admission/eviction deltas — no per-step resident-set rebuild.
-        self._occupancy = [0] * self.num_nodes
-        self.peer_exchange = None
-        if cfg.enable_peer:
-            from repro.data.peer import PeerExchange, SharedViewTransport
-
-            self.peer_exchange = PeerExchange(
-                peer_transport or SharedViewTransport(self._mirror),
-                self.store.sample_shape,
-                self.store.dtype,
-            )
-
-    @property
-    def capacity(self) -> int:
-        return self.schedule.capacity
-
-    def remote_time(self, k: int, **kwargs) -> float:
-        cfg = self.solar_config
-        if cfg.peer_cost is not None:
-            return cfg.peer_cost.fetch_time(k)
-        return super().remote_time(k, **kwargs)
-
-    def reset_execution(self) -> None:
-        """Forget buffer state so the schedule can be replayed from step 0."""
-        self._occupancy = [0] * self.num_nodes
-        self._data_buf = [None] * self.num_nodes
-
-    def plan_steps(self):
-        """Walk the schedule in execution order, yielding (EpochPlan, StepPlan).
-
-        This is the surface the :class:`repro.data.prefetch.PrefetchExecutor`
-        pipelines over: every future ChunkRead is visible here.  Each walk
-        replays the Belady simulation from an empty buffer.
-        """
-        self.reset_execution()
-        for ep in self.schedule.epochs:
-            for sp in ep.steps:
-                yield ep, sp
-
-    def gather_peers(self, sp) -> list | None:
-        """Serve every node's planned peer fetches for one step, up front.
-
-        Must run before any of the step's admission/eviction deltas are
-        applied (the plan guarantees source residency only at step *start* —
-        a source may evict the fetched sample in this very step, see
-        :mod:`repro.data.peer`).  Returns per-node ``(ids, rows)`` pairs (or
-        ``None`` entries), ready for :meth:`execute_step`'s assembly; samples
-        the transport could not serve are simply absent and fall back to
-        store reads downstream.
-        """
-        if self.peer_exchange is None or not self.collect_data:
-            return None
-        t0 = time.perf_counter()
-        out = []
-        for npn in sp.nodes:
-            if npn.peer_fetches:
-                ids, rows, _missing = self.peer_exchange.gather(npn.peer_fetches)
-                out.append((ids, rows))
-            else:
-                out.append(None)
-        self.report.wall_time_s += time.perf_counter() - t0
-        return out
-
-    def execute_step(self, ep, sp, chunk_arrays=None, peer_arrays=None) -> StepBatch:
-        """Account + assemble one planned step into a :class:`StepBatch`.
-
-        ``chunk_arrays`` optionally supplies per-node pre-read chunk data (the
-        async pipeline reads them concurrently ahead of time); when ``None``
-        and ``collect_data`` is set, chunk reads are issued synchronously.
-        ``peer_arrays`` optionally supplies the step's already-gathered peer
-        rows (the async pipeline overlaps :meth:`gather_peers` with in-flight
-        chunk reads); when ``None`` they are gathered here, before any delta
-        is applied.  The plan's recorded admissions/evictions are replayed as
-        deltas so the data buffer mirrors the Belady simulation exactly.
-        """
-        chunks = [n.chunks for n in sp.nodes]
-        self._account(
-            chunks,
-            [n.num_pfs_misses for n in sp.nodes],
-            [n.num_real for n in sp.nodes],
-            [n.num_hits for n in sp.nodes],
-            per_node_remote=[n.num_peer for n in sp.nodes],
-            per_node_remote_billable=[
-                sum(1 for f in n.peer_fetches if f.source != n.node)
-                for n in sp.nodes
-            ],
-        )
-        if peer_arrays is None:
-            peer_arrays = self.gather_peers(sp)
-        data = [] if self.collect_data else None
-        for n, npn in enumerate(sp.nodes):
-            self._occupancy[n] += npn.admissions.size - npn.evictions.size
-            assert self._occupancy[n] <= self.buffer_size
-            if not self.collect_data:
-                continue
-            delta = (npn.admissions, npn.evictions)
-            extra = peer_arrays[n] if peer_arrays is not None else None
-            if chunk_arrays is None:
-                data.append(
-                    self._fetch(n, npn.sample_ids, npn.chunks, delta, extra=extra)
-                )
-            else:
-                t0 = time.perf_counter()
-                data.append(
-                    self._assemble(
-                        n, npn.sample_ids, npn.chunks, chunk_arrays[n], delta,
-                        extra=extra,
-                    )
-                )
-                self.report.wall_time_s += time.perf_counter() - t0
-        return StepBatch(
-            ep.epoch_id,
-            sp.step,
-            [n.sample_ids for n in sp.nodes],
-            data,
-            [n.hit_mask for n in sp.nodes],
-        )
-
-    def __iter__(self):
-        for ep, sp in self.plan_steps():
-            yield self.execute_step(ep, sp)
-
-
-#: loader-kind registry: the names :class:`repro.data.pipeline.LoaderSpec`
-#: resolves its ``loader`` field through.
-LOADERS = {
-    c.name: c for c in (NaiveLoader, LRULoader, NoPFSLoader, DeepIOLoader, SolarLoader)
-}
+            rows[covered] = fetched_data[pos[covered]]
+            if not covered.all():
+                rows[~covered] = self.store.read_scattered(admissions[~covered])
+            mirror.admit(admissions, rows)

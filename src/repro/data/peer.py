@@ -20,7 +20,7 @@ Ordering contract: all of a step's peer fetches must be issued against the
 buffer state at the *start* of the step — i.e. before any node applies that
 step's admission/eviction deltas — because the plan guarantees residency
 only at step start (the source may evict the sample in the same step).
-:meth:`repro.data.loaders.SolarLoader.gather_peers` upholds this by
+:meth:`repro.data.loaders.ScheduleExecutor.gather_peers` upholds this by
 gathering every node's peer rows before ``execute_step`` touches a mirror.
 
 Samples a transport cannot produce (possible only if the ordering contract

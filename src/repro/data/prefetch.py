@@ -6,20 +6,21 @@ known, so the runtime never has to guess what to read next — it only has to
 does exactly that:
 
   * **schedule mode** (any loader exposing ``plan_steps``/``execute_step``,
-    i.e. :class:`~repro.data.loaders.SolarLoader`): a pipeline thread walks
-    the plan ``depth`` steps ahead of the consumer and submits every
-    node-step's coalesced :class:`~repro.core.plan.ChunkRead` batch to a
-    thread pool, so PFS calls for *different* nodes and *future* steps are in
-    flight concurrently; batches are then assembled strictly in plan order
-    (buffer-mirror deltas are order-dependent) and handed to the consumer
-    through a bounded queue.  A step's planned peer fetches (DESIGN.md §6)
-    are gathered at assembly time — the only point where the buffer mirrors
-    are in the start-of-step state the plan priced — overlapping the tail of
-    that step's still-in-flight chunk reads.
-  * **iterator mode** (all other loaders): the loader's own ``__iter__`` runs
-    on the pipeline thread behind the same bounded queue — reads overlap the
-    consumer's compute, but intra-step reads stay sequential because these
-    loaders decide their accesses online.
+    i.e. :class:`~repro.data.loaders.ScheduleExecutor` — since the plan-first
+    refactor that is *every* strategy, baselines included): a pipeline
+    thread walks the plan ``depth`` steps ahead of the consumer and submits
+    every node-step's coalesced :class:`~repro.core.plan.ChunkRead` batch to
+    a thread pool, so PFS calls for *different* nodes and *future* steps are
+    in flight concurrently; batches are then assembled strictly in plan
+    order (buffer-mirror deltas are order-dependent) and handed to the
+    consumer through a bounded queue.  A step's planned peer fetches
+    (DESIGN.md §6) are gathered at assembly time — the only point where the
+    buffer mirrors are in the start-of-step state the plan priced —
+    overlapping the tail of that step's still-in-flight chunk reads.
+  * **iterator mode** (plain iterables without a plan): the loader's own
+    ``__iter__`` runs on the pipeline thread behind the same bounded queue —
+    reads overlap the consumer's compute, but intra-step reads stay
+    sequential because such loaders decide their accesses online.
 
 The executor is storage-agnostic: chunk reads go through the wrapped
 loader's ``store.read_ranges`` — any :class:`~repro.data.backends.base.

@@ -1,8 +1,15 @@
-"""Training launcher: SOLAR input pipeline + jitted step + checkpointing.
+"""Training launcher: plan-first SOLAR pipeline + jitted step + checkpointing.
 
+    # train (the default subcommand; bare flags keep working)
     PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b \
         --reduced --steps 50 --loader solar --backend sharded \
-        --data /tmp/tokens.bin
+        --data /tmp/tokens.bin --plan-cache /tmp/solar_plans
+
+    # precompute / inspect plan artifacts without training
+    PYTHONPATH=src python -m repro.launch.train plan --loader solar \
+        --num-samples 32768 --nodes 8 --local-batch 32 --buffer 3072 \
+        --epochs 6 --out /tmp/solar.plan.npz
+    PYTHONPATH=src python -m repro.launch.train plan --inspect /tmp/solar.plan.npz
 
 Runs on whatever devices are visible (CPU here; the same code path drives
 the production mesh — the dry-run proves the sharded lowering).
@@ -11,25 +18,46 @@ from __future__ import annotations
 
 import argparse
 import json
+import sys
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
-from repro.data import DatasetSpec, LoaderSpec, backend_names, build_pipeline, build_store
+from repro.data import (
+    STRATEGIES,
+    DatasetSpec,
+    LoaderSpec,
+    backend_names,
+    build_pipeline,
+    build_store,
+)
 from repro.models import encdec, lm
 from repro.optim.adamw import AdamWConfig
 from repro.train.step import init_train_state, make_train_step
 from repro.train.trainer import Trainer
 
 
-def main():
-    ap = argparse.ArgumentParser()
+def _add_pipeline_args(ap: argparse.ArgumentParser) -> None:
+    ap.add_argument("--loader", default="solar", choices=STRATEGIES)
+    ap.add_argument("--num-samples", type=int, default=2048)
+    ap.add_argument("--nodes", type=int, default=2)
+    ap.add_argument("--local-batch", type=int, default=8)
+    ap.add_argument("--buffer", type=int, default=512)
+    ap.add_argument("--epochs", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--plan-cache", default=None,
+                    help="directory memoizing compiled plans by config hash")
+
+
+def _add_train_args(ap: argparse.ArgumentParser) -> None:
     ap.add_argument("--arch", required=True)
+    ap.add_argument("--plan-path", default=None,
+                    help="explicit plan artifact: loaded when present, "
+                         "built + saved there when not")
     ap.add_argument("--reduced", action="store_true",
                     help="smoke-scale model (CPU-trainable)")
-    ap.add_argument("--loader", default="solar",
-                    choices=["naive", "lru", "nopfs", "deepio", "solar"])
+    _add_pipeline_args(ap)
     ap.add_argument("--backend", default="binary", choices=backend_names(),
                     help="storage backend serving --data (created on first "
                          "run in that layout)")
@@ -37,12 +65,7 @@ def main():
                     help="dataset path (default: /tmp/solar_tokens.<backend> "
                          "— per-backend so switching --backend never reopens "
                          "another layout's bytes)")
-    ap.add_argument("--num-samples", type=int, default=2048)
     ap.add_argument("--seq-len", type=int, default=64)
-    ap.add_argument("--nodes", type=int, default=2)
-    ap.add_argument("--local-batch", type=int, default=8)
-    ap.add_argument("--buffer", type=int, default=512)
-    ap.add_argument("--epochs", type=int, default=4)
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--prefetch-depth", type=int, default=2,
                     help="pipeline read-ahead in steps (0 = synchronous)")
@@ -56,8 +79,91 @@ def main():
     ap.add_argument("--checkpoint-dir", default=None)
     ap.add_argument("--checkpoint-every", type=int, default=25)
     ap.add_argument("--resume", action="store_true")
-    args = ap.parse_args()
 
+
+def _add_plan_args(ap: argparse.ArgumentParser) -> None:
+    _add_pipeline_args(ap)
+    ap.add_argument("--out", default=None,
+                    help="save the compiled plan artifact here (loaded "
+                         "instead when it already exists; mutually "
+                         "exclusive with --plan-cache)")
+    ap.add_argument("--inspect", default=None, metavar="PATH",
+                    help="load an existing artifact and report on it "
+                         "instead of compiling")
+    ap.add_argument("--peer-fetch", action="store_true",
+                    help="plan the peer-fetch tier (needs an explicit "
+                         "peer cost model when no dataset is opened; a "
+                         "default is derived from --sample-bytes)")
+    ap.add_argument("--sample-bytes", type=int, default=4096,
+                    help="sample size used to price the peer tier when "
+                         "planning without a dataset; must match the "
+                         "dataset's real sample size for the artifact's "
+                         "config hash to line up with training")
+
+
+def _plan_report(schedule) -> dict:
+    """Stats / hash / per-node load — what the operator wants to see."""
+    st = schedule.stats()
+    # one walk over the plan, grouped by node — slicing a full for_node()
+    # view per rank would copy the whole plan num_nodes times.
+    acc = {
+        r: {"node": r, "pfs_samples": 0, "misses": 0, "hits": 0,
+            "peer_fetches": 0}
+        for r in range(schedule.num_nodes)
+    }
+    for sp in schedule:
+        for npn in sp.nodes:
+            a = acc[npn.node]
+            a["pfs_samples"] += npn.pfs_samples
+            a["misses"] += npn.num_misses
+            a["hits"] += npn.num_hits
+            a["peer_fetches"] += npn.num_peer
+    per_node = [acc[r] for r in sorted(acc)]
+    return {
+        "strategy": schedule.strategy,
+        "config_hash": schedule.config_hash,
+        "artifact_digest": schedule.artifact_digest(),
+        "num_nodes": schedule.num_nodes,
+        "local_batch": schedule.local_batch,
+        "capacity": schedule.capacity,
+        "buffer_size": schedule.buffer_size,
+        "num_epochs": len(schedule.epochs),
+        "num_steps": schedule.num_steps,
+        "stats": st.summary(),
+        "per_node": per_node,
+    }
+
+
+def run_plan(args) -> None:
+    from repro.core.costmodel import PeerCostModel, PFSCostModel
+    from repro.core.plan import Schedule
+    from repro.data import plan
+
+    if args.inspect:
+        schedule = Schedule.load(args.inspect)
+        print(json.dumps(_plan_report(schedule), indent=1))
+        return
+    # Same cost-model shape make_planner derives from an open store, so a
+    # precomputed artifact's config hash matches a later train run whose
+    # dataset has --sample-bytes-sized samples.
+    peer_cost = None
+    if args.peer_fetch:
+        peer_cost = PeerCostModel(
+            sample_bytes=args.sample_bytes,
+            pfs=PFSCostModel(sample_bytes=args.sample_bytes),
+        )
+    spec = LoaderSpec(
+        loader=args.loader, num_nodes=args.nodes,
+        local_batch=args.local_batch, num_epochs=args.epochs,
+        buffer_size=args.buffer, seed=args.seed,
+        peer_fetch=args.peer_fetch, peer_cost=peer_cost,
+        plan_cache=args.plan_cache, plan_path=args.out,
+    )
+    schedule = plan(spec, num_samples=args.num_samples)
+    print(json.dumps(_plan_report(schedule), indent=1))
+
+
+def run_train(args) -> None:
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
@@ -67,9 +173,10 @@ def main():
     spec = LoaderSpec(
         loader=args.loader, backend=args.backend, path=args.data,
         num_nodes=args.nodes, local_batch=args.local_batch,
-        num_epochs=args.epochs, buffer_size=args.buffer, seed=0,
+        num_epochs=args.epochs, buffer_size=args.buffer, seed=args.seed,
         collect_data=True, prefetch_depth=args.prefetch_depth,
         num_workers=args.num_workers, peer_fetch=args.peer_fetch,
+        plan_cache=args.plan_cache, plan_path=args.plan_path,
     )
     store = build_store(
         spec, create=True,
@@ -92,7 +199,10 @@ def main():
     state = init_train_state(params, opt)
     skip = 0
     if args.resume and args.checkpoint_dir:
-        state, skip = Trainer.try_restore(args.checkpoint_dir, state)
+        state, skip = Trainer.try_restore(
+            args.checkpoint_dir, state,
+            plan_hash=getattr(loader, "config_hash", None),
+        )
         print(f"resuming from step {skip}")
 
     def make_batch(sb):
@@ -120,6 +230,25 @@ def main():
     for rec in trainer.metrics_history[:: max(len(trainer.metrics_history) // 10, 1)]:
         print(f"step {rec['step']:5d} loss {rec['loss']:.4f}")
     print(json.dumps(trainer.breakdown(), indent=1))
+
+
+def main(argv=None):
+    argv = list(sys.argv[1:] if argv is None else argv)
+    # Back-compat: a bare flag list is the train subcommand — but leave
+    # top-level help reachable so the plan subcommand stays discoverable.
+    if argv and argv[0] not in ("train", "plan", "-h", "--help"):
+        argv = ["train"] + argv
+    ap = argparse.ArgumentParser(prog="repro.launch.train")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    _add_train_args(sub.add_parser(
+        "train", help="train a model through the plan-first pipeline"))
+    _add_plan_args(sub.add_parser(
+        "plan", help="precompute or inspect a plan artifact (no training)"))
+    args = ap.parse_args(argv)
+    if args.cmd == "plan":
+        run_plan(args)
+    else:
+        run_train(args)
 
 
 if __name__ == "__main__":

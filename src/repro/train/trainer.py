@@ -9,8 +9,11 @@ built around SOLAR's contract:
     ``prefetch_depth`` step batches ready — schedule-driven parallel chunk
     reads for SOLAR, background iteration for the baselines — so PFS reads
     overlap the previous step's compute (the paper's Fig. 6 overlap),
-  * the SOLAR schedule position is part of the checkpoint: restart resumes
-    the exact global-batch sequence (fault tolerance / elasticity),
+  * the plan cursor ``(epoch, step)`` plus the next global step is part of
+    every checkpoint: restart resumes the exact global-batch sequence, and
+    because every strategy now executes a plan, the resume replays the
+    skipped steps' buffer deltas via ``ScheduleExecutor.fast_forward`` —
+    zero I/O instead of re-reading every skipped batch,
   * per-step wall times are tracked separately for load vs compute — the
     paper's Fig. 3 breakdown comes straight from these counters.
 """
@@ -21,7 +24,13 @@ import time
 import jax
 import numpy as np
 
-from repro.checkpoint.checkpoint import AsyncCheckpointer, latest_checkpoint, restore_checkpoint
+from repro.checkpoint.checkpoint import (
+    AsyncCheckpointer,
+    latest_checkpoint,
+    plan_cursor_extra,
+    restore_checkpoint,
+    resume_cursor,
+)
 from repro.data.loaders import StepBatch
 from repro.data.pipeline import LoaderSpec, build_pipeline
 from repro.data.prefetch import PrefetchExecutor
@@ -67,13 +76,29 @@ class Trainer:
     # -- fault tolerance -------------------------------------------------------
 
     @classmethod
-    def try_restore(cls, checkpoint_dir, state_template, shardings=None):
-        """Returns (state, resume_step) — (template, 0) when no checkpoint."""
+    def try_restore(cls, checkpoint_dir, state_template, shardings=None,
+                    plan_hash: str | None = None):
+        """Returns (state, resume_step) — (template, 0) when no checkpoint.
+
+        ``resume_step`` comes from the checkpoint's plan cursor (falling back
+        through the legacy ``solar_step`` key).  When both ``plan_hash`` and
+        the checkpoint record one, a mismatch raises — silently resuming a
+        mid-plan cursor against a *different* plan would train the wrong
+        sample sequence.
+        """
         path = latest_checkpoint(checkpoint_dir) if checkpoint_dir else None
         if path is None:
             return state_template, 0
         state, meta = restore_checkpoint(path, state_template, shardings=shardings)
-        return state, int(meta["extra"].get("solar_step", meta["step"]))
+        saved_hash = meta.get("extra", {}).get("plan_hash")
+        if plan_hash and saved_hash and plan_hash != saved_hash:
+            raise ValueError(
+                f"checkpoint {path} was written against plan {saved_hash}, "
+                f"but the current pipeline executes plan {plan_hash} — "
+                "refusing to resume a cursor into a different plan"
+            )
+        step, _cursor = resume_cursor(meta)
+        return state, step
 
     # -- main loop -------------------------------------------------------------
 
@@ -88,9 +113,18 @@ class Trainer:
             )
         else:  # prefetch_depth=0: fully synchronous loading
             executor = None
+        source = executor if executor is not None else self.loader
         global_step = 0
+        # Plan-first resume: replay the skipped steps' buffer deltas instead
+        # of re-reading their data (ScheduleExecutor.fast_forward; proxied
+        # through a PrefetchExecutor).  Loaders without a plan fall back to
+        # skip-by-iteration.
+        fast_forward = getattr(source, "fast_forward", None)
+        if self.skip_steps and fast_forward is not None:
+            fast_forward(self.skip_steps)
+            global_step = self.skip_steps
         try:
-            for sb in executor if executor is not None else self.loader:
+            for sb in source:
                 if global_step < self.skip_steps:
                     global_step += 1
                     continue
@@ -112,7 +146,12 @@ class Trainer:
                     and global_step % self.checkpoint_every == 0
                 ):
                     self.ckpt.save(
-                        global_step, self.state, extra={"solar_step": global_step}
+                        global_step,
+                        self.state,
+                        extra=plan_cursor_extra(
+                            global_step, sb.epoch, sb.step,
+                            plan_hash=getattr(self.loader, "config_hash", None),
+                        ),
                     )
                 if max_steps is not None and global_step >= max_steps:
                     break

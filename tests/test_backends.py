@@ -320,6 +320,30 @@ def test_loaderspec_rejects_bad_geometry(stores):
         LoaderSpec(store=stores["binary"], prefetch_depth=-1).validate()
 
 
+def test_loaderspec_rejects_path_and_store_together(stores, tmp_path):
+    """Both set used to mean 'store silently wins, backend+path ignored' —
+    now it is reported as the ambiguity it is."""
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        LoaderSpec(store=stores["binary"],
+                   path=str(tmp_path / "ds.bin")).validate()
+    # the store= argument on build_pipeline is the *opened* form of the
+    # spec's path, not a second source — that combination stays legal.
+    p = str(tmp_path / "ok.bin")
+    create_store(p, "binary", spec=SPEC, fill="arange").close()
+    ld = build_pipeline(
+        LoaderSpec(loader="naive", path=p, num_nodes=2, local_batch=8,
+                   buffer_size=16),
+        store=stores["binary"],
+    )
+    assert ld.store is stores["binary"]
+
+
+def test_loaderspec_rejects_negative_seed(stores):
+    with pytest.raises(ValueError, match="seed must be >= 0"):
+        LoaderSpec(store=stores["binary"], seed=-1).validate()
+    LoaderSpec(store=stores["binary"], seed=0).validate()
+
+
 def test_loaderspec_cross_checks_solar_config(stores):
     cfg = SolarConfig(num_nodes=2, local_batch=8, buffer_size=64)
     with pytest.raises(ValueError, match="contradicts"):
@@ -341,6 +365,31 @@ def test_loaderspec_collects_all_errors_at_once(stores):
     msg = str(ei.value)
     assert "unknown loader" in msg and "unknown backend" in msg
     assert "num_nodes" in msg and "'path' or 'store'" in msg
+
+
+def test_build_store_rejects_duplicate_create_options(tmp_path):
+    """A key in both create_options and spec.backend_options used to die as
+    a bare TypeError (duplicate kwarg); it must be a named ValueError."""
+    from repro.data import build_store
+
+    spec = LoaderSpec(
+        backend="sharded", path=str(tmp_path / "dup.sh"),
+        backend_options={"num_shards": 4},
+    )
+    with pytest.raises(ValueError, match="num_shards"):
+        build_store(spec, create=True, dataset=SPEC, num_shards=8)
+    # the reserved 'spec' key collides with create_store's own parameter
+    with pytest.raises(ValueError, match="dataset="):
+        build_store(
+            spec.replace(backend_options={"spec": SPEC}), create=True,
+        )
+    # the same option in exactly one place creates fine
+    ok = build_store(
+        spec.replace(backend_options={}), create=True, dataset=SPEC,
+        num_shards=4, fill="arange",
+    )
+    assert len(ok.shards) == 4
+    ok.close()
 
 
 def test_build_pipeline_opens_path_through_registry(tmp_path):

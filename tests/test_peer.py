@@ -229,11 +229,11 @@ class _DeadTransport:
 def test_dead_transport_falls_back_to_store_reads(tmp_path):
     store = _arange_store(tmp_path, "binary")
     spec = _peer_spec(store, peer=True)
-    from repro.data.loaders import SolarLoader
+    from repro.data import plan
+    from repro.data.loaders import ScheduleExecutor
 
-    ld = SolarLoader(
-        store, spec.num_nodes, spec.local_batch, spec.num_epochs,
-        spec.buffer_size, spec.seed, collect_data=True,
+    ld = ScheduleExecutor(
+        store, plan(spec), collect_data=True,
         solar_config=spec.solar, peer_transport=_DeadTransport(),
     )
     for sb in ld:

@@ -1,0 +1,410 @@
+"""The plan artifact: parity with the pre-refactor loaders, save/load
+round-trips, process-stable digests, integrity failures, per-rank slicing,
+the plan cache, and plan-cursor fast-forward."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core.plan import PlanArtifactError, Schedule
+from repro.core.planners import PlanCache
+from repro.data import (
+    DatasetSpec,
+    LoaderSpec,
+    build_pipeline,
+    create_store,
+    execute,
+    make_planner,
+    plan,
+    stream_digest,
+)
+
+ALL = ["naive", "lru", "nopfs", "deepio", "solar"]
+
+#: stream digests of the five pre-refactor loader classes (recorded at the
+#: PR-3 tree, store: 512 x (8,) float32 'arange').  The plan-first executor
+#: must reproduce every byte: ids, hit masks, data, epoch/step numbering.
+PRE_REFACTOR_DIGESTS = {
+    "A/naive": "f8071a1d2252db9a3e552ebf0de5ff6b688e414ec2f8bdd824ec9067bbea4eb6",
+    "A/lru": "20dd5192d6c9859c8f447f5cae472a210b96c10f40c1f49cdeba4899c78e6de5",
+    "A/nopfs": "766e151361e56626716e44dcc089cd0a12a3d69a9b28de526e8e0570b6380719",
+    "A/deepio": "f9353976fd056ffbea11f1b499db8c8f230d275247a6b74e8793462e8e5cf610",
+    "A/solar": "f44b7ab8ab1b9c19774adb659b73349e71ff287f5ea3bef141151e33234675de",
+    "B/naive": "445aee464c36c740c7cda28485d658debf8a2358684d58ded03d158bda6d7644",
+    "B/lru": "39b5f496fc89439754ea19409fddeb08f7d8574a40611e8f243d0cf496c406f3",
+    "B/nopfs": "e2ab20b35e488a15b54d1fc8e9badf5989f108b2cc4bd196fdc5e16418887e54",
+    "B/deepio": "c74934741e37c2c4ff45407aa0953a347cd5882dc01fe842cdbcd9f932bd893c",
+    "B/solar": "f50d60ac6c484b94b5970be62feb9469126d7c27ff38e0b94846ab4145f4b8e3",
+    "peer/solar": "d2718653f7981ae5013315c0921cedcac476c6e8e066c2d4404e417437a3aa0c",
+}
+
+#: pre-refactor LoaderReport totals at config A (same recording run).
+PRE_REFACTOR_ACCOUNTING = {
+    "naive": dict(numPFS=1024, misses=1024, remote=0, hits=0, modeled=1.024004096),
+    "lru": dict(numPFS=1005, misses=1005, remote=0, hits=19, modeled=1.02000408),
+    "nopfs": dict(numPFS=768, misses=768, remote=189, hits=67, modeled=0.786703309),
+    "deepio": dict(numPFS=1249, misses=528, remote=0, hits=496, modeled=0.516003072),
+    "solar": dict(numPFS=1091, misses=439, remote=0, hits=585, modeled=0.40800376),
+}
+
+CONFIG_A = dict(num_nodes=4, local_batch=8, num_epochs=2, buffer_size=64, seed=0)
+CONFIG_B = dict(num_nodes=2, local_batch=16, num_epochs=3, buffer_size=96, seed=1)
+
+
+@pytest.fixture(scope="module")
+def store(tmp_path_factory):
+    p = tmp_path_factory.mktemp("plan") / "ds.bin"
+    s = create_store(str(p), "binary", spec=DatasetSpec(512, (8,), "<f4"),
+                     fill="arange")
+    yield s
+    s.close()
+
+
+def _spec(name, store, geo=CONFIG_A, **kw):
+    return LoaderSpec(loader=name, store=store, collect_data=True, **geo, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Parity with the pre-refactor loader classes
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ALL)
+@pytest.mark.parametrize("tag,geo", [("A", CONFIG_A), ("B", CONFIG_B)])
+def test_executor_matches_pre_refactor_digests(store, name, tag, geo):
+    assert stream_digest(build_pipeline(_spec(name, store, geo))) == \
+        PRE_REFACTOR_DIGESTS[f"{tag}/{name}"]
+
+
+def test_peer_tier_matches_pre_refactor_digest(tmp_path):
+    from repro.core.scheduler import SolarConfig
+
+    s = create_store(str(tmp_path / "peer.bin"), "binary",
+                     spec=DatasetSpec(1024, (8,), "<f4"), fill="arange")
+    solar = SolarConfig(num_nodes=4, local_batch=16, buffer_size=128,
+                        capacity_factor=1.0, enable_peer=True, seed=0)
+    ld = build_pipeline(LoaderSpec(
+        loader="solar", store=s, num_nodes=4, local_batch=16, num_epochs=3,
+        buffer_size=128, seed=0, collect_data=True, solar=solar,
+        peer_fetch=True,
+    ))
+    assert stream_digest(ld) == PRE_REFACTOR_DIGESTS["peer/solar"]
+    assert ld.peer_exchange.fallbacks == 0
+    s.close()
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_executor_matches_pre_refactor_accounting(store, name):
+    ld = build_pipeline(_spec(name, store))
+    for _ in ld:
+        pass
+    r, pin = ld.report, PRE_REFACTOR_ACCOUNTING[name]
+    assert r.total_pfs == pin["numPFS"]
+    assert r.total_misses == pin["misses"]
+    assert r.total_remote == pin["remote"]
+    assert r.total_hits == pin["hits"]
+    assert r.modeled_time_s == pytest.approx(pin["modeled"])
+
+
+# ---------------------------------------------------------------------------
+# Save -> load round-trip
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_save_load_roundtrip_bit_identical_stream(store, tmp_path, name):
+    spec = _spec(name, store)
+    schedule = plan(spec)
+    path = str(tmp_path / f"{name}.plan.npz")
+    schedule.save(path)
+    loaded = Schedule.load(path)
+    assert loaded.strategy == name
+    assert loaded.config_hash == schedule.config_hash
+    assert loaded.artifact_digest() == schedule.artifact_digest()
+    assert stream_digest(execute(spec, loaded)) == \
+        stream_digest(execute(spec, schedule))
+
+
+def test_artifact_digest_stable_across_fresh_processes(tmp_path):
+    """Two cold python processes must agree on the artifact digest — the
+    property that makes config-hash cache keys and digests shippable."""
+    prog = (
+        "from repro.data import LoaderSpec, plan;"
+        "s = plan(LoaderSpec(loader='lru', num_nodes=2, local_batch=8,"
+        " buffer_size=32, num_epochs=2, seed=3), num_samples=128);"
+        "print(s.config_hash, s.artifact_digest())"
+    )
+    env = dict(os.environ, PYTHONPATH="src")
+    outs = {
+        subprocess.run(
+            [sys.executable, "-c", prog], capture_output=True, text=True,
+            check=True, cwd=os.path.dirname(os.path.dirname(__file__)),
+            env=env,
+        ).stdout.strip()
+        for _ in range(2)
+    }
+    assert len(outs) == 1, outs
+
+
+def test_corrupt_artifact_fails_loudly(store, tmp_path):
+    path = str(tmp_path / "c.plan.npz")
+    plan(_spec("solar", store)).save(path)
+    raw = bytearray(open(path, "rb").read())
+    raw[len(raw) // 2] ^= 0xFF
+    with open(path, "wb") as f:
+        f.write(bytes(raw))
+    with pytest.raises(PlanArtifactError):
+        Schedule.load(path)
+
+
+def test_mismatched_config_hash_fails_loudly(store, tmp_path):
+    path = str(tmp_path / "m.plan.npz")
+    plan(_spec("solar", store)).save(path)
+    with pytest.raises(PlanArtifactError, match="config hash"):
+        Schedule.load(path, expect_hash="deadbeefdeadbeef")
+    # a plan_path pinned to a different config is refused end-to-end
+    other = _spec("solar", store, geo=dict(CONFIG_A, seed=7),
+                  plan_path=path)
+    with pytest.raises(PlanArtifactError, match="config hash"):
+        plan(other)
+
+
+def test_execute_rejects_foreign_schedule(store):
+    schedule = plan(_spec("solar", store))
+    with pytest.raises(ValueError, match="planned by"):
+        execute(_spec("naive", store), schedule)
+    with pytest.raises(ValueError, match="num_nodes"):
+        execute(_spec("solar", store, geo=dict(CONFIG_A, num_nodes=2)),
+                schedule)
+    with pytest.raises(ValueError, match="different config"):
+        execute(_spec("solar", store, geo=dict(CONFIG_A, seed=9)), schedule)
+
+
+# ---------------------------------------------------------------------------
+# Per-rank slicing
+# ---------------------------------------------------------------------------
+
+
+def test_for_node_partitions_the_plan(store):
+    schedule = plan(_spec("solar", store))
+    slices = [schedule.for_node(r) for r in range(schedule.num_nodes)]
+    full = schedule.stats()
+    assert sum(s.stats().total_misses for s in slices) == full.total_misses
+    assert sum(s.stats().total_hits for s in slices) == full.total_hits
+    for sp_idx, sp in enumerate(schedule.epochs[0].steps):
+        union = np.sort(np.concatenate([
+            s.epochs[0].steps[sp_idx].nodes[0].sample_ids for s in slices
+        ]))
+        assert np.array_equal(union, np.sort(sp.global_batch()))
+    for s in slices:
+        assert all(len(sp.nodes) == 1 for ep in s.epochs for sp in ep.steps)
+    with pytest.raises(ValueError, match="rank"):
+        schedule.for_node(schedule.num_nodes)
+
+
+# ---------------------------------------------------------------------------
+# PlanCache + spec plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_plan_cache_miss_hit_and_corruption_recovery(store, tmp_path):
+    spec = _spec("solar", store)
+    planner = make_planner(spec)
+    cache = PlanCache(str(tmp_path / "cache"))
+    s1, hit1 = cache.load_or_build(planner, store.num_samples, 2)
+    s2, hit2 = cache.load_or_build(planner, store.num_samples, 2)
+    assert (hit1, hit2) == (False, True)
+    assert s2.artifact_digest() == s1.artifact_digest()
+    # corrupt the entry: treated as a miss, dropped, rebuilt
+    key = planner.cache_key(store.num_samples, 2)
+    with open(cache.path_for(key), "wb") as f:
+        f.write(b"not a plan")
+    assert cache.get(key) is None
+    assert not os.path.exists(cache.path_for(key))
+    _, hit3 = cache.load_or_build(planner, store.num_samples, 2)
+    assert hit3 is False
+
+
+@pytest.mark.parametrize("field", ["plan_cache", "plan_path"])
+def test_spec_plan_persistence_end_to_end(store, tmp_path, field):
+    """build_pipeline with plan_cache/plan_path: first run writes the
+    artifact, second run loads it, streams stay bit-identical."""
+    value = str(tmp_path / ("cache" if field == "plan_cache" else "a.plan.npz"))
+    spec = _spec("solar", store, **{field: value})
+    d1 = stream_digest(build_pipeline(spec))
+    if field == "plan_cache":
+        entries = os.listdir(value)
+        assert len(entries) == 1 and entries[0].startswith("plan_")
+    else:
+        assert os.path.exists(value)
+    d2 = stream_digest(build_pipeline(spec))
+    assert d1 == d2 == PRE_REFACTOR_DIGESTS["A/solar"]
+
+
+def test_spec_rejects_plan_cache_and_plan_path_together(store):
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        _spec("solar", store, plan_cache="/tmp/x", plan_path="/tmp/y").validate()
+
+
+def test_plan_without_dataset_via_num_samples():
+    spec = LoaderSpec(loader="nopfs", num_nodes=2, local_batch=8,
+                      buffer_size=32, num_epochs=2)
+    schedule = plan(spec, num_samples=128)
+    assert schedule.num_steps == 2 * (128 // 16)
+    schedule.validate()
+
+
+def test_plan_with_path_and_num_samples_serves_peer_geometry(tmp_path):
+    """An explicit num_samples next to a real dataset path must not starve
+    the peer tier of sample_bytes — the path is right there to open."""
+    p = str(tmp_path / "pg.bin")
+    create_store(p, "binary", spec=DatasetSpec(1024, (8,), "<f4"),
+                 fill="arange").close()
+    spec = LoaderSpec(loader="solar", path=p, num_nodes=4, local_batch=16,
+                      buffer_size=128, num_epochs=2, peer_fetch=True)
+    a = plan(spec)
+    b = plan(spec, num_samples=1024)
+    assert a.config_hash == b.config_hash
+
+
+def test_plan_cache_entries_are_schema_versioned(store, tmp_path):
+    from repro.core.plan import PLAN_SCHEMA_VERSION
+
+    cache = PlanCache(str(tmp_path / "vc"))
+    key = make_planner(_spec("naive", store)).cache_key(store.num_samples, 2)
+    assert f"plan_v{PLAN_SCHEMA_VERSION}_{key}" in cache.path_for(key)
+
+
+def test_precomputed_peer_artifact_matches_training_hash(tmp_path):
+    """The `train plan --peer-fetch` workflow: an artifact planned with only
+    --sample-bytes (no dataset) must be loadable by a training run whose
+    store has that sample size — the config hashes must line up."""
+    from repro.core.costmodel import PeerCostModel, PFSCostModel
+
+    s = create_store(str(tmp_path / "peer_sb.bin"), "binary",
+                     spec=DatasetSpec(1024, (8,), "<f4"), fill="arange")
+    path = str(tmp_path / "peer.plan.npz")
+    # the plan subcommand's spec shape: explicit peer cost, no dataset
+    offline = LoaderSpec(
+        loader="solar", num_nodes=4, local_batch=16, buffer_size=128,
+        num_epochs=2, peer_fetch=True, plan_path=path,
+        peer_cost=PeerCostModel(
+            sample_bytes=s.sample_bytes,
+            pfs=PFSCostModel(sample_bytes=s.sample_bytes),
+        ),
+    )
+    saved = plan(offline, num_samples=s.num_samples)
+    # the training side: same geometry, cost model derived from the store
+    training = LoaderSpec(
+        loader="solar", store=s, num_nodes=4, local_batch=16,
+        buffer_size=128, num_epochs=2, peer_fetch=True, plan_path=path,
+    )
+    loaded = plan(training)       # raises PlanArtifactError on hash mismatch
+    assert loaded.config_hash == saved.config_hash
+    s.close()
+
+
+def test_execute_closes_store_it_opened_on_mismatch(store, tmp_path,
+                                                    monkeypatch):
+    """A schedule rejected by execute() must not leak the store execute()
+    itself opened from the spec's path (the caller never gets the handle)."""
+    import repro.data.pipeline as pipeline_mod
+
+    p = str(tmp_path / "leak.bin")
+    create_store(p, "binary", spec=DatasetSpec(512, (8,), "<f4"),
+                 fill="arange").close()
+    schedule = plan(_spec("solar", store))
+    opened = []
+    orig = pipeline_mod.build_store
+
+    def spy(spec, **kw):
+        st = orig(spec, **kw)
+        opened.append(st)
+        return st
+
+    monkeypatch.setattr(pipeline_mod, "build_store", spy)
+    by_path = LoaderSpec(loader="naive", path=p, collect_data=True, **CONFIG_A)
+    with pytest.raises(ValueError, match="planned by"):
+        execute(by_path, schedule)
+    assert opened and all(st.closed for st in opened)
+    # a caller-provided store is never closed on the same failure
+    with pytest.raises(ValueError, match="planned by"):
+        execute(_spec("naive", store), schedule)
+    assert not store.closed
+
+
+# ---------------------------------------------------------------------------
+# Plan validation + fast-forward
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_every_strategy_plan_validates(store, name):
+    plan(_spec(name, store)).validate()
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_fast_forward_matches_full_stream_tail(store, name):
+    spec = _spec(name, store)
+    full = list(build_pipeline(spec))
+    resumed = build_pipeline(spec)
+    k = len(full) // 2
+    resumed.fast_forward(k)
+    tail = list(resumed)
+    assert len(tail) == len(full) - k
+    assert stream_digest(tail) == stream_digest(full[k:]), name
+
+
+def test_fast_forward_restages_buffers_instead_of_per_step_fallbacks(tmp_path):
+    """Resume must cost one coalesced buffer refill, then read exactly what
+    an uninterrupted run reads — not a scattered store read per planned hit
+    per step for the rest of the run."""
+    s = create_store(str(tmp_path / "ff.bin"), "binary",
+                     spec=DatasetSpec(256, (8,), "<f4"), fill="arange")
+    spec = LoaderSpec(loader="solar", store=s, num_nodes=2, local_batch=8,
+                      num_epochs=3, buffer_size=256, collect_data=True)
+    k = 2 * (256 // 16)
+
+    def _rest_after(pipeline, skip_via_ff: bool):
+        """Consume up to step k+1, reset counters, return (batches, stats)."""
+        if skip_via_ff:
+            pipeline.fast_forward(k)
+        it = iter(pipeline)
+        first = [next(it)]
+        if not skip_via_ff:
+            for _ in range(k):
+                first.append(next(it))
+        s.reset_counters()
+        rest = list(it)
+        return first[-1:] + rest, (s.read_calls, s.bytes_read)
+
+    full, full_stats = _rest_after(build_pipeline(spec), skip_via_ff=False)
+    resumed, resumed_stats = _rest_after(build_pipeline(spec), skip_via_ff=True)
+    assert stream_digest(resumed) == stream_digest(full)
+    # past the refill step, the resumed mirror equals the uninterrupted
+    # run's mirror, so the physical read pattern must match exactly.
+    assert resumed_stats == full_stats
+    s.close()
+
+
+def test_for_node_slice_executes_with_correct_attribution(store):
+    """A for_node() slice must replay against the rank's own buffer state
+    (occupancy, mirror) — not alias position 0 — and reproduce exactly the
+    rank's share of the full run."""
+    spec = _spec("solar", store)
+    schedule = plan(spec)
+    full = list(execute(spec, schedule))
+    for rank in (0, 3):
+        view = execute(spec, schedule.for_node(rank))
+        for sb, ref in zip(view, full):
+            assert len(sb.node_ids) == 1
+            assert np.array_equal(sb.node_ids[0], ref.node_ids[rank])
+            assert np.array_equal(sb.hit_masks[0], ref.hit_masks[rank])
+            assert np.array_equal(sb.node_data[0], ref.node_data[rank])
+        # buffer bookkeeping accrued on the rank's own index
+        occ = view._occupancy if hasattr(view, "_occupancy") else None
+        assert occ is not None
+        assert occ[rank] > 0
+        assert all(occ[r] == 0 for r in range(len(occ)) if r != rank)

@@ -83,11 +83,21 @@ def test_async_counting_only(store_path):
     assert ld.report.total_samples == n * 32
 
 
-def test_solar_executor_uses_schedule_mode(store_path):
-    ld = _ld("solar", ChunkStore(store_path), 4, 8, 1, 64, 0)
-    assert PrefetchExecutor(ld).mode == "schedule"
-    ld2 = _ld("naive", ChunkStore(store_path), 4, 8, 1, 64, 0)
-    assert PrefetchExecutor(ld2).mode == "iterator"
+def test_all_strategies_use_schedule_mode(store_path):
+    """Plan-first: every strategy executes a Schedule, so every pipeline
+    gets schedule-mode parallel chunk reads; iterator mode remains for
+    plain iterables without a plan."""
+    for name in ALL:
+        ld = _ld(name, ChunkStore(store_path), 4, 8, 1, 64, 0)
+        assert PrefetchExecutor(ld).mode == "schedule", name
+
+    class _PlanlessLoader:
+        collect_data = False
+
+        def __iter__(self):
+            return iter(())
+
+    assert PrefetchExecutor(_PlanlessLoader()).mode == "iterator"
 
 
 def test_pipeline_prefetch_knobs(store_path):
