@@ -23,6 +23,7 @@ from benchmarks import (
     batch_dist,
     breakdown,
     chunkable,
+    dist,
     epoch_order,
     loaders,
     numpfs,
@@ -46,6 +47,7 @@ SUITES = {
     "backends": backends.run,           # storage-backend shoot-out
     "peer": peer.run,                   # peer-fetch tier vs PFS-only
     "plan": plan.run,                   # plan-once/train-many amortization
+    "dist": dist.run,                   # multi-process runtime digest parity
 }
 
 

@@ -71,3 +71,46 @@ steps = sum(1 for _ in ld)  # trips the occupancy assert if the bug returns
 assert steps == 3 * (32768 // 512), steps
 print(f"smoke fig13 occupancy regression: OK ({steps} steps)")
 PY
+
+# 2-process distributed smoke (DESIGN.md §8): a real 2-rank launcher run
+# over the socket peer transport must produce per-rank stream digests
+# bit-identical to the same plan executed in-process, with zero fallbacks.
+# Staged as a real file with a __main__ guard: multiprocessing's spawn
+# re-imports the parent's main module, which a stdin heredoc cannot satisfy.
+DIST_SMOKE="$(mktemp -t solar_dist_smoke.XXXXXX.py)"
+trap 'rm -f "$DIST_SMOKE"' EXIT
+cat > "$DIST_SMOKE" <<'PY'
+import os
+import tempfile
+
+from repro.core.scheduler import SolarConfig
+from repro.data import DatasetSpec, LoaderSpec, create_store
+from repro.runtime import in_process_digests, run_distributed
+
+
+def main():
+    path = os.path.join(tempfile.mkdtemp(), "dist_smoke")
+    create_store(
+        path, "binary", spec=DatasetSpec(1024, (8,), "<f4"), fill="arange"
+    ).close()
+    solar = SolarConfig(num_nodes=2, local_batch=16, buffer_size=256, seed=0,
+                        capacity_factor=1.0, enable_peer=True)
+    spec = LoaderSpec(
+        loader="solar", backend="binary", path=path, num_nodes=2,
+        local_batch=16, num_epochs=2, buffer_size=256, collect_data=True,
+        peer_fetch=True, solar=solar, transport="socket",
+    )
+    report = run_distributed(spec, timeout_s=240.0)
+    assert report.ok, f"dead ranks: {report.dead}"
+    assert report.digests() == in_process_digests(spec), "digest mismatch"
+    assert sum(r.peer_fallbacks for r in report.ranks) == 0
+    served = sum(r.peer_served for r in report.ranks)
+    assert served > 0, "socket tier never fired"
+    print(f"smoke distributed: OK (2 ranks, {report.ranks[0].steps} steps, "
+          f"{served} peer-served, digest parity)")
+
+
+if __name__ == "__main__":
+    main()
+PY
+python "$DIST_SMOKE"

@@ -31,7 +31,12 @@ from repro.data.loaders import (
     stream_digest,
     update_batch_digest,
 )
-from repro.data.peer import PeerExchange, SharedViewTransport, SocketTransport
+from repro.data.peer import (
+    AddressBookError,
+    PeerExchange,
+    SharedViewTransport,
+    SocketTransport,
+)
 from repro.data.pipeline import (
     LoaderSpec,
     build_pipeline,
@@ -44,6 +49,7 @@ from repro.data.prefetch import PrefetchExecutor
 from repro.data.storage import ChunkStore, create_synthetic_store
 
 __all__ = [
+    "AddressBookError",
     "ChunkStore",
     "DatasetSpec",
     "LoaderSpec",

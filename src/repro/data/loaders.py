@@ -119,6 +119,10 @@ class LoaderReport:
     wall_time_s: float = 0.0
     total_hits: int = 0
     total_samples: int = 0
+    #: samples served *by* each source node over the peer tier (serving-load
+    #: accounting, mirrored from :attr:`PeerExchange.served_by_source` —
+    #: read imbalance lives in ``pfs_counts``, serving imbalance lives here).
+    served_by_source: dict = dataclasses.field(default_factory=dict)
 
     @property
     def total_pfs(self) -> int:
@@ -146,6 +150,9 @@ class LoaderReport:
             "numPFS": self.total_pfs,
             "misses": self.total_misses,
             "remote_fetches": self.total_remote,
+            "peer_served_by_source": {
+                str(k): int(v) for k, v in sorted(self.served_by_source.items())
+            },
             "hit_rate": round(self.hit_rate, 4),
             "modeled_time_s": round(self.modeled_time_s, 3),
             "wall_time_s": round(self.wall_time_s, 3),
@@ -379,6 +386,10 @@ class ScheduleExecutor:
                 out.append((ids, rows))
             else:
                 out.append(None)
+        self.report.served_by_source = {
+            int(k): int(v)
+            for k, v in self.peer_exchange.served_by_source.items()
+        }
         self.report.wall_time_s += time.perf_counter() - t0
         return out
 

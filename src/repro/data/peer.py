@@ -10,11 +10,16 @@ interface:
     :class:`~repro.data.loaders._DataMirror` in this process, so a fetch is
     a vectorized arena gather.  This is the semantic reference: digest
     parity against the PFS path is proved against it.
-  * :class:`SocketTransport` — the interface stub for a real deployment,
-    where each node runs a serving thread over its buffer arena and fetches
-    are RPCs on the training interconnect.  Construction (address book,
-    knobs) works so configs can be written and validated today; ``fetch``
-    raises :class:`NotImplementedError` until the wire protocol lands.
+  * :class:`SocketTransport` — the real deployment transport: every node
+    runs a :class:`~repro.runtime.server.BufferServer` over its buffer
+    arena, and a fetch is one framed request/response round trip on the
+    training interconnect (:mod:`repro.runtime.wire` — length-prefixed
+    frames, SHA-256 checksums, geometry negotiation on connect).  Any wire
+    failure — truncated frame, checksum mismatch, dead peer, a stale-step
+    refusal from the server — degrades to "nothing served" and the loader
+    re-reads from the PFS; only a *geometry* disagreement fails loudly
+    (:class:`~repro.runtime.wire.HandshakeError`), because silently
+    PFS-falling-back forever would mask a misconfigured deployment.
 
 Ordering contract: all of a step's peer fetches must be issued against the
 buffer state at the *start* of the step — i.e. before any node applies that
@@ -30,6 +35,8 @@ tier degrades to correctness-preserving slow paths, never wrong bytes.
 """
 from __future__ import annotations
 
+import contextlib
+import socket
 from typing import Callable, Mapping, Protocol, Sequence, runtime_checkable
 
 import numpy as np
@@ -37,11 +44,17 @@ import numpy as np
 from repro.core.plan import PeerFetch
 
 __all__ = [
+    "AddressBookError",
     "PeerTransport",
     "SharedViewTransport",
     "SocketTransport",
     "PeerExchange",
 ]
+
+
+class AddressBookError(ValueError):
+    """An invalid peer address book: duplicate ``(host, port)`` endpoints,
+    a node's own endpoint listed as a peer, or an out-of-range port."""
 
 
 @runtime_checkable
@@ -78,12 +91,28 @@ class SharedViewTransport:
 
 
 class SocketTransport:
-    """Socket-RPC transport stub: same interface, wire protocol TBD.
+    """Socket-RPC transport over per-node buffer servers.
 
-    ``endpoints`` maps node id -> ``(host, port)`` of that node's buffer
-    server.  The constructor validates the address book so deployment
-    configs can be built and round-tripped now; :meth:`fetch` raises until
-    the serving side exists.
+    ``endpoints`` maps *peer* node id -> ``(host, port)`` of that node's
+    :class:`~repro.runtime.server.BufferServer`.  The address book is
+    validated up front with named errors (:class:`AddressBookError`):
+    duplicate ``(host, port)`` pairs (two nodes cannot share one server),
+    ``self_node`` listed among the peers (a node never dials itself — its
+    own samples are served straight from the local mirror via
+    ``mirror_of``), and out-of-range ports.
+
+    One persistent connection per source, established lazily with a
+    geometry handshake (expected node id, sample shape, dtype — the server
+    refuses a mismatched client, and the mismatch raises
+    :class:`~repro.runtime.wire.HandshakeError` here).  :meth:`at_step`
+    stamps subsequent fetches with the requester's global step index, which
+    the serving side uses as its step-epoch guard.
+
+    Failure semantics: any :class:`~repro.runtime.wire.WireError` or socket
+    error — including a peer that died mid-step or an endpoint that never
+    appeared in the book — yields an all-False ok mask, so the caller falls
+    back to PFS reads.  The failed connection is dropped and redialed on
+    the next fetch, so a restarted peer is picked back up automatically.
     """
 
     def __init__(
@@ -91,21 +120,157 @@ class SocketTransport:
         endpoints: Mapping[int, tuple[str, int]],
         *,
         timeout_s: float = 1.0,
+        self_node: int | None = None,
+        mirror_of: Callable[[int], object] | None = None,
+        sample_shape: tuple[int, ...] | None = None,
+        dtype=None,
     ):
         self.endpoints = {
             int(node): (str(host), int(port))
             for node, (host, port) in endpoints.items()
         }
         self.timeout_s = float(timeout_s)
+        self.self_node = None if self_node is None else int(self_node)
+        self._mirror_of = mirror_of
+        self.sample_shape = (
+            None if sample_shape is None
+            else tuple(int(x) for x in sample_shape)
+        )
+        self.dtype = None if dtype is None else np.dtype(dtype)
+        self._step = -1
+        self._conns: dict[int, socket.socket] = {}
+        errs = []
+        seen: dict[tuple[str, int], int] = {}
+        for node in sorted(self.endpoints):
+            host, port = self.endpoints[node]
+            if not 0 < port < 65536:
+                errs.append(f"node {node}: port {port} out of range [1, 65535]")
+            if (host, port) in seen:
+                errs.append(
+                    f"duplicate endpoint {(host, port)} for nodes "
+                    f"{seen[host, port]} and {node}"
+                )
+            seen[host, port] = node
+        if self.self_node is not None and self.self_node in self.endpoints:
+            errs.append(
+                f"self-endpoint: node {self.self_node} lists itself as a "
+                "peer — local samples are served from the local mirror, "
+                "never over a socket"
+            )
+        if errs:
+            raise AddressBookError(
+                "invalid peer address book: " + "; ".join(errs)
+            )
+
+    def at_step(self, step: int) -> None:
+        """Stamp subsequent fetches with the requester's global step index
+        (the serving side's step-epoch guard, DESIGN.md §8)."""
+        self._step = int(step)
+
+    def close(self) -> None:
+        """Drop every pooled connection (idempotent)."""
+        conns, self._conns = self._conns, {}
+        for conn in conns.values():
+            with contextlib.suppress(OSError):
+                conn.close()
+
+    def __enter__(self) -> "SocketTransport":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def _fallback(self, n: int) -> tuple[np.ndarray, np.ndarray]:
+        shape = self.sample_shape or ()
+        dtype = self.dtype if self.dtype is not None else np.float32
+        return np.empty((0,) + tuple(shape), dtype), np.zeros(n, bool)
+
+    def _connect(self, source: int) -> socket.socket:
+        from repro.runtime import wire
+
+        host, port = self.endpoints[source]
+        conn = socket.create_connection((host, port), timeout=self.timeout_s)
+        conn.settimeout(self.timeout_s)
+        try:
+            wire.send_frame(conn, wire.MSG_HELLO, wire.pack_json({
+                "node": int(source),
+                "shape": list(self.sample_shape),
+                "dtype": self.dtype.str,
+            }))
+            msg_type, payload = wire.recv_frame(conn)
+            if msg_type == wire.MSG_ERROR:
+                raise wire.HandshakeError(
+                    f"peer {source} refused the handshake: "
+                    f"{payload.decode(errors='replace')}"
+                )
+            if msg_type != wire.MSG_HELLO_OK:
+                raise wire.ProtocolError(
+                    f"expected HELLO_OK from peer {source}, got {msg_type}"
+                )
+        except BaseException:
+            with contextlib.suppress(OSError):
+                conn.close()
+            raise
+        return conn
 
     def fetch(self, source: int, ids: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        from repro.runtime import wire
+
+        ids = np.asarray(ids, np.int64)
+        if self.sample_shape is None or self.dtype is None:
+            raise ValueError(
+                "SocketTransport needs sample_shape and dtype (the store "
+                "geometry) to decode row frames — construct it with both "
+                "to fetch; endpoint-only construction is for config "
+                "validation"
+            )
+        if source == self.self_node and self._mirror_of is not None:
+            # own holder: a zero-cost local arena gather, never a socket.
+            mirror = self._mirror_of(source)
+            slots = mirror.lookup(ids)
+            ok = slots >= 0
+            if not ok.any():
+                return self._fallback(ids.size)[0], ok
+            return mirror.rows(slots[ok]), ok
         if source not in self.endpoints:
-            raise KeyError(f"no endpoint registered for node {source}")
-        raise NotImplementedError(
-            "SocketTransport.fetch: the peer wire protocol is not implemented "
-            "yet; use SharedViewTransport (in-process) or fall back to PFS "
-            "reads by disabling peer_fetch"
-        )
+            # e.g. a peer that died before registering: serve nothing, the
+            # loader falls back to the PFS.
+            return self._fallback(ids.size)
+        pooled = self._conns.pop(source, None)
+        # A pooled connection may have been idled out by the server between
+        # steps — that is staleness, not a dead peer, so it earns exactly
+        # one retry on a fresh dial before we declare fallback.
+        for conn in (pooled, None) if pooled is not None else (None,):
+            try:
+                if conn is None:
+                    conn = self._connect(source)
+                wire.send_frame(
+                    conn, wire.MSG_FETCH, wire.pack_fetch(self._step, ids)
+                )
+                msg_type, payload = wire.recv_frame(conn)
+                if msg_type != wire.MSG_ROWS:
+                    raise wire.ProtocolError(
+                        f"expected ROWS from peer {source}, got {msg_type}"
+                    )
+                ok, rows = wire.unpack_rows(
+                    payload, ids.size, self.sample_shape, self.dtype
+                )
+            except (wire.WireError, OSError):
+                # truncated / corrupt / dead peer: never wrong bytes — serve
+                # nothing (or retry once off the stale pooled conn) and let
+                # the caller hit the PFS.
+                if conn is not None:
+                    with contextlib.suppress(OSError):
+                        conn.close()
+                continue
+            except BaseException:
+                if conn is not None:
+                    with contextlib.suppress(OSError):
+                        conn.close()
+                raise
+            self._conns[source] = conn
+            return rows, ok
+        return self._fallback(ids.size)
 
 
 class PeerExchange:

@@ -89,6 +89,12 @@ class LoaderSpec:
     peer_fetch: bool = False
     #: peer-vs-PFS pricing override; derived from the store when None.
     peer_cost: PeerCostModel | None = None
+    #: how planned peer fetches move: ``"shared"`` (in-process buffer
+    #: mirrors — the loader zoo and the benchmarks) or ``"socket"`` (real
+    #: per-node buffer servers over TCP; such specs are executed by
+    #: :func:`repro.runtime.run_distributed`, which supplies the live
+    #: :class:`~repro.data.peer.SocketTransport` per rank).
+    transport: str = "shared"
     #: scheduler overrides (solar loader only); derived from the fields
     #: above when None.
     solar: SolarConfig | None = None
@@ -133,6 +139,11 @@ class LoaderSpec:
             errs.append(f"prefetch_depth must be >= 0, got {self.prefetch_depth}")
         if int(self.num_workers) <= 0:
             errs.append(f"num_workers must be positive, got {self.num_workers}")
+        if self.transport not in ("shared", "socket"):
+            errs.append(
+                f"unknown transport {self.transport!r}; have 'shared' "
+                "(in-process mirrors) and 'socket' (per-node buffer servers)"
+            )
         if self.plan_cache is not None and self.plan_path is not None:
             errs.append(
                 "'plan_cache' and 'plan_path' are mutually exclusive — a "
@@ -343,7 +354,8 @@ def plan(
     return planner.plan(num_samples, spec.num_epochs)
 
 
-def execute(spec: LoaderSpec, schedule: Schedule, *, store=None):
+def execute(spec: LoaderSpec, schedule: Schedule, *, store=None,
+            peer_transport=None):
     """Stand up the runtime half: replay ``schedule`` against the spec's store.
 
     Returns a :class:`~repro.data.loaders.ScheduleExecutor`, wrapped in a
@@ -354,12 +366,24 @@ def execute(spec: LoaderSpec, schedule: Schedule, *, store=None):
     store is reachable as ``pipeline.store``; closing it is the caller's job
     (executors never own their store — several pipelines may share one).
 
+    ``peer_transport`` injects a live :class:`~repro.data.peer.PeerTransport`
+    (a rank's :class:`~repro.data.peer.SocketTransport` in multi-process
+    runs); specs asking for ``transport="socket"`` *require* it — the
+    sockets only exist inside :func:`repro.runtime.run_distributed`.
+
     The schedule must match the spec: strategy, geometry, epoch count, and —
     when the schedule records one — the planner's config hash.
     """
     from repro.data.loaders import ScheduleExecutor
 
     spec = _resolve_store(spec, store).validate()
+    if spec.transport == "socket" and peer_transport is None:
+        raise ValueError(
+            "transport='socket' needs a live peer transport: multi-process "
+            "runs are stood up by repro.runtime.run_distributed (which "
+            "wires one SocketTransport per rank); use transport='shared' "
+            "for in-process execution"
+        )
     opened_here = spec.store is None
     st = spec.store if spec.store is not None else build_store(spec)
     try:
@@ -374,6 +398,7 @@ def execute(spec: LoaderSpec, schedule: Schedule, *, store=None):
             collect_data=spec.collect_data,
             cost_model=spec.cost_model,
             solar_config=solar_config,
+            peer_transport=peer_transport,
         )
     except BaseException:
         if opened_here:  # never leak a handle the caller cannot reach

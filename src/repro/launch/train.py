@@ -11,6 +11,10 @@
         --epochs 6 --out /tmp/solar.plan.npz
     PYTHONPATH=src python -m repro.launch.train plan --inspect /tmp/solar.plan.npz
 
+    # multi-process data pipeline: N rank processes, socket peer transport
+    PYTHONPATH=src python -m repro.launch.train distributed --nodes 2 \
+        --peer-fetch --num-samples 2048 --epochs 2 --verify
+
 Runs on whatever devices are visible (CPU here; the same code path drives
 the production mesh — the dry-run proves the sharded lowering).
 """
@@ -99,6 +103,10 @@ def _add_plan_args(ap: argparse.ArgumentParser) -> None:
                          "planning without a dataset; must match the "
                          "dataset's real sample size for the artifact's "
                          "config hash to line up with training")
+    ap.add_argument("--capacity-factor", type=float, default=None,
+                    help="padded-batch capacity factor (solar loader); 1.0 "
+                         "is the zero-padding regime where the peer tier "
+                         "carries traffic (DESIGN.md §6)")
 
 
 def _plan_report(schedule) -> dict:
@@ -108,7 +116,7 @@ def _plan_report(schedule) -> dict:
     # view per rank would copy the whole plan num_nodes times.
     acc = {
         r: {"node": r, "pfs_samples": 0, "misses": 0, "hits": 0,
-            "peer_fetches": 0}
+            "peer_fetches": 0, "peer_serves": 0}
         for r in range(schedule.num_nodes)
     }
     for sp in schedule:
@@ -118,6 +126,10 @@ def _plan_report(schedule) -> dict:
             a["misses"] += npn.num_misses
             a["hits"] += npn.num_hits
             a["peer_fetches"] += npn.num_peer
+            for f in npn.peer_fetches:
+                # serving load: imbalance here is what the per-step
+                # least-serving source choice keeps in check.
+                acc[f.source]["peer_serves"] += 1
     per_node = [acc[r] for r in sorted(acc)]
     return {
         "strategy": schedule.strategy,
@@ -152,15 +164,109 @@ def run_plan(args) -> None:
             sample_bytes=args.sample_bytes,
             pfs=PFSCostModel(sample_bytes=args.sample_bytes),
         )
+    solar = None
+    if args.capacity_factor is not None and args.loader == "solar":
+        from repro.core.scheduler import SolarConfig
+
+        solar = SolarConfig(
+            num_nodes=args.nodes, local_batch=args.local_batch,
+            buffer_size=args.buffer, seed=args.seed,
+            capacity_factor=args.capacity_factor,
+            enable_peer=args.peer_fetch, peer_cost=peer_cost,
+        )
+        peer_cost = None  # carried by the solar config now
     spec = LoaderSpec(
         loader=args.loader, num_nodes=args.nodes,
         local_batch=args.local_batch, num_epochs=args.epochs,
         buffer_size=args.buffer, seed=args.seed,
-        peer_fetch=args.peer_fetch, peer_cost=peer_cost,
+        peer_fetch=args.peer_fetch, peer_cost=peer_cost, solar=solar,
         plan_cache=args.plan_cache, plan_path=args.out,
     )
     schedule = plan(spec, num_samples=args.num_samples)
     print(json.dumps(_plan_report(schedule), indent=1))
+
+
+def _add_distributed_args(ap: argparse.ArgumentParser) -> None:
+    _add_pipeline_args(ap)
+    ap.add_argument("--backend", default="binary", choices=backend_names(),
+                    help="storage backend serving --data (created on first "
+                         "run; must be path-based — every rank reopens it)")
+    ap.add_argument("--data", default=None,
+                    help="dataset path (default: /tmp/solar_tokens.<backend>)")
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--peer-fetch", action="store_true",
+                    help="plan + serve the peer tier over real sockets "
+                         "(capacity_factor=1.0 so the tier carries traffic)")
+    ap.add_argument("--verify", action="store_true",
+                    help="also execute the plan in-process and assert every "
+                         "rank's stream digest matches bit for bit")
+    ap.add_argument("--timeout", type=float, default=300.0,
+                    help="whole-run timeout in seconds")
+
+
+def run_distributed_cmd(args) -> None:
+    from repro.core.scheduler import SolarConfig
+    from repro.runtime import in_process_digests, run_distributed
+
+    if args.data is None:
+        args.data = f"/tmp/solar_tokens.{args.backend}"
+    solar = None
+    if args.loader == "solar" and args.peer_fetch:
+        # capacity_factor=1.0 is the regime where the tier carries traffic
+        # (capacity-spilled hits become interconnect fetches, DESIGN.md §6).
+        solar = SolarConfig(
+            num_nodes=args.nodes, local_batch=args.local_batch,
+            buffer_size=args.buffer, seed=args.seed,
+            capacity_factor=1.0, enable_peer=True,
+        )
+    spec = LoaderSpec(
+        loader=args.loader, backend=args.backend, path=args.data,
+        num_nodes=args.nodes, local_batch=args.local_batch,
+        num_epochs=args.epochs, buffer_size=args.buffer, seed=args.seed,
+        collect_data=True, peer_fetch=args.peer_fetch, solar=solar,
+        plan_cache=args.plan_cache, transport="socket",
+    )
+    store = build_store(
+        spec, create=True,
+        dataset=DatasetSpec(args.num_samples, (args.seq_len + 1,), "<i4"),
+        fill="random",
+    )
+    store.close()  # ranks reopen it themselves; the parent only creates it
+    from repro.data import plan
+
+    schedule = plan(spec)  # once: the run and the reference share one plan
+    report = run_distributed(spec, schedule=schedule, timeout_s=args.timeout)
+    out = report.summary()
+    if args.verify:
+        ref = in_process_digests(spec, schedule=schedule)
+        mismatched = [
+            r.rank for r in report.ranks
+            if r.status == "ok" and r.digest != ref[r.rank]
+        ]
+        out["verify"] = {
+            "digest_parity": not mismatched and report.ok,
+            "mismatched_ranks": mismatched,
+            "dead_ranks": report.dead,
+        }
+        print(json.dumps(out, indent=1))
+        if mismatched:
+            raise SystemExit(
+                f"digest mismatch on ranks {mismatched}: the multi-process "
+                "run trained different bytes than the in-process reference"
+            )
+        if report.dead:
+            # a dead rank means its digest was never verified at all — a
+            # green exit here would let CI pass on a broken runtime.
+            raise SystemExit(
+                f"ranks {report.dead} died during the run: digest parity "
+                "could not be verified for them"
+            )
+        return
+    print(json.dumps(out, indent=1))
+    if report.dead:
+        # without --verify a dead rank still must not exit green: wrapping
+        # scripts treat this exit code as "the run completed".
+        raise SystemExit(f"ranks {report.dead} died during the run")
 
 
 def run_train(args) -> None:
@@ -236,7 +342,7 @@ def main(argv=None):
     argv = list(sys.argv[1:] if argv is None else argv)
     # Back-compat: a bare flag list is the train subcommand — but leave
     # top-level help reachable so the plan subcommand stays discoverable.
-    if argv and argv[0] not in ("train", "plan", "-h", "--help"):
+    if argv and argv[0] not in ("train", "plan", "distributed", "-h", "--help"):
         argv = ["train"] + argv
     ap = argparse.ArgumentParser(prog="repro.launch.train")
     sub = ap.add_subparsers(dest="cmd", required=True)
@@ -244,9 +350,15 @@ def main(argv=None):
         "train", help="train a model through the plan-first pipeline"))
     _add_plan_args(sub.add_parser(
         "plan", help="precompute or inspect a plan artifact (no training)"))
+    _add_distributed_args(sub.add_parser(
+        "distributed",
+        help="execute one plan as N rank processes over the socket peer "
+             "transport (data pipeline only, no model training)"))
     args = ap.parse_args(argv)
     if args.cmd == "plan":
         run_plan(args)
+    elif args.cmd == "distributed":
+        run_distributed_cmd(args)
     else:
         run_train(args)
 

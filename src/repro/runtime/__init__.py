@@ -1,0 +1,40 @@
+"""Distributed runtime: wire protocol, per-node buffer servers, launcher.
+
+The multi-process half of the reproduction (DESIGN.md §8): one plan
+artifact, N spawned rank processes, peer fetches served over real TCP
+sockets out of live buffer mirrors, and an aggregated run report.
+
+    from repro.runtime import run_distributed, in_process_digests
+
+    report = run_distributed(spec)            # N = spec.num_nodes processes
+    assert report.digests() == in_process_digests(spec)
+"""
+from repro.runtime.launcher import (
+    DistributedReport,
+    RankResult,
+    in_process_digests,
+    run_distributed,
+)
+from repro.runtime.server import BufferServer
+from repro.runtime.wire import (
+    WIRE_VERSION,
+    ChecksumMismatch,
+    HandshakeError,
+    ProtocolError,
+    TruncatedFrame,
+    WireError,
+)
+
+__all__ = [
+    "BufferServer",
+    "ChecksumMismatch",
+    "DistributedReport",
+    "HandshakeError",
+    "ProtocolError",
+    "RankResult",
+    "TruncatedFrame",
+    "WIRE_VERSION",
+    "WireError",
+    "in_process_digests",
+    "run_distributed",
+]

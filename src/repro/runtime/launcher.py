@@ -1,0 +1,654 @@
+"""Multi-process launcher: N OS processes executing one plan over TCP.
+
+``run_distributed(spec)`` turns the single-process loader into a real
+distributed run (DESIGN.md §8):
+
+  * the parent compiles (or loads) the :class:`~repro.core.plan.Schedule`,
+    saves it as one artifact, and hands every rank the *path plus the
+    content digest* — each rank reloads the artifact and refuses to run if
+    its recomputed digest disagrees (the plan is distributed by hash, never
+    by trust);
+  * each rank is a **spawned** OS process (spawn-safe: the entry point is a
+    module-level function taking picklable arguments) that opens the store
+    through the backend registry, slices out its share with
+    :meth:`~repro.core.plan.Schedule.for_node`, stands up a
+    :class:`~repro.runtime.server.BufferServer` over its live buffer
+    mirror, and replays the slice with a
+    :class:`~repro.data.peer.SocketTransport` wired to every peer's server;
+  * the parent runs the **control plane**: ranks register their server
+    endpoints over TCP, receive the merged address book, then barrier twice
+    per step — once at step start (every mirror in start-of-step state,
+    every server publishing the step index) and once after all peer fetches
+    (no mirror mutates while any peer still reads).  The data plane (peer
+    rows) never touches the parent;
+  * a rank dying mid-run is detected as its control connection dropping:
+    the coordinator removes it from every pending and future barrier, the
+    survivors' fetches to its vanished server fall back to PFS reads, and
+    the final :class:`DistributedReport` lists it as dead — the run
+    completes with correct bytes instead of hanging.
+
+Every rank streams its batches through the same canonical digest as the
+in-process executor (:func:`~repro.data.loaders.update_batch_digest`), so
+"the multi-process run trains exactly the planned bytes" is one string
+comparison against :func:`in_process_digests` — which the tests and
+``benchmarks/dist.py`` perform at 2 and 4 ranks.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import hashlib
+import multiprocessing
+import os
+import socket
+import tempfile
+import threading
+import time
+from typing import Mapping
+
+from repro.runtime import wire
+
+__all__ = [
+    "RankResult",
+    "DistributedReport",
+    "run_distributed",
+    "in_process_digests",
+]
+
+_HOST = "127.0.0.1"
+
+
+# ---------------------------------------------------------------------------
+# Control plane (parent side)
+# ---------------------------------------------------------------------------
+
+
+class _Coordinator:
+    """Parent-side control server: registration, barriers, reports, deaths.
+
+    One handler thread per rank connection; all shared state is guarded by
+    one condition variable.  A dropped connection from a rank that has not
+    reported is a death: the rank leaves the barrier participant set
+    immediately, so nobody waits on a corpse.
+    """
+
+    def __init__(self, num_ranks: int):
+        self.num_ranks = int(num_ranks)
+        self._listener = socket.create_server((_HOST, 0))
+        self._listener.settimeout(0.1)
+        self.port = self._listener.getsockname()[1]
+        self._cond = threading.Condition()
+        self.endpoints: dict[int, tuple[str, int]] = {}
+        self.reports: dict[int, dict] = {}
+        self.alive: set[int] = set()
+        self.dead: set[int] = set()
+        self.done: set[int] = set()
+        self._conns: dict[int, socket.socket] = {}
+        self._barriers: dict[str, set[int]] = {}
+        self._addrbook_sent = False
+        self._closed = threading.Event()
+        self._threads: list[threading.Thread] = []
+        self._accept_thread = threading.Thread(
+            target=self._accept_loop, name="solar-coord", daemon=True
+        )
+
+    def start(self) -> "_Coordinator":
+        self._accept_thread.start()
+        return self
+
+    def close(self) -> None:
+        self._closed.set()
+        with contextlib.suppress(OSError):
+            self._listener.close()
+        with self._cond:
+            for conn in self._conns.values():
+                with contextlib.suppress(OSError):
+                    conn.close()
+        self._accept_thread.join(timeout=5.0)
+        for t in self._threads:
+            t.join(timeout=5.0)
+
+    # -- accept / per-rank handler -------------------------------------------
+
+    def _accept_loop(self) -> None:
+        while not self._closed.is_set():
+            try:
+                conn, _ = self._listener.accept()
+            except socket.timeout:
+                continue
+            except OSError:
+                return
+            t = threading.Thread(
+                target=self._handle, args=(conn,), name="solar-coord-conn",
+                daemon=True,
+            )
+            t.start()
+            self._threads.append(t)
+
+    def _handle(self, conn: socket.socket) -> None:
+        rank = None
+        try:
+            conn.settimeout(600.0)
+            msg = self._recv_ctrl(conn)
+            if msg.get("kind") != "register":
+                return
+            rank = int(msg["rank"])
+            with self._cond:
+                self.endpoints[rank] = (str(msg["host"]), int(msg["port"]))
+                self._conns[rank] = conn
+                self.alive.add(rank)
+                if (
+                    len(self.endpoints) == self.num_ranks
+                    and not self._addrbook_sent
+                ):
+                    self._broadcast_addrbook()
+                elif self._addrbook_sent:
+                    # late registrant (the others already run): it still gets
+                    # the book so *its* fetches work; fetches *to* it from
+                    # peers that never saw its endpoint fall back to PFS.
+                    self._send_addrbook(conn)
+                self._cond.notify_all()
+            while True:
+                msg = self._recv_ctrl(conn)
+                kind = msg.get("kind")
+                if kind == "barrier":
+                    self._arrive(rank, str(msg["name"]))
+                elif kind == "report":
+                    with self._cond:
+                        self.reports[rank] = msg
+                        self.done.add(rank)
+                        self._eval_barriers()
+                        self._cond.notify_all()
+                else:
+                    return
+        except (wire.WireError, OSError, KeyError, ValueError):
+            pass
+        finally:
+            with contextlib.suppress(OSError):
+                conn.close()
+            if rank is not None:
+                with self._cond:
+                    if rank not in self.done:
+                        self.dead.add(rank)
+                    self.alive.discard(rank)
+                    self._eval_barriers()
+                    self._cond.notify_all()
+
+    @staticmethod
+    def _recv_ctrl(conn: socket.socket) -> dict:
+        frame = wire.recv_frame(conn, eof_ok=True)
+        if frame is None:
+            raise ConnectionError("control connection closed")
+        msg_type, payload = frame
+        if msg_type != wire.MSG_CTRL:
+            raise wire.ProtocolError(f"unexpected control frame {msg_type}")
+        return wire.unpack_json(payload)
+
+    def _send_ctrl(self, conn: socket.socket, msg: dict) -> bool:
+        try:
+            wire.send_frame(conn, wire.MSG_CTRL, wire.pack_json(msg))
+            return True
+        except OSError:
+            return False
+
+    def _send_addrbook(self, conn: socket.socket) -> None:
+        self._send_ctrl(conn, {
+            "kind": "addrbook",
+            "endpoints": {
+                str(r): list(ep) for r, ep in self.endpoints.items()
+            },
+        })
+
+    def _broadcast_addrbook(self) -> None:  # cond held
+        self._addrbook_sent = True
+        for conn in self._conns.values():
+            self._send_addrbook(conn)
+
+    # -- barriers --------------------------------------------------------------
+
+    def _arrive(self, rank: int, name: str) -> None:
+        with self._cond:
+            self._barriers.setdefault(name, set()).add(rank)
+            self._eval_barriers()
+
+    def _eval_barriers(self) -> None:  # cond held
+        participants = self.alive - self.done
+        for name in list(self._barriers):
+            arrived = self._barriers[name]
+            if participants <= arrived:
+                for r in sorted(arrived & self.alive):
+                    self._send_ctrl(
+                        self._conns[r], {"kind": "release", "name": name}
+                    )
+                del self._barriers[name]
+
+    # -- parent-side waits -----------------------------------------------------
+
+    def mark_dead_if_silent(self, rank: int) -> None:
+        """Write off a rank whose *process* exited without ever connecting.
+
+        Deaths of connected ranks are detected by their control connection
+        dropping; a rank that crashed before registering leaves no
+        connection to drop, so the launcher reports it from the process
+        table.  Once every surviving rank has registered, the address book
+        goes out (partial: fetches to the dead rank fall back to PFS).
+        """
+        with self._cond:
+            if rank in self.done or rank in self.dead or rank in self.alive:
+                return
+            self.dead.add(rank)
+            if (
+                not self._addrbook_sent
+                and len(self.endpoints) + len(self.dead) >= self.num_ranks
+            ):
+                self._broadcast_addrbook()
+            self._eval_barriers()
+            self._cond.notify_all()
+
+    def wait_done(self, timeout_s: float) -> bool:
+        deadline = time.monotonic() + timeout_s
+        with self._cond:
+            while (self.done | self.dead) != set(range(self.num_ranks)):
+                remaining = deadline - time.monotonic()
+                if remaining <= 0 or not self._cond.wait(timeout=remaining):
+                    return False
+            return True
+
+
+# ---------------------------------------------------------------------------
+# Control plane (rank side)
+# ---------------------------------------------------------------------------
+
+
+class _ControlClient:
+    """A rank's connection to the coordinator: register, barrier, report."""
+
+    def __init__(self, port: int, *, timeout_s: float):
+        self.sock = socket.create_connection((_HOST, port), timeout=timeout_s)
+        self.sock.settimeout(timeout_s)
+
+    def close(self) -> None:
+        with contextlib.suppress(OSError):
+            self.sock.close()
+
+    def _send(self, msg: dict) -> None:
+        wire.send_frame(self.sock, wire.MSG_CTRL, wire.pack_json(msg))
+
+    def _recv(self) -> dict:
+        frame = wire.recv_frame(self.sock)
+        msg_type, payload = frame
+        if msg_type != wire.MSG_CTRL:
+            raise wire.ProtocolError(f"unexpected control frame {msg_type}")
+        return wire.unpack_json(payload)
+
+    def register(self, rank: int, host: str, port: int) -> dict[int, tuple[str, int]]:
+        """Announce this rank's buffer server; block for the address book."""
+        self._send({"kind": "register", "rank": rank, "host": host, "port": port})
+        while True:
+            msg = self._recv()
+            if msg.get("kind") == "addrbook":
+                return {
+                    int(r): (str(ep[0]), int(ep[1]))
+                    for r, ep in msg["endpoints"].items()
+                }
+
+    def barrier(self, name: str) -> None:
+        """Arrive at ``name``; block until the coordinator releases it."""
+        self._send({"kind": "barrier", "name": name})
+        while True:
+            msg = self._recv()
+            if msg.get("kind") == "release" and msg.get("name") == name:
+                return
+
+    def report(self, payload: dict) -> None:
+        self._send(dict(payload, kind="report"))
+
+
+# ---------------------------------------------------------------------------
+# Rank worker (child process entry point — must stay module-level + picklable)
+# ---------------------------------------------------------------------------
+
+
+def _rank_main(rank: int, cfg: dict) -> None:
+    """One rank: load plan by hash, serve the buffer, replay the slice."""
+    from repro.core.plan import Schedule
+    from repro.data.loaders import update_batch_digest
+    from repro.data.peer import SocketTransport
+    from repro.data.pipeline import build_store, execute
+    from repro.runtime.server import BufferServer
+
+    spec = cfg["spec"]
+    barrier_timeout_s = float(cfg["barrier_timeout_s"])
+    die_at_step = cfg.get("die_at_step")
+
+    ctrl = _ControlClient(cfg["control_port"], timeout_s=barrier_timeout_s)
+    store = build_store(spec)
+    server = None
+    transport = None
+    executor = None
+    try:
+        schedule = Schedule.load(cfg["plan_path"])
+        digest = schedule.artifact_digest()
+        if digest != cfg["plan_digest"]:
+            raise RuntimeError(
+                f"rank {rank}: plan artifact digest {digest} != the "
+                f"launcher's {cfg['plan_digest']} — refusing to execute a "
+                "plan I cannot verify"
+            )
+        sliced = schedule.for_node(rank)
+
+        server = BufferServer(
+            rank, store.sample_shape, store.dtype, host=_HOST, port=0
+        ).start()
+        endpoints = ctrl.register(rank, server.host, server.port)
+        # the executor does not exist yet: both the server and the transport
+        # reach the mirrors through late-bound closures.
+        transport = SocketTransport(
+            {r: ep for r, ep in endpoints.items() if r != rank},
+            self_node=rank,
+            mirror_of=lambda n: executor._mirror(n),
+            sample_shape=store.sample_shape,
+            dtype=store.dtype,
+            timeout_s=min(barrier_timeout_s, 5.0),
+        )
+        executor = execute(spec, sliced, store=store, peer_transport=transport)
+        server.attach(lambda n: executor._mirror(n))
+
+        h = hashlib.sha256()
+        idx = 0
+        t0 = time.perf_counter()
+        for ep, sp in executor.plan_steps():
+            # Mirror state now == start-of-step idx: publish BEFORE the
+            # barrier so every released peer finds a serving server.
+            server.at_step(idx)
+            ctrl.barrier(f"s:{idx}")
+            if die_at_step is not None and idx == int(die_at_step):
+                os._exit(17)  # fault injection: vanish mid-step, no cleanup
+            transport.at_step(idx)
+            peer_arrays = executor.gather_peers(sp)
+            # Everyone fetched before anyone mutates (the ordering contract
+            # of repro.data.peer, stretched across processes).
+            ctrl.barrier(f"f:{idx}")
+            with server.mutating():
+                sb = executor.execute_step(ep, sp, peer_arrays=peer_arrays)
+            update_batch_digest(h, sb)
+            idx += 1
+        wall = time.perf_counter() - t0
+
+        ex = executor.peer_exchange
+        ctrl.report({
+            "rank": rank,
+            "digest": h.hexdigest(),
+            "steps": idx,
+            "summary": executor.report.summary(),
+            "served_by_source": {
+                str(k): int(v) for k, v in (ex.served_by_source if ex else {}).items()
+            },
+            "peer_served": int(ex.served) if ex else 0,
+            "peer_fallbacks": int(ex.fallbacks) if ex else 0,
+            "stale_refusals": int(server.stale_refusals),
+            "wall_time_s": round(wall, 4),
+        })
+    finally:
+        if server is not None:
+            server.close()
+        if transport is not None:
+            transport.close()
+        store.close()
+        ctrl.close()
+
+
+# ---------------------------------------------------------------------------
+# Aggregated run report
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class RankResult:
+    rank: int
+    #: ``ok`` (report received) or ``dead`` (process vanished mid-run).
+    status: str
+    digest: str | None = None
+    steps: int = 0
+    #: the rank's LoaderReport summary (numPFS, misses, remote, ...).
+    summary: dict = dataclasses.field(default_factory=dict)
+    #: samples this rank's *peers* report were served by each source.
+    served_by_source: dict[int, int] = dataclasses.field(default_factory=dict)
+    peer_served: int = 0
+    peer_fallbacks: int = 0
+    stale_refusals: int = 0
+    wall_time_s: float = 0.0
+    exitcode: int | None = None
+
+
+@dataclasses.dataclass
+class DistributedReport:
+    """What one ``run_distributed`` produced, aggregated over all ranks."""
+
+    num_ranks: int
+    ranks: list[RankResult]
+    plan_digest: str
+    wall_time_s: float
+
+    @property
+    def dead(self) -> list[int]:
+        return [r.rank for r in self.ranks if r.status != "ok"]
+
+    @property
+    def ok(self) -> bool:
+        return not self.dead
+
+    def digests(self) -> dict[int, str | None]:
+        return {r.rank: r.digest for r in self.ranks}
+
+    def summary(self) -> dict:
+        """One JSON-safe run report: per-rank rows + cross-rank aggregates."""
+        agg_keys = ("numPFS", "misses", "remote_fetches")
+        agg = {k: 0 for k in agg_keys}
+        serving: dict[int, int] = {}
+        for r in self.ranks:
+            for k in agg_keys:
+                agg[k] += int(r.summary.get(k, 0))
+            for src, n in r.served_by_source.items():
+                serving[int(src)] = serving.get(int(src), 0) + int(n)
+        return {
+            "num_ranks": self.num_ranks,
+            "dead_ranks": self.dead,
+            "plan_digest": self.plan_digest,
+            "wall_time_s": round(self.wall_time_s, 4),
+            "peer_served": sum(r.peer_served for r in self.ranks),
+            "peer_fallbacks": sum(r.peer_fallbacks for r in self.ranks),
+            "stale_refusals": sum(r.stale_refusals for r in self.ranks),
+            "served_by_source": {str(k): serving[k] for k in sorted(serving)},
+            **agg,
+            "ranks": [
+                {
+                    "rank": r.rank,
+                    "status": r.status,
+                    "digest": r.digest,
+                    "steps": r.steps,
+                    "exitcode": r.exitcode,
+                    "wall_time_s": r.wall_time_s,
+                    **{k: r.summary.get(k) for k in agg_keys},
+                }
+                for r in self.ranks
+            ],
+        }
+
+
+# ---------------------------------------------------------------------------
+# The launcher
+# ---------------------------------------------------------------------------
+
+
+def run_distributed(
+    spec,
+    *,
+    schedule=None,
+    run_dir: str | None = None,
+    timeout_s: float = 300.0,
+    barrier_timeout_s: float = 60.0,
+    die_at_step: Mapping[int, int] | None = None,
+) -> DistributedReport:
+    """Execute ``spec``'s plan as ``spec.num_nodes`` real OS processes.
+
+    The spec must be **path-based** (each rank reopens the store through the
+    backend registry — an open store handle cannot cross a spawn boundary)
+    and is normalized for the ranks: ``transport="socket"``,
+    ``collect_data=True``, synchronous stepping (the barrier protocol owns
+    the step cadence, so ``prefetch_depth`` is forced to 0 inside ranks).
+
+    ``die_at_step`` maps rank -> global step index at which that rank is
+    killed mid-step (``os._exit``) — the fault-injection hook the dead-peer
+    tests and benchmarks use.  Raises ``TimeoutError`` only if the run as a
+    whole exceeds ``timeout_s`` even after dead ranks are written off.
+    """
+    from repro.data.pipeline import plan as plan_fn
+
+    if spec.store is not None:
+        raise ValueError(
+            "run_distributed needs a path-based LoaderSpec: every rank "
+            "reopens the store itself; a live store handle cannot be "
+            "shipped to a spawned process"
+        )
+    child_spec = spec.replace(
+        transport="socket", collect_data=True, prefetch_depth=0,
+        plan_cache=None, plan_path=None,
+    )
+    child_spec.validate()
+    if schedule is None:
+        schedule = plan_fn(spec)
+    if schedule.num_nodes != spec.num_nodes:
+        raise ValueError(
+            f"schedule plans {schedule.num_nodes} nodes, spec asks for "
+            f"{spec.num_nodes}"
+        )
+
+    own_dir = run_dir is None
+    if own_dir:
+        run_dir = tempfile.mkdtemp(prefix="solar_dist_")
+    plan_path = os.path.join(run_dir, "plan.npz")
+    schedule.save(plan_path)
+    plan_digest = schedule.artifact_digest()
+    cleanup_dir = run_dir if own_dir else None
+
+    coord = _Coordinator(spec.num_nodes).start()
+    ctx = multiprocessing.get_context("spawn")
+    procs = []
+    t0 = time.perf_counter()
+    try:
+        for rank in range(spec.num_nodes):
+            cfg = {
+                "spec": child_spec,
+                "plan_path": plan_path,
+                "plan_digest": plan_digest,
+                "control_port": coord.port,
+                "barrier_timeout_s": barrier_timeout_s,
+                "die_at_step": (die_at_step or {}).get(rank),
+            }
+            p = ctx.Process(
+                target=_rank_main, args=(rank, cfg),
+                name=f"solar-rank-{rank}", daemon=True,
+            )
+            p.start()
+            procs.append(p)
+        deadline = time.monotonic() + timeout_s
+        while not coord.wait_done(1.0):
+            # a child that crashed before ever connecting leaves no control
+            # connection to drop — report it from the process table.
+            for rank, p in enumerate(procs):
+                if p.exitcode is not None:
+                    coord.mark_dead_if_silent(rank)
+            if time.monotonic() > deadline:
+                raise TimeoutError(
+                    f"distributed run did not finish within {timeout_s}s: "
+                    f"done={sorted(coord.done)} dead={sorted(coord.dead)}"
+                )
+        deadline = time.monotonic() + 10.0
+        for p in procs:
+            p.join(timeout=max(deadline - time.monotonic(), 0.1))
+    finally:
+        for p in procs:
+            if p.is_alive():
+                p.terminate()
+                p.join(timeout=5.0)
+        coord.close()
+        if cleanup_dir is not None:  # every rank is gone: artifact done
+            import shutil
+
+            shutil.rmtree(cleanup_dir, ignore_errors=True)
+    wall = time.perf_counter() - t0
+
+    results = []
+    for rank in range(spec.num_nodes):
+        rep = coord.reports.get(rank)
+        exitcode = procs[rank].exitcode if rank < len(procs) else None
+        if rep is None:
+            results.append(RankResult(rank=rank, status="dead", exitcode=exitcode))
+        else:
+            results.append(RankResult(
+                rank=rank,
+                status="ok",
+                digest=str(rep.get("digest")),
+                steps=int(rep.get("steps", 0)),
+                summary=dict(rep.get("summary", {})),
+                served_by_source={
+                    int(k): int(v)
+                    for k, v in dict(rep.get("served_by_source", {})).items()
+                },
+                peer_served=int(rep.get("peer_served", 0)),
+                peer_fallbacks=int(rep.get("peer_fallbacks", 0)),
+                stale_refusals=int(rep.get("stale_refusals", 0)),
+                wall_time_s=float(rep.get("wall_time_s", 0.0)),
+                exitcode=exitcode,
+            ))
+    return DistributedReport(
+        num_ranks=spec.num_nodes, ranks=results,
+        plan_digest=plan_digest, wall_time_s=wall,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Digest parity reference
+# ---------------------------------------------------------------------------
+
+
+def in_process_digests(spec, schedule=None, *, store=None) -> dict[int, str]:
+    """Per-node stream digests of the plan executed in this process.
+
+    Runs the full schedule through one :class:`ScheduleExecutor` with the
+    in-process ``SharedViewTransport`` (the semantic reference) and feeds
+    each node's rows into its own hasher with exactly the canonical
+    encoding a rank-sliced run uses — so ``in_process_digests(spec)[r]``
+    must equal rank ``r``'s digest from :func:`run_distributed` bit for
+    bit.
+    """
+    from repro.data.loaders import StepBatch, update_batch_digest
+    from repro.data.pipeline import execute, plan as plan_fn
+
+    ref_spec = spec.replace(
+        transport="shared", collect_data=True, prefetch_depth=0,
+        plan_cache=None, plan_path=None,
+    )
+    if store is not None:
+        ref_spec = ref_spec.replace(store=store, path=None)
+    if schedule is None:
+        schedule = plan_fn(ref_spec)
+    executor = execute(ref_spec, schedule)
+    try:
+        hashers = {r: hashlib.sha256() for r in range(schedule.num_nodes)}
+        for ep, sp in executor.plan_steps():
+            sb = executor.execute_step(ep, sp)
+            for pos, npn in enumerate(sp.nodes):
+                # hash through the one canonical encoding: each node's view
+                # is exactly the single-node StepBatch its for_node() slice
+                # would produce.
+                update_batch_digest(hashers[npn.node], StepBatch(
+                    sb.epoch, sb.step,
+                    [sb.node_ids[pos]], [sb.node_data[pos]],
+                    [sb.hit_masks[pos]],
+                ))
+        return {r: h.hexdigest() for r, h in hashers.items()}
+    finally:
+        if store is None and ref_spec.store is None:
+            executor.store.close()

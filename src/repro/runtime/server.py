@@ -1,0 +1,237 @@
+"""Per-node buffer server: answers peer fetches out of the live data mirror.
+
+Each rank of a multi-process run owns one :class:`BufferServer` — a
+listening TCP socket plus one handler thread per peer connection — serving
+rows straight out of the rank's :class:`~repro.data.loaders._DataMirror`
+arena over the wire protocol (:mod:`repro.runtime.wire`).
+
+Correctness rests on two guards, both enforced *inside* :attr:`guard` (the
+lock shared with the executor's delta application):
+
+  * **step guard**: a FETCH carries the requester's global step index; the
+    server serves only while :meth:`at_step` has published that exact index
+    — i.e. while its mirror provably reflects the start-of-step state the
+    plan priced (DESIGN.md §6's ordering contract, stretched across
+    processes).  A fetch racing its source's eviction — arriving after the
+    source began applying that step's deltas — is answered with an all-False
+    mask, so the requester falls back to the PFS instead of receiving bytes
+    from a recycled arena slot.
+  * **mutation lock**: row lookup + copy-out happen under :attr:`guard`;
+    the rank's executor applies its admission/eviction deltas under the
+    same lock (:meth:`mutating`).  Between the launcher's step barriers no
+    one mutates while peers fetch, so the lock is uncontended in the happy
+    path — it exists to make the *unhappy* paths (late packets, a dead
+    coordinator) refuse instead of corrupt.
+
+A server that has not been :meth:`attach`-ed to a mirror yet, or whose
+published step does not match, is not an error — it answers "nothing
+served" and the requester degrades to PFS reads, the same fallback contract
+as every other failure in the tier.
+"""
+from __future__ import annotations
+
+import contextlib
+import socket
+import threading
+
+import numpy as np
+
+from repro.runtime import wire
+
+__all__ = ["BufferServer"]
+
+#: published step value meaning "serving is paused" (mirror mid-mutation).
+_PAUSED = -1
+
+
+class BufferServer:
+    """Serve one node's buffer mirror to its peers over TCP.
+
+    ``node`` is the global rank this server speaks for; ``sample_shape`` /
+    ``dtype`` are the store geometry negotiated with every client.  The
+    listening socket binds immediately (``port=0`` picks a free port — read
+    it back from :attr:`port` for the address book); handler threads start
+    on :meth:`start` and are joined by :meth:`close`.
+    """
+
+    def __init__(
+        self,
+        node: int,
+        sample_shape: tuple[int, ...],
+        dtype,
+        *,
+        host: str = "127.0.0.1",
+        port: int = 0,
+        accept_timeout_s: float = 0.1,
+    ):
+        self.node = int(node)
+        self.sample_shape = tuple(int(x) for x in sample_shape)
+        self.dtype = np.dtype(dtype)
+        #: lock shared by fetch handlers and the executor's delta replay.
+        self.guard = threading.Lock()
+        self._mirror_of = None
+        self._step = _PAUSED
+        #: fetches refused because the step guard fired (observability).
+        self.stale_refusals = 0
+        self._accept_timeout_s = float(accept_timeout_s)
+        self._closed = threading.Event()
+        self._threads: list[threading.Thread] = []
+        self._conns: list[socket.socket] = []
+        self._listener = socket.create_server((host, port))
+        self._listener.settimeout(self._accept_timeout_s)
+        self.host, self.port = self._listener.getsockname()[:2]
+        self._accept_thread: threading.Thread | None = None
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def start(self) -> "BufferServer":
+        self._accept_thread = threading.Thread(
+            target=self._accept_loop, name=f"solar-buffer-{self.node}",
+            daemon=True,
+        )
+        self._accept_thread.start()
+        return self
+
+    def close(self) -> None:
+        """Stop accepting, close the socket, join every handler thread."""
+        if self._closed.is_set():
+            return
+        self._closed.set()
+        with contextlib.suppress(OSError):
+            self._listener.close()
+        for conn in self._conns:  # sever live peers so handlers unblock
+            with contextlib.suppress(OSError):
+                conn.shutdown(socket.SHUT_RDWR)
+            with contextlib.suppress(OSError):
+                conn.close()
+        if self._accept_thread is not None:
+            self._accept_thread.join(timeout=5.0)
+        for t in self._threads:
+            t.join(timeout=5.0)
+
+    def __enter__(self) -> "BufferServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- executor-side surface -----------------------------------------------
+
+    def attach(self, mirror_of) -> None:
+        """Bind the live mirror accessor (``node -> _DataMirror``).
+
+        Until attached every fetch is answered all-False — the server can
+        (and does) come up before the executor exists, so the address book
+        can be exchanged first.
+        """
+        with self.guard:
+            self._mirror_of = mirror_of
+
+    def at_step(self, step: int) -> None:
+        """Publish that the mirror now reflects start-of-step ``step``."""
+        with self.guard:
+            self._step = int(step)
+
+    @contextlib.contextmanager
+    def mutating(self):
+        """Scope for the executor's delta application: serving is refused
+        (step guard pauses) and the mirror is exclusively held throughout."""
+        with self.guard:
+            self._step = _PAUSED
+            yield
+
+    # -- serving side ----------------------------------------------------------
+
+    def _accept_loop(self) -> None:
+        while not self._closed.is_set():
+            try:
+                conn, _addr = self._listener.accept()
+            except socket.timeout:
+                continue
+            except OSError:
+                return  # listener closed
+            self._conns.append(conn)
+            t = threading.Thread(
+                target=self._serve_conn, args=(conn,),
+                name=f"solar-buffer-{self.node}-conn", daemon=True,
+            )
+            t.start()
+            self._threads.append(t)
+
+    def _serve_conn(self, conn: socket.socket) -> None:
+        helloed = False
+        with contextlib.suppress(OSError, wire.WireError), conn:
+            conn.settimeout(self._accept_timeout_s * 100)
+            while not self._closed.is_set():
+                frame = wire.recv_frame(conn, eof_ok=True)
+                if frame is None:
+                    return  # client hung up cleanly
+                msg_type, payload = frame
+                if msg_type == wire.MSG_HELLO:
+                    if not self._handle_hello(conn, payload):
+                        return
+                    helloed = True
+                elif msg_type == wire.MSG_FETCH:
+                    if not helloed:
+                        # geometry was never negotiated on this connection:
+                        # serving anyway could hand out same-row-size bytes
+                        # in the wrong layout without either side noticing.
+                        wire.send_frame(
+                            conn, wire.MSG_ERROR,
+                            b"FETCH before HELLO: negotiate geometry first",
+                        )
+                        return
+                    self._handle_fetch(conn, payload)
+                else:
+                    wire.send_frame(
+                        conn, wire.MSG_ERROR,
+                        f"unexpected message type {msg_type}".encode(),
+                    )
+                    return
+
+    def _handle_hello(self, conn: socket.socket, payload: bytes) -> bool:
+        hello = wire.unpack_json(payload)
+        mine = {
+            "node": self.node,
+            "shape": list(self.sample_shape),
+            "dtype": self.dtype.str,
+        }
+        theirs = {
+            "node": hello.get("node"),
+            "shape": list(hello.get("shape", ())),
+            "dtype": hello.get("dtype"),
+        }
+        if theirs != mine:
+            wire.send_frame(
+                conn, wire.MSG_ERROR,
+                f"geometry mismatch: client expects {theirs}, "
+                f"server is {mine}".encode(),
+            )
+            return False
+        wire.send_frame(conn, wire.MSG_HELLO_OK, wire.pack_json(mine))
+        return True
+
+    def _handle_fetch(self, conn: socket.socket, payload: bytes) -> None:
+        step, ids = wire.unpack_fetch(payload)
+        with self.guard:
+            serveable = (
+                self._mirror_of is not None
+                and self._step != _PAUSED
+                and self._step == step
+            )
+            if serveable:
+                mirror = self._mirror_of(self.node)
+                slots = mirror.lookup(ids)
+                ok = slots >= 0
+                rows = (
+                    mirror.rows(slots[ok])  # fancy-index copy, under guard
+                    if ok.any()
+                    else np.empty((0,) + self.sample_shape, self.dtype)
+                )
+            else:
+                self.stale_refusals += int(
+                    self._mirror_of is not None and self._step != step
+                )
+                ok = np.zeros(ids.size, bool)
+                rows = np.empty((0,) + self.sample_shape, self.dtype)
+        wire.send_frame(conn, wire.MSG_ROWS, wire.pack_rows(ok, rows))

@@ -1,0 +1,267 @@
+"""Length-prefixed binary wire protocol for the peer-fetch data plane.
+
+Every message on a SOLAR runtime socket — peer fetches on the data plane,
+registration/barrier traffic on the launcher's control plane — rides in one
+self-verifying frame (DESIGN.md §8):
+
+    MAGIC(4) | VERSION(1) | TYPE(1) | LEN(8, big-endian) | PAYLOAD | SHA256(32)
+
+The trailing SHA-256 covers header *and* payload, so a flipped bit anywhere
+in the frame is detected before any byte reaches a buffer mirror or a batch.
+Failure taxonomy:
+
+  * :class:`TruncatedFrame` — the connection died mid-frame (or delivered
+    fewer payload bytes than the header promised).
+  * :class:`ChecksumMismatch` — the frame arrived whole but its digest does
+    not match: corruption on the wire or a buggy peer.
+  * :class:`ProtocolError` — structurally wrong bytes: bad magic, an
+    unknown protocol version, or an implausible length.
+
+All three derive from :class:`WireError` (a ``ConnectionError``): transports
+treat any ``WireError`` as "this peer cannot serve right now" and fall back
+to the PFS — corrupt frames are *never* repaired into batch bytes.  A
+:class:`HandshakeError` is deliberately **not** a ``WireError``: two ends
+disagreeing about sample geometry is a deployment misconfiguration that
+must fail loudly, not degrade quietly into permanent PFS fallback.
+
+Fetch/row payloads are fixed little-endian numpy encodings
+(:func:`pack_fetch` / :func:`pack_rows` and their unpackers); control and
+handshake payloads are JSON (:func:`pack_json` / :func:`unpack_json`) — the
+volume there is a handful of frames per run, so self-describing beats
+compact.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import socket
+import struct
+
+import numpy as np
+
+__all__ = [
+    "WIRE_VERSION",
+    "MSG_HELLO",
+    "MSG_HELLO_OK",
+    "MSG_FETCH",
+    "MSG_ROWS",
+    "MSG_ERROR",
+    "MSG_CTRL",
+    "WireError",
+    "TruncatedFrame",
+    "ChecksumMismatch",
+    "ProtocolError",
+    "HandshakeError",
+    "send_frame",
+    "recv_frame",
+    "pack_json",
+    "unpack_json",
+    "pack_fetch",
+    "unpack_fetch",
+    "pack_rows",
+    "unpack_rows",
+]
+
+MAGIC = b"SOLw"
+#: bump on any change to the frame layout or payload encodings.
+WIRE_VERSION = 1
+
+#: client -> server: geometry negotiation ``{"node", "shape", "dtype"}``.
+MSG_HELLO = 1
+#: server -> client: negotiation accepted (echoes the server's geometry).
+MSG_HELLO_OK = 2
+#: client -> server: one peer-fetch request (step guard + sample ids).
+MSG_FETCH = 3
+#: server -> client: ok mask + the rows it could serve.
+MSG_ROWS = 4
+#: server -> client: named refusal (payload = utf-8 reason); the connection
+#: is closed after sending.
+MSG_ERROR = 5
+#: launcher control plane (register / addrbook / barrier / release / report).
+MSG_CTRL = 6
+
+_KNOWN_TYPES = frozenset(
+    (MSG_HELLO, MSG_HELLO_OK, MSG_FETCH, MSG_ROWS, MSG_ERROR, MSG_CTRL)
+)
+
+_HEADER = struct.Struct("!4sBBQ")
+_DIGEST_BYTES = 32
+#: hard per-frame cap: a header asking for more than this is garbage, not a
+#: giant fetch (2 GiB >> any buffer's worth of samples in one step).
+MAX_FRAME_PAYLOAD = 1 << 31
+
+
+class WireError(ConnectionError):
+    """Any frame-level failure; transports fall back to the PFS on it."""
+
+
+class TruncatedFrame(WireError):
+    """The connection closed (or stalled out) mid-frame."""
+
+
+class ChecksumMismatch(WireError):
+    """A whole frame arrived but its SHA-256 does not match its bytes."""
+
+
+class ProtocolError(WireError):
+    """Structurally invalid bytes: bad magic, version, type, or length."""
+
+
+class HandshakeError(RuntimeError):
+    """The two ends disagree about sample geometry or node identity.
+
+    Not a :class:`WireError` on purpose: silently falling back to the PFS
+    would mask a misconfigured address book or a mixed-version deployment.
+    """
+
+
+def _frame_digest(header: bytes, payload: bytes) -> bytes:
+    h = hashlib.sha256()
+    h.update(header)
+    h.update(payload)
+    return h.digest()
+
+
+def send_frame(sock: socket.socket, msg_type: int, payload: bytes) -> None:
+    """Write one framed message (header + payload + checksum) to ``sock``."""
+    if len(payload) > MAX_FRAME_PAYLOAD:
+        raise ProtocolError(f"frame payload too large: {len(payload)} bytes")
+    header = _HEADER.pack(MAGIC, WIRE_VERSION, int(msg_type), len(payload))
+    sock.sendall(header + payload + _frame_digest(header, payload))
+
+
+def _recv_exact(sock: socket.socket, n: int, *, eof_ok: bool = False) -> bytes | None:
+    """Read exactly ``n`` bytes; ``None`` on a clean EOF at a frame boundary
+    (only when ``eof_ok``), :class:`TruncatedFrame` on EOF anywhere else."""
+    chunks: list[bytes] = []
+    got = 0
+    while got < n:
+        try:
+            part = sock.recv(n - got)
+        except socket.timeout as e:
+            raise TruncatedFrame(f"timed out after {got}/{n} bytes") from e
+        if not part:
+            if eof_ok and got == 0:
+                return None
+            raise TruncatedFrame(f"connection closed after {got}/{n} bytes")
+        chunks.append(part)
+        got += len(part)
+    return b"".join(chunks)
+
+
+def recv_frame(
+    sock: socket.socket, *, eof_ok: bool = False
+) -> tuple[int, bytes] | None:
+    """Read one frame; returns ``(msg_type, payload)``.
+
+    With ``eof_ok`` a clean close *between* frames returns ``None`` (how a
+    server loop distinguishes "client hung up" from a truncated frame).
+    Verifies magic, version, length sanity, and the trailing checksum before
+    returning any payload byte to the caller.
+    """
+    header = _recv_exact(sock, _HEADER.size, eof_ok=eof_ok)
+    if header is None:
+        return None
+    magic, version, msg_type, length = _HEADER.unpack(header)
+    if magic != MAGIC:
+        raise ProtocolError(f"bad frame magic {magic!r}")
+    if version != WIRE_VERSION:
+        raise ProtocolError(
+            f"peer speaks wire version {version}, this build speaks "
+            f"{WIRE_VERSION}"
+        )
+    if msg_type not in _KNOWN_TYPES:
+        raise ProtocolError(f"unknown message type {msg_type}")
+    if length > MAX_FRAME_PAYLOAD:
+        raise ProtocolError(f"implausible frame length {length}")
+    payload = _recv_exact(sock, length)
+    digest = _recv_exact(sock, _DIGEST_BYTES)
+    if digest != _frame_digest(header, payload):
+        raise ChecksumMismatch("frame checksum mismatch")
+    return msg_type, payload
+
+
+# ---------------------------------------------------------------------------
+# Payload encodings
+# ---------------------------------------------------------------------------
+
+
+def pack_json(obj: dict) -> bytes:
+    return json.dumps(obj, sort_keys=True).encode()
+
+
+def unpack_json(payload: bytes) -> dict:
+    try:
+        out = json.loads(payload.decode())
+    except (UnicodeDecodeError, json.JSONDecodeError) as e:
+        raise ProtocolError(f"malformed JSON payload: {e}") from e
+    if not isinstance(out, dict):
+        raise ProtocolError("JSON payload must be an object")
+    return out
+
+
+_FETCH = struct.Struct("!qq")
+
+
+def pack_fetch(step: int, ids: np.ndarray) -> bytes:
+    """FETCH payload: the requester's global step index + wanted sample ids.
+
+    ``step`` is the guard: the server refuses to serve unless its own buffer
+    mirror currently reflects the *start-of-step* state for exactly this
+    step (DESIGN.md §8) — the multi-process form of the ordering contract in
+    :mod:`repro.data.peer`.
+    """
+    ids = np.ascontiguousarray(np.asarray(ids, dtype="<i8"))
+    return _FETCH.pack(int(step), ids.size) + ids.tobytes()
+
+
+def unpack_fetch(payload: bytes) -> tuple[int, np.ndarray]:
+    if len(payload) < _FETCH.size:
+        raise ProtocolError("short FETCH payload")
+    step, n = _FETCH.unpack_from(payload)
+    body = payload[_FETCH.size:]
+    if n < 0 or len(body) != n * 8:
+        raise ProtocolError(
+            f"FETCH declares {n} ids but carries {len(body)} payload bytes"
+        )
+    return step, np.frombuffer(body, dtype="<i8").astype(np.int64)
+
+
+def pack_rows(ok: np.ndarray, rows: np.ndarray) -> bytes:
+    """ROWS payload: bool mask over the requested ids + served row bytes.
+
+    ``rows`` holds one row per True mask entry, in request order — exactly
+    the :class:`~repro.data.peer.PeerTransport` return contract.
+    """
+    ok = np.ascontiguousarray(np.asarray(ok, bool))
+    rows = np.ascontiguousarray(rows)
+    assert rows.shape[0] == int(ok.sum()), (rows.shape, int(ok.sum()))
+    return ok.tobytes() + rows.tobytes()
+
+
+def unpack_rows(
+    payload: bytes, num_ids: int, sample_shape: tuple[int, ...], dtype
+) -> tuple[np.ndarray, np.ndarray]:
+    """Decode a ROWS payload against the *negotiated* geometry.
+
+    The expected byte count is fully determined by ``num_ids`` and the
+    handshake geometry; any disagreement is a :class:`ProtocolError`, never
+    a partially-decoded batch.
+    """
+    dtype = np.dtype(dtype)
+    if len(payload) < num_ids:
+        raise ProtocolError("short ROWS payload: mask missing")
+    ok = np.frombuffer(payload[:num_ids], dtype=bool)
+    row_bytes = int(
+        dtype.itemsize * int(np.prod(sample_shape, dtype=np.int64))
+    )
+    body = payload[num_ids:]
+    n_ok = int(ok.sum())
+    if len(body) != n_ok * row_bytes:
+        raise ProtocolError(
+            f"ROWS declares {n_ok} rows but carries {len(body)} bytes"
+        )
+    rows = np.frombuffer(body, dtype=dtype).reshape(
+        (n_ok,) + tuple(sample_shape)
+    )
+    return ok.copy(), rows.copy()

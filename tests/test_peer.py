@@ -325,13 +325,84 @@ def test_peer_cost_model_decision():
     assert not cheap_pfs.prefer_peer(4, 4)
 
 
-def test_socket_transport_is_an_honest_stub():
+def test_socket_transport_address_book_validation():
+    """Named AddressBookError for duplicate endpoints, self-endpoints, and
+    bad ports; construction without geometry stays legal (config round
+    trips) but fetching without it is a loud error, not a quiet fallback."""
+    from repro.data import AddressBookError
+
     t = SocketTransport({0: ("nodeA", 9000), 1: ("nodeB", 9000)})
     assert t.endpoints[0] == ("nodeA", 9000)
-    with pytest.raises(NotImplementedError):
+    with pytest.raises(ValueError, match="sample_shape and dtype"):
         t.fetch(0, np.asarray([1, 2]))
-    with pytest.raises(KeyError):
-        t.fetch(7, np.asarray([1]))
+    with pytest.raises(AddressBookError, match="duplicate endpoint"):
+        SocketTransport({0: ("nodeA", 9000), 1: ("nodeA", 9000)})
+    with pytest.raises(AddressBookError, match="self-endpoint"):
+        SocketTransport(
+            {0: ("nodeA", 9000), 1: ("nodeB", 9000)}, self_node=1
+        )
+    with pytest.raises(AddressBookError, match="out of range"):
+        SocketTransport({0: ("nodeA", 0)})
+    # one error names every inconsistency at once
+    with pytest.raises(AddressBookError, match="duplicate.*self-endpoint"):
+        SocketTransport(
+            {0: ("n", 9000), 1: ("n", 9000), 2: ("m", 9001)}, self_node=2
+        )
+
+
+def test_socket_transport_unreachable_peer_falls_back(tmp_path):
+    """A dead/unreachable endpoint serves nothing (all-False ok mask) — the
+    loader re-reads from the PFS; it never raises into batch assembly."""
+    lsock = __import__("socket").create_server(("127.0.0.1", 0))
+    port = lsock.getsockname()[1]
+    lsock.close()  # nothing listens here any more
+    t = SocketTransport(
+        {0: ("127.0.0.1", port)}, timeout_s=0.2,
+        sample_shape=(8,), dtype="<f4",
+    )
+    rows, ok = t.fetch(0, np.asarray([1, 2, 3]))
+    assert rows.shape == (0, 8) and not ok.any()
+    # a source missing from the book entirely is the same fallback (e.g. a
+    # peer that died before registering), not a KeyError mid-run
+    rows, ok = t.fetch(9, np.asarray([4]))
+    assert rows.shape == (0, 8) and not ok.any()
+    t.close()
+
+
+def test_served_by_source_surfaces_in_loader_report(tmp_path):
+    """Serving-load accounting rides the LoaderReport: the per-source serve
+    totals the exchange tracks must appear on ``report.served_by_source``
+    (and its JSON summary) so serving imbalance is visible alongside read
+    imbalance."""
+    store = _arange_store(tmp_path, "binary")
+    ld = build_pipeline(_peer_spec(store, peer=True))
+    for _ in ld:
+        pass
+    assert ld.report.total_remote > 0
+    assert ld.report.served_by_source == ld.peer_exchange.served_by_source
+    assert sum(ld.report.served_by_source.values()) == ld.peer_exchange.served
+    summ = ld.report.summary()
+    assert summ["peer_served_by_source"] == {
+        str(k): v for k, v in ld.peer_exchange.served_by_source.items()
+    }
+    store.close()
+
+
+def test_loaderspec_transport_validation(tmp_path):
+    with pytest.raises(ValueError, match="unknown transport"):
+        LoaderSpec(loader="solar", path="x", transport="carrier-pigeon").validate()
+    LoaderSpec(loader="solar", path="x", transport="socket").validate()
+    # in-process execution refuses a socket spec without a live transport
+    store = _arange_store(tmp_path, "binary", num_samples=64, width=4)
+    from repro.data import execute, plan
+
+    spec = LoaderSpec(
+        loader="solar", store=store, num_nodes=2, local_batch=2,
+        num_epochs=1, buffer_size=8, transport="socket",
+    )
+    with pytest.raises(ValueError, match="run_distributed"):
+        execute(spec, plan(spec))
+    store.close()
 
 
 def test_loaderspec_peer_validation(tmp_path):
