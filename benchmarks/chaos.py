@@ -1,0 +1,221 @@
+"""Chaos benchmark (DESIGN.md §9): elastic recovery under injected faults.
+
+Runs the same SOLAR plan through ``repro.runtime.run_distributed`` under a
+seeded :class:`~repro.runtime.faults.FaultPlan` and proves the recovery
+ladder end to end:
+
+  * **crash + reslice** — one rank is killed mid-run; the coordinator
+    re-slices its remaining plan onto survivors, the run completes, and the
+    XOR-aggregate digest is bit-identical to the in-process reference with
+    ``resliced_samples > 0``;
+  * **crash + degrade** — the *same seed* replayed with the PR 5
+    degrade-only path: survivors eat PFS fallbacks instead of adopting.
+    The reslice row must show **strictly fewer** fallbacks (adopted slices
+    keep serving peers, degrade leaves a dead server behind);
+  * **flaky peer** — frame corruption, truncation, dial resets, and slow
+    serving with no deaths: every fault class completes without hang, the
+    transport ladder counts retries, and both the per-rank stream digests
+    and the aggregate stay bit-identical;
+  * **false suspect** — a rank goes silent (heartbeat loss + stalled step
+    loop) long enough to be suspected but answers the probe window: it is
+    re-admitted (``false_suspects >= 1``) with **zero** re-slicing.
+
+Every row records wall time, the ladder counters
+(retries / breaker_opens / resliced_samples / rejoins), and digest parity.
+Emits per-scenario rows and returns the dict for ``BENCH_chaos.json``.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+from benchmarks.common import emit
+from repro.core.scheduler import SolarConfig
+from repro.data import DatasetSpec, LoaderSpec, create_store, get_backend
+
+#: same regime as benchmarks.dist: real peer traffic at every rank count.
+NUM_SAMPLES = 4096
+LOCAL_BATCH = 16
+BUFFER = 512
+EPOCHS = 2
+SAMPLE_FLOATS = 64
+NODES = 4
+#: one seed drives every scenario — rerunning this file reproduces the
+#: exact same chaos, fault for fault.
+SEED = 7
+
+
+def _dist_spec(nodes: int) -> LoaderSpec:
+    path = os.path.join(
+        tempfile.gettempdir(),
+        f"solar_bench_chaos_{NUM_SAMPLES}_{SAMPLE_FLOATS}",
+    )
+    if not get_backend("binary").exists(path):
+        create_store(
+            path, "binary",
+            spec=DatasetSpec(NUM_SAMPLES, (SAMPLE_FLOATS,), "<f4"),
+            fill="arange",
+        ).close()
+    solar = SolarConfig(
+        num_nodes=nodes, local_batch=LOCAL_BATCH, buffer_size=BUFFER,
+        seed=0, capacity_factor=1.0, enable_peer=True,
+    )
+    return LoaderSpec(
+        loader="solar", backend="binary", path=path, num_nodes=nodes,
+        local_batch=LOCAL_BATCH, num_epochs=EPOCHS, buffer_size=BUFFER,
+        collect_data=True, peer_fetch=True, solar=solar, transport="socket",
+    )
+
+
+def _ladder(report) -> dict:
+    s = report.summary()
+    return {
+        "retries": s["retries"],
+        "breaker_opens": s["breaker_opens"],
+        "escalations": s["escalations"],
+        "peer_fallbacks": s["peer_fallbacks"],
+        "resliced_samples": s["resliced_samples"],
+        "rejoins": s["rejoins"],
+        "false_suspects": s["false_suspects"],
+    }
+
+
+def _run_crash(spec, ref_agg: str, recovery: str) -> dict:
+    from repro.runtime import FaultPlan, run_distributed
+
+    # spare rank 0 so at least one designated survivor always exists; the
+    # same compiled plan (same seed) drives both recovery modes.
+    faults = FaultPlan.compile(
+        SEED, NODES, num_steps=8, crashes=1, spare_rank=0
+    )
+    t0 = time.perf_counter()
+    report = run_distributed(
+        spec, timeout_s=600.0, faults=faults, recovery=recovery,
+    )
+    wall = time.perf_counter() - t0
+    assert len(report.dead) == 1, (recovery, report.dead)
+    row = {
+        "recovery": recovery,
+        "dead_ranks": report.dead,
+        "steps": max(r.steps for r in report.ranks),
+        "aggregate_identical": report.aggregate_digest() == ref_agg,
+        "wall_s": round(wall, 4),
+        **_ladder(report),
+    }
+    if recovery == "reslice":
+        assert row["aggregate_identical"], (
+            "re-sliced run trained different bytes than the reference"
+        )
+        assert row["resliced_samples"] > 0, (
+            "a crash under reslice must reassign samples"
+        )
+    else:
+        assert row["resliced_samples"] == 0
+    return row
+
+
+def _run_flaky(spec, ref_agg: str) -> dict:
+    from repro.runtime import (
+        FaultPlan, in_process_digests, run_distributed,
+    )
+
+    faults = FaultPlan.compile(
+        SEED, NODES, num_steps=8, corrupt=2, truncate=1, resets=2, slow=2,
+    )
+    t0 = time.perf_counter()
+    report = run_distributed(spec, timeout_s=600.0, faults=faults)
+    wall = time.perf_counter() - t0
+    assert report.ok, f"flaky faults must not kill ranks: {report.dead}"
+    digests_ok = report.digests() == in_process_digests(spec)
+    assert digests_ok, "a masked fault corrupted a batch"
+    fired = {}
+    for r in report.ranks:
+        for k, v in r.faults_fired.items():
+            fired[k] = fired.get(k, 0) + v
+    assert fired, "the armed fault plan never fired at this geometry"
+    return {
+        "faults_fired": fired,
+        "digest_identical": digests_ok,
+        "aggregate_identical": report.aggregate_digest() == ref_agg,
+        "wall_s": round(wall, 4),
+        **_ladder(report),
+    }
+
+
+def _run_false_suspect(spec, ref_agg: str) -> dict:
+    from repro.runtime import (
+        Fault, FaultPlan, in_process_digests, run_distributed,
+    )
+
+    faults = FaultPlan(
+        seed=SEED, faults=(Fault("hb_loss", 1, step=4, delay_s=1.2),),
+    )
+    t0 = time.perf_counter()
+    report = run_distributed(
+        spec, timeout_s=600.0, faults=faults,
+        heartbeat_interval_s=0.1, suspect_timeout_s=0.4, probe_grace_s=5.0,
+    )
+    wall = time.perf_counter() - t0
+    assert report.ok, f"a stall must not kill the rank: {report.dead}"
+    assert report.false_suspects >= 1, "the stall was never even suspected"
+    assert report.resliced_samples == 0, (
+        "a false suspect must be re-admitted, not re-sliced"
+    )
+    digests_ok = report.digests() == in_process_digests(spec)
+    assert digests_ok, "re-admission diverged the digest"
+    return {
+        "stalled_rank": 1,
+        "stall_s": 1.2,
+        "digest_identical": digests_ok,
+        "aggregate_identical": report.aggregate_digest() == ref_agg,
+        "wall_s": round(wall, 4),
+        **_ladder(report),
+    }
+
+
+def run() -> dict:
+    from repro.runtime import in_process_aggregate
+
+    spec = _dist_spec(NODES)
+    t0 = time.perf_counter()
+    ref_agg = in_process_aggregate(spec)
+    results: dict = {
+        "seed": SEED,
+        "nodes": NODES,
+        "reference_wall_s": round(time.perf_counter() - t0, 4),
+    }
+
+    reslice = _run_crash(spec, ref_agg, "reslice")
+    degrade = _run_crash(spec, ref_agg, "degrade")
+    # the headline claim: adopting the dead rank's slice beats degrading
+    # to PFS fallbacks on the very same seeded crash.
+    assert reslice["peer_fallbacks"] < degrade["peer_fallbacks"], (
+        f"reslice ({reslice['peer_fallbacks']} fallbacks) must beat "
+        f"degrade ({degrade['peer_fallbacks']})"
+    )
+    results["crash_reslice"] = reslice
+    results["crash_degrade"] = degrade
+    emit("chaos/crash/reslice_aggregate_identical", 0.0,
+         str(reslice["aggregate_identical"]))
+    emit("chaos/crash/resliced_samples", 0.0,
+         str(reslice["resliced_samples"]))
+    emit("chaos/crash/fallbacks_reslice_vs_degrade", 0.0,
+         f"{reslice['peer_fallbacks']}<{degrade['peer_fallbacks']}")
+
+    flaky = _run_flaky(spec, ref_agg)
+    results["flaky_peer"] = flaky
+    emit("chaos/flaky/digest_identical", 0.0, str(flaky["digest_identical"]))
+    emit("chaos/flaky/retries", 0.0, str(flaky["retries"]))
+
+    suspect = _run_false_suspect(spec, ref_agg)
+    results["false_suspect"] = suspect
+    emit("chaos/false_suspect/readmitted", 0.0,
+         str(suspect["false_suspects"] >= 1))
+    emit("chaos/false_suspect/resliced_samples", 0.0,
+         str(suspect["resliced_samples"]))
+    return results
+
+
+if __name__ == "__main__":
+    run()

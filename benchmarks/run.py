@@ -22,6 +22,7 @@ from benchmarks import (
     balance,
     batch_dist,
     breakdown,
+    chaos,
     chunkable,
     dist,
     epoch_order,
@@ -48,6 +49,7 @@ SUITES = {
     "peer": peer.run,                   # peer-fetch tier vs PFS-only
     "plan": plan.run,                   # plan-once/train-many amortization
     "dist": dist.run,                   # multi-process runtime digest parity
+    "chaos": chaos.run,                 # elastic recovery under injected faults
 }
 
 

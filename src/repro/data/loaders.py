@@ -123,6 +123,10 @@ class LoaderReport:
     #: accounting, mirrored from :attr:`PeerExchange.served_by_source` —
     #: read imbalance lives in ``pfs_counts``, serving imbalance lives here).
     served_by_source: dict = dataclasses.field(default_factory=dict)
+    #: failure-ladder counters mirrored from the transport after each gather
+    #: (``retries`` / ``breaker_opens`` / ``unknown_source_fallbacks`` / ...);
+    #: empty for transports without a ladder (shared-view).
+    transport_stats: dict = dataclasses.field(default_factory=dict)
 
     @property
     def total_pfs(self) -> int:
@@ -156,6 +160,12 @@ class LoaderReport:
             "hit_rate": round(self.hit_rate, 4),
             "modeled_time_s": round(self.modeled_time_s, 3),
             "wall_time_s": round(self.wall_time_s, 3),
+            # the transport failure ladder (zeros for ladder-less transports)
+            "retries": int(self.transport_stats.get("retries", 0)),
+            "breaker_opens": int(self.transport_stats.get("breaker_opens", 0)),
+            "unknown_source_fallbacks": int(
+                self.transport_stats.get("unknown_source_fallbacks", 0)
+            ),
         }
 
 
@@ -390,6 +400,9 @@ class ScheduleExecutor:
             int(k): int(v)
             for k, v in self.peer_exchange.served_by_source.items()
         }
+        stats = getattr(self.peer_exchange.transport, "stats", None)
+        if callable(stats):
+            self.report.transport_stats = stats()
         self.report.wall_time_s += time.perf_counter() - t0
         return out
 

@@ -36,7 +36,10 @@ tier degrades to correctness-preserving slow paths, never wrong bytes.
 from __future__ import annotations
 
 import contextlib
+import dataclasses
+import random
 import socket
+import time
 from typing import Callable, Mapping, Protocol, Sequence, runtime_checkable
 
 import numpy as np
@@ -46,6 +49,7 @@ from repro.core.plan import PeerFetch
 __all__ = [
     "AddressBookError",
     "PeerTransport",
+    "RetryPolicy",
     "SharedViewTransport",
     "SocketTransport",
     "PeerExchange",
@@ -55,6 +59,90 @@ __all__ = [
 class AddressBookError(ValueError):
     """An invalid peer address book: duplicate ``(host, port)`` endpoints,
     a node's own endpoint listed as a peer, or an out-of-range port."""
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """The graded failure ladder for socket peer fetches (DESIGN.md §9).
+
+    Rung 1 — **retry**: a failed fetch (dial error, wire error, refusal) is
+    retried up to ``max_attempts`` times total, sleeping an exponentially
+    growing backoff with seeded jitter between attempts.  Transient blips
+    (one reset, one corrupt frame) cost one retry, not a PFS fallback.
+
+    Rung 2 — **circuit breaker**, per source: ``breaker_threshold``
+    *consecutive* exhausted fetches open the breaker; while open, fetches to
+    that source short-circuit straight to PFS fallback (no dial, no
+    hammering a struggling peer).  After ``breaker_cooldown_s`` the breaker
+    goes half-open and admits exactly one probe fetch — success closes it,
+    failure re-opens it.
+
+    Rung 3 — **escalation**: once the breaker has opened
+    ``escalate_after`` times without an intervening success, the transport
+    invokes its escalation callback (the launcher routes this to the control
+    plane's suspect path).  The coordinator — which sees heartbeats the data
+    plane does not — arbitrates; the transport never declares anyone dead.
+
+    All sleeps derive from ``seed`` so a chaos run's timing is reproducible.
+    """
+
+    max_attempts: int = 2
+    backoff_base_s: float = 0.02
+    backoff_max_s: float = 0.25
+    jitter: float = 0.5
+    breaker_threshold: int = 3
+    breaker_cooldown_s: float = 0.5
+    escalate_after: int = 2
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.max_attempts < 1:
+            raise ValueError(f"max_attempts must be >= 1, got {self.max_attempts}")
+        if self.breaker_threshold < 1:
+            raise ValueError(
+                f"breaker_threshold must be >= 1, got {self.breaker_threshold}"
+            )
+
+    def backoff_s(self, attempt: int, rng: random.Random) -> float:
+        """Backoff before retry ``attempt`` (0-based): exp growth + jitter."""
+        base = min(self.backoff_base_s * (2 ** attempt), self.backoff_max_s)
+        return base * (1.0 + self.jitter * rng.random())
+
+
+class _Breaker:
+    """Per-source circuit breaker state machine (clock injected for tests)."""
+
+    def __init__(self, policy: RetryPolicy):
+        self.policy = policy
+        self.state = "closed"
+        self.failures = 0
+        self.opened_at = 0.0
+        self.opens_in_row = 0
+
+    def allow(self, now: float) -> bool:
+        """May we attempt a fetch right now?  Open→half-open on cooldown."""
+        if self.state == "open":
+            if now - self.opened_at >= self.policy.breaker_cooldown_s:
+                self.state = "half_open"
+                return True
+            return False
+        return True
+
+    def success(self) -> None:
+        self.state = "closed"
+        self.failures = 0
+        self.opens_in_row = 0
+
+    def failure(self, now: float) -> bool:
+        """Record an exhausted fetch; True when this transition *opened*."""
+        self.failures += 1
+        if self.state == "half_open" or self.failures >= self.policy.breaker_threshold:
+            self.state = "open"
+            self.opened_at = now
+            self.failures = 0
+            self.opens_in_row += 1
+            return True
+        return False
 
 
 @runtime_checkable
@@ -108,11 +196,22 @@ class SocketTransport:
     stamps subsequent fetches with the requester's global step index, which
     the serving side uses as its step-epoch guard.
 
-    Failure semantics: any :class:`~repro.runtime.wire.WireError` or socket
-    error — including a peer that died mid-step or an endpoint that never
-    appeared in the book — yields an all-False ok mask, so the caller falls
-    back to PFS reads.  The failed connection is dropped and redialed on
-    the next fetch, so a restarted peer is picked back up automatically.
+    Failure semantics follow the graded ladder in :class:`RetryPolicy`:
+    bounded retries with backoff+jitter, then a per-source circuit breaker
+    (open → temporary PFS routing → half-open probe → close), then
+    escalation through ``escalate`` (the launcher's suspect path) once the
+    breaker trips persistently.  Every rung is counted (``retries``,
+    ``breaker_opens``, ``breaker_skips``, ``escalations``,
+    ``unknown_source_fallbacks``) and surfaced through :meth:`stats` into
+    ``LoaderReport.summary()``.  The failed connection is dropped and
+    redialed on the next allowed fetch, so a restarted peer is picked back
+    up automatically.
+
+    The book is *dynamic*: the launcher's recovery path calls
+    :meth:`update_endpoints` when node ownership moves to a different
+    surviving rank, and :meth:`add_local` when *this* rank adopts a node —
+    from then on that node's rows come from the adopted local mirror, not a
+    socket.
     """
 
     def __init__(
@@ -124,6 +223,8 @@ class SocketTransport:
         mirror_of: Callable[[int], object] | None = None,
         sample_shape: tuple[int, ...] | None = None,
         dtype=None,
+        retry: RetryPolicy | None = None,
+        escalate: Callable[[int], None] | None = None,
     ):
         self.endpoints = {
             int(node): (str(host), int(port))
@@ -139,6 +240,16 @@ class SocketTransport:
         self.dtype = None if dtype is None else np.dtype(dtype)
         self._step = -1
         self._conns: dict[int, socket.socket] = {}
+        self.retry = retry if retry is not None else RetryPolicy()
+        self._escalate = escalate
+        self._local: set[int] = set()
+        self._breakers: dict[int, _Breaker] = {}
+        self._rngs: dict[int, random.Random] = {}
+        self.retries = 0
+        self.breaker_opens = 0
+        self.breaker_skips = 0
+        self.escalations = 0
+        self.unknown_source_fallbacks = 0
         errs = []
         seen: dict[tuple[str, int], int] = {}
         for node in sorted(self.endpoints):
@@ -167,6 +278,67 @@ class SocketTransport:
         (the serving side's step-epoch guard, DESIGN.md §8)."""
         self._step = int(step)
 
+    # -- elastic membership (launcher recovery path) ------------------------
+
+    def update_endpoints(self, moved: Mapping[int, tuple[str, int]]) -> None:
+        """Re-point sources whose owner changed (re-slice / rejoin).
+
+        Pooled connections and breaker state for a moved source are
+        discarded: the new owner starts with a clean slate.
+        """
+        for node, (host, port) in moved.items():
+            node = int(node)
+            if node == self.self_node or node in self._local:
+                continue
+            ep = (str(host), int(port))
+            if self.endpoints.get(node) == ep:
+                continue
+            self.endpoints[node] = ep
+            conn = self._conns.pop(node, None)
+            if conn is not None:
+                with contextlib.suppress(OSError):
+                    conn.close()
+            self._breakers.pop(node, None)
+
+    def add_local(self, node: int) -> None:
+        """This rank now owns ``node``: serve it from the local mirror."""
+        node = int(node)
+        self._local.add(node)
+        self.endpoints.pop(node, None)
+        conn = self._conns.pop(node, None)
+        if conn is not None:
+            with contextlib.suppress(OSError):
+                conn.close()
+        self._breakers.pop(node, None)
+
+    def remove_local(self, node: int) -> None:
+        """Ownership of ``node`` moved away (a rejoined rank reclaimed it)."""
+        self._local.discard(int(node))
+
+    def stats(self) -> dict:
+        """Failure-ladder counters for ``LoaderReport`` aggregation."""
+        return {
+            "retries": self.retries,
+            "breaker_opens": self.breaker_opens,
+            "breaker_skips": self.breaker_skips,
+            "escalations": self.escalations,
+            "unknown_source_fallbacks": self.unknown_source_fallbacks,
+        }
+
+    def _breaker(self, source: int) -> _Breaker:
+        br = self._breakers.get(source)
+        if br is None:
+            br = self._breakers[source] = _Breaker(self.retry)
+        return br
+
+    def _rng(self, source: int) -> random.Random:
+        rng = self._rngs.get(source)
+        if rng is None:
+            rng = self._rngs[source] = random.Random(
+                (self.retry.seed << 17) ^ (source * 1000003 + 7)
+            )
+        return rng
+
     def close(self) -> None:
         """Drop every pooled connection (idempotent)."""
         conns, self._conns = self._conns, {}
@@ -186,8 +358,12 @@ class SocketTransport:
         return np.empty((0,) + tuple(shape), dtype), np.zeros(n, bool)
 
     def _connect(self, source: int) -> socket.socket:
-        from repro.runtime import wire
+        from repro.runtime import faults, wire
 
+        if faults.on_dial():
+            raise ConnectionResetError(
+                f"injected connection reset dialing peer {source}"
+            )
         host, port = self.endpoints[source]
         conn = socket.create_connection((host, port), timeout=self.timeout_s)
         conn.settimeout(self.timeout_s)
@@ -199,9 +375,16 @@ class SocketTransport:
             }))
             msg_type, payload = wire.recv_frame(conn)
             if msg_type == wire.MSG_ERROR:
-                raise wire.HandshakeError(
-                    f"peer {source} refused the handshake: "
-                    f"{payload.decode(errors='replace')}"
+                reason = payload.decode(errors="replace")
+                if "geometry mismatch" in reason:
+                    # deployment misconfiguration: fail loudly, never retry.
+                    raise wire.HandshakeError(
+                        f"peer {source} refused the handshake: {reason}"
+                    )
+                # any other refusal (e.g. "not serving node N" during an
+                # ownership transition) is transient: retriable wire error.
+                raise wire.ProtocolError(
+                    f"peer {source} refused the handshake: {reason}"
                 )
             if msg_type != wire.MSG_HELLO_OK:
                 raise wire.ProtocolError(
@@ -224,28 +407,47 @@ class SocketTransport:
                 "to fetch; endpoint-only construction is for config "
                 "validation"
             )
-        if source == self.self_node and self._mirror_of is not None:
-            # own holder: a zero-cost local arena gather, never a socket.
+        if (
+            source == self.self_node or source in self._local
+        ) and self._mirror_of is not None:
+            # own (or adopted) holder: a zero-cost local arena gather,
+            # never a socket.
             mirror = self._mirror_of(source)
-            slots = mirror.lookup(ids)
-            ok = slots >= 0
-            if not ok.any():
-                return self._fallback(ids.size)[0], ok
-            return mirror.rows(slots[ok]), ok
-        if source not in self.endpoints:
-            # e.g. a peer that died before registering: serve nothing, the
-            # loader falls back to the PFS.
+            if mirror is not None:
+                slots = mirror.lookup(ids)
+                ok = slots >= 0
+                if not ok.any():
+                    return self._fallback(ids.size)[0], ok
+                return mirror.rows(slots[ok]), ok
             return self._fallback(ids.size)
+        if source not in self.endpoints:
+            # a peer missing from the address book (died before registering,
+            # or a misconfigured book): serve nothing, the loader falls back
+            # to the PFS — counted so misconfiguration is visible, not slow.
+            self.unknown_source_fallbacks += 1
+            return self._fallback(ids.size)
+        breaker = self._breaker(source)
+        if not breaker.allow(time.monotonic()):
+            # breaker open: temporary PFS routing, no dial at all.
+            self.breaker_skips += 1
+            return self._fallback(ids.size)
+        rng = self._rng(source)
         pooled = self._conns.pop(source, None)
         # A pooled connection may have been idled out by the server between
-        # steps — that is staleness, not a dead peer, so it earns exactly
-        # one retry on a fresh dial before we declare fallback.
-        for conn in (pooled, None) if pooled is not None else (None,):
+        # steps — staleness, not a dead peer — so it rides in front of the
+        # policy's fresh-dial attempts and its failure costs a retry, not a
+        # fallback.
+        attempts: list[socket.socket | None] = [None] * self.retry.max_attempts
+        if pooled is not None:
+            attempts.insert(0, pooled)
+        for i, conn in enumerate(attempts):
+            last = i == len(attempts) - 1
             try:
                 if conn is None:
                     conn = self._connect(source)
                 wire.send_frame(
-                    conn, wire.MSG_FETCH, wire.pack_fetch(self._step, ids)
+                    conn, wire.MSG_FETCH, wire.pack_fetch(self._step, ids),
+                    site="transport.fetch",
                 )
                 msg_type, payload = wire.recv_frame(conn)
                 if msg_type != wire.MSG_ROWS:
@@ -256,12 +458,14 @@ class SocketTransport:
                     payload, ids.size, self.sample_shape, self.dtype
                 )
             except (wire.WireError, OSError):
-                # truncated / corrupt / dead peer: never wrong bytes — serve
-                # nothing (or retry once off the stale pooled conn) and let
-                # the caller hit the PFS.
+                # truncated / corrupt / reset / dead peer: never wrong bytes
+                # — drop the connection and climb the ladder.
                 if conn is not None:
                     with contextlib.suppress(OSError):
                         conn.close()
+                if not last:
+                    self.retries += 1
+                    time.sleep(self.retry.backoff_s(i, rng))
                 continue
             except BaseException:
                 if conn is not None:
@@ -269,7 +473,17 @@ class SocketTransport:
                         conn.close()
                 raise
             self._conns[source] = conn
+            breaker.success()
             return rows, ok
+        # every attempt exhausted: one breaker failure for the whole fetch.
+        if breaker.failure(time.monotonic()):
+            self.breaker_opens += 1
+            if (
+                breaker.opens_in_row >= self.retry.escalate_after
+                and self._escalate is not None
+            ):
+                self.escalations += 1
+                self._escalate(source)
         return self._fallback(ids.size)
 
 

@@ -199,14 +199,37 @@ def _add_distributed_args(ap: argparse.ArgumentParser) -> None:
                          "(capacity_factor=1.0 so the tier carries traffic)")
     ap.add_argument("--verify", action="store_true",
                     help="also execute the plan in-process and assert every "
-                         "rank's stream digest matches bit for bit")
+                         "rank's stream digest matches bit for bit (and, "
+                         "under faults, that the XOR-aggregate digest of "
+                         "the whole run matches despite deaths)")
     ap.add_argument("--timeout", type=float, default=300.0,
                     help="whole-run timeout in seconds")
+    ap.add_argument("--faults", default=None, metavar="SPEC",
+                    help="seeded fault-injection plan, e.g. "
+                         "'seed=7,crash=1,corrupt=2,slow=1' "
+                         "(see repro.runtime.faults.FaultPlan.parse; "
+                         "ranks= defaults to --nodes)")
+    ap.add_argument("--recovery", default="reslice",
+                    choices=("reslice", "degrade"),
+                    help="on rank death: re-slice its remaining plan onto "
+                         "survivors (default) or degrade to PFS fallbacks")
 
 
 def run_distributed_cmd(args) -> None:
     from repro.core.scheduler import SolarConfig
-    from repro.runtime import in_process_digests, run_distributed
+    from repro.runtime import (
+        FaultPlan,
+        in_process_aggregate,
+        in_process_digests,
+        run_distributed,
+    )
+
+    faults = None
+    if args.faults:
+        text = args.faults
+        if "ranks=" not in text:
+            text = f"ranks={args.nodes},{text}"
+        faults = FaultPlan.parse(text)
 
     if args.data is None:
         args.data = f"/tmp/solar_tokens.{args.backend}"
@@ -235,16 +258,24 @@ def run_distributed_cmd(args) -> None:
     from repro.data import plan
 
     schedule = plan(spec)  # once: the run and the reference share one plan
-    report = run_distributed(spec, schedule=schedule, timeout_s=args.timeout)
+    report = run_distributed(
+        spec, schedule=schedule, timeout_s=args.timeout,
+        faults=faults, recovery=args.recovery,
+    )
     out = report.summary()
     if args.verify:
         ref = in_process_digests(spec, schedule=schedule)
         mismatched = [
             r.rank for r in report.ranks
-            if r.status == "ok" and r.digest != ref[r.rank]
+            if r.status == "ok" and not r.rejoined and r.digest != ref[r.rank]
         ]
+        agg_parity = (
+            report.aggregate_digest()
+            == in_process_aggregate(spec, schedule=schedule)
+        )
         out["verify"] = {
             "digest_parity": not mismatched and report.ok,
+            "aggregate_parity": agg_parity,
             "mismatched_ranks": mismatched,
             "dead_ranks": report.dead,
         }
@@ -254,18 +285,28 @@ def run_distributed_cmd(args) -> None:
                 f"digest mismatch on ranks {mismatched}: the multi-process "
                 "run trained different bytes than the in-process reference"
             )
-        if report.dead:
-            # a dead rank means its digest was never verified at all — a
-            # green exit here would let CI pass on a broken runtime.
+        if not agg_parity:
+            raise SystemExit(
+                "aggregate digest mismatch: the run did not execute the "
+                "planned global sample stream exactly once"
+            )
+        if report.dead and (args.recovery != "reslice" or faults is None):
+            # in degrade mode a dead rank means its samples were never
+            # verified at all — a green exit would let CI pass on a broken
+            # runtime.  Under reslice the aggregate parity above already
+            # proves survivors covered the dead rank's remaining plan, but
+            # only an *injected* death is an expected outcome.
             raise SystemExit(
                 f"ranks {report.dead} died during the run: digest parity "
                 "could not be verified for them"
             )
         return
     print(json.dumps(out, indent=1))
-    if report.dead:
-        # without --verify a dead rank still must not exit green: wrapping
-        # scripts treat this exit code as "the run completed".
+    if report.dead and (args.recovery != "reslice" or faults is None):
+        # a death nobody injected must not exit green, re-sliced or not:
+        # wrapping scripts treat this exit code as "the run completed".
+        # An *injected* crash under reslice is the scenario being tested —
+        # pair it with --verify to assert aggregate parity.
         raise SystemExit(f"ranks {report.dead} died during the run")
 
 

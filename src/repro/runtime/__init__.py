@@ -1,17 +1,29 @@
-"""Distributed runtime: wire protocol, per-node buffer servers, launcher.
+"""Distributed runtime: wire protocol, buffer servers, elastic launcher.
 
-The multi-process half of the reproduction (DESIGN.md §8): one plan
-artifact, N spawned rank processes, peer fetches served over real TCP
-sockets out of live buffer mirrors, and an aggregated run report.
+The multi-process half of the reproduction (DESIGN.md §8) plus its elastic
+recovery layer (DESIGN.md §9): one plan artifact, N spawned rank processes,
+peer fetches served over real TCP sockets out of live buffer mirrors,
+heartbeat-driven failure detection with plan re-slicing on rank death, and
+a deterministic fault-injection harness to prove all of it.
 
     from repro.runtime import run_distributed, in_process_digests
 
     report = run_distributed(spec)            # N = spec.num_nodes processes
     assert report.digests() == in_process_digests(spec)
+
+    from repro.runtime import FaultPlan, in_process_aggregate
+
+    chaos = FaultPlan.compile(seed=7, num_ranks=2, crashes=1, corrupt=2)
+    report = run_distributed(spec, faults=chaos)   # a rank dies mid-run...
+    assert report.aggregate_digest() == in_process_aggregate(spec)  # ...and
+    # the global sample stream is still executed exactly once.
 """
+from repro.runtime.faults import ArmedFaults, Fault, FaultPlan
 from repro.runtime.launcher import (
     DistributedReport,
+    LauncherConfigError,
     RankResult,
+    in_process_aggregate,
     in_process_digests,
     run_distributed,
 )
@@ -26,15 +38,20 @@ from repro.runtime.wire import (
 )
 
 __all__ = [
+    "ArmedFaults",
     "BufferServer",
     "ChecksumMismatch",
     "DistributedReport",
+    "Fault",
+    "FaultPlan",
     "HandshakeError",
+    "LauncherConfigError",
     "ProtocolError",
     "RankResult",
     "TruncatedFrame",
     "WIRE_VERSION",
     "WireError",
+    "in_process_aggregate",
     "in_process_digests",
     "run_distributed",
 ]

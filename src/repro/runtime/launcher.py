@@ -1,7 +1,9 @@
 """Multi-process launcher: N OS processes executing one plan over TCP.
 
 ``run_distributed(spec)`` turns the single-process loader into a real
-distributed run (DESIGN.md §8):
+distributed run (DESIGN.md §8), and — because every future access is
+compiled into the :class:`~repro.core.plan.Schedule` IR — an *elastic* one
+(DESIGN.md §9):
 
   * the parent compiles (or loads) the :class:`~repro.core.plan.Schedule`,
     saves it as one artifact, and hands every rank the *path plus the
@@ -21,17 +23,35 @@ distributed run (DESIGN.md §8):
     every server publishing the step index) and once after all peer fetches
     (no mirror mutates while any peer still reads).  The data plane (peer
     rows) never touches the parent;
-  * a rank dying mid-run is detected as its control connection dropping:
-    the coordinator removes it from every pending and future barrier, the
-    survivors' fetches to its vanished server fall back to PFS reads, and
-    the final :class:`DistributedReport` lists it as dead — the run
-    completes with correct bytes instead of hanging.
+  * every rank **heartbeats** — on a timer and after each executed step —
+    carrying an atomic snapshot of its per-node step cursors and its
+    XOR-aggregate batch digest.  The coordinator's failure detector turns
+    silence into suspicion (one probe, a grace window) and persistent
+    silence into a declared death;
+  * a declared death triggers **recovery by re-slicing** (the default): the
+    dead rank's remaining plan — its ``for_node`` suffix from the cursor in
+    its last heartbeat — is reassigned to a survivor, piggybacked on the
+    next step-start barrier release together with the updated address book,
+    so every rank applies the transition at the same step boundary.  The
+    adopter rebuilds the orphan's buffer mirror (delta replay + one
+    coalesced restage), replays any catch-up steps from the store, then
+    executes the adopted plan in lockstep and serves it to peers — the
+    *global* per-step sample set, and therefore the aggregate batch digest,
+    is preserved.  ``recovery="degrade"`` keeps the PR 5 behaviour
+    (survivors eat PFS fallbacks) for comparison;
+  * the same assignment message lets a **restarted rank re-join**: it
+    registers again, is handed a resume step, reclaims its own slice at the
+    next boundary, and the interim adopter drops it.
 
-Every rank streams its batches through the same canonical digest as the
-in-process executor (:func:`~repro.data.loaders.update_batch_digest`), so
-"the multi-process run trains exactly the planned bytes" is one string
-comparison against :func:`in_process_digests` — which the tests and
-``benchmarks/dist.py`` perform at 2 and 4 ranks.
+Digest accounting under recovery is exact: per-(step, node) single-node
+batch digests are XOR-combined (order- and ownership-independent), a
+rank's heartbeat carries ``(cursors, aggregate)`` snapshotted under one
+lock, and re-slicing starts from exactly the last heartbeat's cursor — so
+work the dead rank hashed but never reported is simply redone by the
+adopter and counted once.  ``XOR(survivor finals, dead last-heartbeats)``
+equals :func:`in_process_aggregate` bit for bit.  Per-rank *stream*
+digests (:func:`in_process_digests`) remain own-node-only, so healthy-run
+parity is unchanged by adoption.
 """
 from __future__ import annotations
 
@@ -49,13 +69,25 @@ from typing import Mapping
 from repro.runtime import wire
 
 __all__ = [
+    "LauncherConfigError",
     "RankResult",
     "DistributedReport",
     "run_distributed",
     "in_process_digests",
+    "in_process_aggregate",
 ]
 
 _HOST = "127.0.0.1"
+
+
+class LauncherConfigError(ValueError):
+    """An invalid launcher configuration (non-positive timeout/interval,
+    unknown recovery mode) — refused up front with a named error."""
+
+
+def _xor_into(acc: bytearray, digest: bytes) -> None:
+    for i, b in enumerate(digest):
+        acc[i] ^= b
 
 
 # ---------------------------------------------------------------------------
@@ -64,16 +96,39 @@ _HOST = "127.0.0.1"
 
 
 class _Coordinator:
-    """Parent-side control server: registration, barriers, reports, deaths.
+    """Parent-side control server: registration, barriers, heartbeats,
+    failure detection, re-slicing, reports.
 
-    One handler thread per rank connection; all shared state is guarded by
-    one condition variable.  A dropped connection from a rank that has not
-    reported is a death: the rank leaves the barrier participant set
-    immediately, so nobody waits on a corpse.
+    One handler thread per rank connection plus one monitor thread; all
+    shared state is guarded by one condition variable, and every socket
+    send happens under it (frames from different threads never interleave).
+
+    Failure detection is graded: any inbound message refreshes a rank's
+    liveness; silence beyond ``suspect_timeout_s`` makes it *suspected* and
+    earns it a probe; any sign of life before ``probe_grace_s`` more
+    seconds re-admits it (counted as a false suspect); continued silence
+    gets its connection closed — fencing it off the control plane — and the
+    normal death path runs.  Peers can *suggest* suspicion (the transport's
+    breaker escalation), but only staleness the coordinator observes
+    itself can advance the ladder: the data plane never declares deaths.
     """
 
-    def __init__(self, num_ranks: int):
+    def __init__(
+        self,
+        num_ranks: int,
+        *,
+        barrier_timeout_s: float = 60.0,
+        recovery: str = "reslice",
+        heartbeat_interval_s: float = 0.2,
+        suspect_timeout_s: float = 2.0,
+        probe_grace_s: float = 2.0,
+    ):
         self.num_ranks = int(num_ranks)
+        self.barrier_timeout_s = float(barrier_timeout_s)
+        self.recovery = str(recovery)
+        self.heartbeat_interval_s = float(heartbeat_interval_s)
+        self.suspect_timeout_s = float(suspect_timeout_s)
+        self.probe_grace_s = float(probe_grace_s)
         self._listener = socket.create_server((_HOST, 0))
         self._listener.settimeout(0.1)
         self.port = self._listener.getsockname()[1]
@@ -86,14 +141,39 @@ class _Coordinator:
         self._conns: dict[int, socket.socket] = {}
         self._barriers: dict[str, set[int]] = {}
         self._addrbook_sent = False
+        # -- elastic state ---------------------------------------------------
+        #: node -> rank currently executing (and serving) that node's plan.
+        self.owner_of: dict[int, int] = {r: r for r in range(self.num_ranks)}
+        #: rank -> monotonic time of its last inbound control message.
+        self.last_msg: dict[int, float] = {}
+        #: rank -> its latest heartbeat payload ({"cursors": {...}, "agg"}).
+        self.hb_state: dict[int, dict] = {}
+        #: rank -> first step whose barriers it participates in (0 for a
+        #: fresh rank; the resume step for a rejoiner — it is not expected
+        #: at barriers for steps it never ran).
+        self.joined_at: dict[int, int] = {}
+        #: aggregate digests frozen from dead ranks' last heartbeats.
+        self.dead_aggs: list[str] = []
+        self.suspected: set[int] = set()
+        self.false_suspects = 0
+        self.peer_suspicions = 0
+        self.probes_sent = 0
+        self.rejoins = 0
+        self.resliced_nodes = 0
+        self.last_released_step = -1
+        self._pending_assignments: list[dict] = []
         self._closed = threading.Event()
         self._threads: list[threading.Thread] = []
         self._accept_thread = threading.Thread(
             target=self._accept_loop, name="solar-coord", daemon=True
         )
+        self._monitor_thread = threading.Thread(
+            target=self._monitor_loop, name="solar-coord-monitor", daemon=True
+        )
 
     def start(self) -> "_Coordinator":
         self._accept_thread.start()
+        self._monitor_thread.start()
         return self
 
     def close(self) -> None:
@@ -105,6 +185,7 @@ class _Coordinator:
                 with contextlib.suppress(OSError):
                     conn.close()
         self._accept_thread.join(timeout=5.0)
+        self._monitor_thread.join(timeout=5.0)
         for t in self._threads:
             t.join(timeout=5.0)
 
@@ -128,31 +209,34 @@ class _Coordinator:
     def _handle(self, conn: socket.socket) -> None:
         rank = None
         try:
-            conn.settimeout(600.0)
+            # the only traffic lulls a healthy rank shows are barrier waits,
+            # and heartbeats tick through those — so the control-plane recv
+            # timeout is the same budget as the barriers it carries.
+            conn.settimeout(self.barrier_timeout_s)
             msg = self._recv_ctrl(conn)
             if msg.get("kind") != "register":
                 return
             rank = int(msg["rank"])
-            with self._cond:
-                self.endpoints[rank] = (str(msg["host"]), int(msg["port"]))
-                self._conns[rank] = conn
-                self.alive.add(rank)
-                if (
-                    len(self.endpoints) == self.num_ranks
-                    and not self._addrbook_sent
-                ):
-                    self._broadcast_addrbook()
-                elif self._addrbook_sent:
-                    # late registrant (the others already run): it still gets
-                    # the book so *its* fetches work; fetches *to* it from
-                    # peers that never saw its endpoint fall back to PFS.
-                    self._send_addrbook(conn)
-                self._cond.notify_all()
+            self._register(rank, conn, msg)
             while True:
                 msg = self._recv_ctrl(conn)
                 kind = msg.get("kind")
+                with self._cond:
+                    self.last_msg[rank] = time.monotonic()
+                    if rank in self.suspected:
+                        # sign of life inside the grace window: re-admit.
+                        self.suspected.discard(rank)
+                        self.false_suspects += 1
                 if kind == "barrier":
                     self._arrive(rank, str(msg["name"]))
+                elif kind == "hb":
+                    with self._cond:
+                        self.hb_state[rank] = {
+                            "cursors": dict(msg.get("cursors", {})),
+                            "agg": msg.get("agg"),
+                        }
+                elif kind == "suspect":
+                    self._peer_suspect(rank, int(msg.get("node", -1)))
                 elif kind == "report":
                     with self._cond:
                         self.reports[rank] = msg
@@ -168,11 +252,66 @@ class _Coordinator:
                 conn.close()
             if rank is not None:
                 with self._cond:
-                    if rank not in self.done:
-                        self.dead.add(rank)
-                    self.alive.discard(rank)
+                    # a rejoined rank replaces its conn entry: the stale
+                    # handler for the old socket must not kill the new one.
+                    if self._conns.get(rank) is conn:
+                        self.alive.discard(rank)
+                        if rank not in self.done:
+                            self._on_death(rank)
                     self._eval_barriers()
                     self._cond.notify_all()
+
+    def _register(self, rank: int, conn: socket.socket, msg: dict) -> None:
+        with self._cond:
+            rejoin = rank in self.dead
+            if rejoin:
+                self.dead.discard(rank)
+                self.suspected.discard(rank)
+                self.rejoins += 1
+            self.endpoints[rank] = (str(msg["host"]), int(msg["port"]))
+            self._conns[rank] = conn
+            self.alive.add(rank)
+            self.last_msg[rank] = time.monotonic()
+            if not rejoin:
+                self.joined_at.setdefault(rank, 0)
+            if rejoin:
+                # hand back the rank's own slice at the next unreleased step
+                # boundary; the interim adopter drops it in the same release.
+                resume = self.last_released_step + 1
+                self.joined_at[rank] = resume
+                self.owner_of[rank] = rank
+                pending = next(
+                    (
+                        a for a in self._pending_assignments
+                        if int(a["node"]) == rank
+                    ),
+                    None,
+                )
+                if pending is not None:
+                    # the node's reassignment was queued but never
+                    # delivered: no survivor adopted it, so the rejoiner
+                    # itself must cover the gap from the dead cursor.
+                    pending["owner"] = rank
+                    pending["endpoint"] = list(self.endpoints[rank])
+                else:
+                    self._pending_assignments.append({
+                        "node": rank,
+                        "owner": rank,
+                        "from_step": resume,
+                        "endpoint": list(self.endpoints[rank]),
+                    })
+                self._send_addrbook(conn, resume_step=resume, rejoin=True)
+            elif (
+                len(self.endpoints) == self.num_ranks
+                and not self._addrbook_sent
+            ):
+                self._broadcast_addrbook()
+            elif self._addrbook_sent:
+                # late registrant (the others already run): it still gets
+                # the book so *its* fetches work; fetches *to* it from
+                # peers that never saw its endpoint fall back to PFS.
+                self._send_addrbook(conn)
+            self._cond.notify_all()
 
     @staticmethod
     def _recv_ctrl(conn: socket.socket) -> dict:
@@ -191,18 +330,100 @@ class _Coordinator:
         except OSError:
             return False
 
-    def _send_addrbook(self, conn: socket.socket) -> None:
+    def _send_addrbook(
+        self, conn: socket.socket, *, resume_step: int = 0, rejoin: bool = False
+    ) -> None:
         self._send_ctrl(conn, {
             "kind": "addrbook",
             "endpoints": {
                 str(r): list(ep) for r, ep in self.endpoints.items()
             },
+            "resume_step": int(resume_step),
+            "rejoin": bool(rejoin),
         })
 
     def _broadcast_addrbook(self) -> None:  # cond held
         self._addrbook_sent = True
         for conn in self._conns.values():
             self._send_addrbook(conn)
+
+    # -- failure detection / recovery ------------------------------------------
+
+    def _monitor_loop(self) -> None:
+        period = max(self.heartbeat_interval_s / 2.0, 0.02)
+        while not self._closed.wait(period):
+            with self._cond:
+                now = time.monotonic()
+                for r in sorted(self.alive - self.done):
+                    seen = self.last_msg.get(r)
+                    if seen is None:
+                        continue
+                    age = now - seen
+                    if r in self.suspected:
+                        if age > self.suspect_timeout_s + self.probe_grace_s:
+                            # fencing: close the conn; its handler thread
+                            # observes the drop and runs the death path.
+                            conn = self._conns.get(r)
+                            if conn is not None:
+                                with contextlib.suppress(OSError):
+                                    conn.close()
+                    elif age > self.suspect_timeout_s:
+                        self.suspected.add(r)
+                        self.probes_sent += 1
+                        conn = self._conns.get(r)
+                        if conn is not None:
+                            self._send_ctrl(conn, {"kind": "probe"})
+
+    def _peer_suspect(self, reporter: int, node: int) -> None:
+        """A rank's breaker escalated on ``node``.  Advisory only: the
+        coordinator acts only if the owner looks stale to *it* as well."""
+        with self._cond:
+            self.peer_suspicions += 1
+            target = self.owner_of.get(node, node)
+            if target == reporter or target not in self.alive:
+                return
+            seen = self.last_msg.get(target)
+            if seen is None or target in self.suspected:
+                return
+            if time.monotonic() - seen > self.suspect_timeout_s:
+                self.suspected.add(target)
+                self.probes_sent += 1
+                conn = self._conns.get(target)
+                if conn is not None:
+                    self._send_ctrl(conn, {"kind": "probe"})
+
+    def _on_death(self, rank: int) -> None:  # cond held
+        """Death bookkeeping + (in reslice mode) queue the reassignments."""
+        if rank in self.dead:
+            return
+        self.dead.add(rank)
+        self.alive.discard(rank)
+        self.suspected.discard(rank)
+        hb = self.hb_state.get(rank, {})
+        if hb.get("agg"):
+            # freeze the prefix the dead rank *reported* hashing; anything
+            # it did after this heartbeat is redone (and counted) by the
+            # adopter — exactly-once in the aggregate.
+            self.dead_aggs.append(str(hb["agg"]))
+        if self.recovery != "reslice":
+            return
+        survivors = sorted(self.alive - self.done)
+        if not survivors:
+            return
+        cursors = hb.get("cursors", {})
+        owned = sorted(n for n, o in self.owner_of.items() if o == rank)
+        for i, node in enumerate(owned):
+            adopter = survivors[i % len(survivors)]
+            from_step = int(cursors.get(str(node), 0))
+            self.owner_of[node] = adopter
+            ep = self.endpoints.get(adopter)
+            self._pending_assignments.append({
+                "node": int(node),
+                "owner": int(adopter),
+                "from_step": from_step,
+                "endpoint": list(ep) if ep is not None else None,
+            })
+            self.resliced_nodes += 1
 
     # -- barriers --------------------------------------------------------------
 
@@ -212,17 +433,38 @@ class _Coordinator:
             self._eval_barriers()
 
     def _eval_barriers(self) -> None:  # cond held
-        participants = self.alive - self.done
+        running = self.alive - self.done
         for name in list(self._barriers):
+            # a rejoiner resuming at step r is not expected at barriers for
+            # steps it never ran — without this, a registration landing
+            # mid-barrier would deadlock the in-flight release.
+            step = int(name.split(":", 1)[1])
+            participants = {
+                r for r in running if self.joined_at.get(r, 0) <= step
+            }
             arrived = self._barriers[name]
             if participants <= arrived:
-                for r in sorted(arrived & self.alive):
-                    self._send_ctrl(
-                        self._conns[r], {"kind": "release", "name": name}
+                msg = {"kind": "release", "name": name}
+                if name.startswith("s:"):
+                    # ownership transitions apply at step boundaries: ride
+                    # the step-start release so every rank adopts/drops at
+                    # the same moment, with the updated endpoints in hand.
+                    step = int(name[2:])
+                    self.last_released_step = max(
+                        self.last_released_step, step
                     )
+                    if self._pending_assignments:
+                        msg["assignments"] = self._pending_assignments
+                        self._pending_assignments = []
+                for r in sorted(arrived & self.alive):
+                    self._send_ctrl(self._conns[r], msg)
                 del self._barriers[name]
 
     # -- parent-side waits -----------------------------------------------------
+
+    def is_dead(self, rank: int) -> bool:
+        with self._cond:
+            return rank in self.dead
 
     def mark_dead_if_silent(self, rank: int) -> None:
         """Write off a rank whose *process* exited without ever connecting.
@@ -231,12 +473,13 @@ class _Coordinator:
         dropping; a rank that crashed before registering leaves no
         connection to drop, so the launcher reports it from the process
         table.  Once every surviving rank has registered, the address book
-        goes out (partial: fetches to the dead rank fall back to PFS).
+        goes out (partial: fetches to the dead rank fall back to PFS until
+        re-slicing reassigns its node).
         """
         with self._cond:
             if rank in self.done or rank in self.dead or rank in self.alive:
                 return
-            self.dead.add(rank)
+            self._on_death(rank)
             if (
                 not self._addrbook_sent
                 and len(self.endpoints) + len(self.dead) >= self.num_ranks
@@ -244,6 +487,20 @@ class _Coordinator:
                 self._broadcast_addrbook()
             self._eval_barriers()
             self._cond.notify_all()
+
+    def pending_detail(self) -> dict[int, float | None]:
+        """Unfinished ranks -> seconds since their last control message
+        (``None`` if they never spoke) — the who-is-missing for timeouts."""
+        with self._cond:
+            now = time.monotonic()
+            pending = set(range(self.num_ranks)) - self.done - self.dead
+            return {
+                r: (
+                    round(now - self.last_msg[r], 3)
+                    if r in self.last_msg else None
+                )
+                for r in sorted(pending)
+            }
 
     def wait_done(self, timeout_s: float) -> bool:
         deadline = time.monotonic() + timeout_s
@@ -261,18 +518,34 @@ class _Coordinator:
 
 
 class _ControlClient:
-    """A rank's connection to the coordinator: register, barrier, report."""
+    """A rank's connection to the coordinator: register, barrier, report,
+    plus the liveness side-channel (heartbeat thread, probe replies,
+    breaker-escalation suspicions).  All sends serialize on one lock; only
+    the main thread receives."""
 
-    def __init__(self, port: int, *, timeout_s: float):
+    def __init__(
+        self, port: int, *, timeout_s: float, hb_interval_s: float = 0.2
+    ):
         self.sock = socket.create_connection((_HOST, port), timeout=timeout_s)
         self.sock.settimeout(timeout_s)
+        self._send_lock = threading.Lock()
+        self.hb_interval_s = float(hb_interval_s)
+        #: bound by the rank loop: () -> (cursors dict, aggregate hex).
+        self.progress = None
+        self._hb_stop = threading.Event()
+        self._hb_pause_until = 0.0
+        self._hb_thread: threading.Thread | None = None
 
     def close(self) -> None:
+        self._hb_stop.set()
+        if self._hb_thread is not None:
+            self._hb_thread.join(timeout=2.0)
         with contextlib.suppress(OSError):
             self.sock.close()
 
     def _send(self, msg: dict) -> None:
-        wire.send_frame(self.sock, wire.MSG_CTRL, wire.pack_json(msg))
+        with self._send_lock:
+            wire.send_frame(self.sock, wire.MSG_CTRL, wire.pack_json(msg))
 
     def _recv(self) -> dict:
         frame = wire.recv_frame(self.sock)
@@ -281,24 +554,82 @@ class _ControlClient:
             raise wire.ProtocolError(f"unexpected control frame {msg_type}")
         return wire.unpack_json(payload)
 
-    def register(self, rank: int, host: str, port: int) -> dict[int, tuple[str, int]]:
-        """Announce this rank's buffer server; block for the address book."""
-        self._send({"kind": "register", "rank": rank, "host": host, "port": port})
+    # -- liveness --------------------------------------------------------------
+
+    def heartbeat(self) -> None:
+        """Send one liveness beat carrying the progress snapshot."""
+        cursors, agg = ({}, None) if self.progress is None else self.progress()
+        self._send({
+            "kind": "hb",
+            "cursors": {str(k): int(v) for k, v in cursors.items()},
+            "agg": agg,
+        })
+
+    def start_heartbeats(self) -> None:
+        self._hb_thread = threading.Thread(
+            target=self._hb_loop, name="solar-rank-hb", daemon=True
+        )
+        self._hb_thread.start()
+
+    def _hb_loop(self) -> None:
+        while not self._hb_stop.wait(self.hb_interval_s):
+            if time.monotonic() < self._hb_pause_until:
+                continue  # injected heartbeat loss (false-suspect harness)
+            try:
+                self.heartbeat()
+            except OSError:
+                return
+
+    def suppress_heartbeats(self, duration_s: float) -> None:
+        self._hb_pause_until = time.monotonic() + float(duration_s)
+
+    def suspect(self, node: int) -> None:
+        """Escalate a persistently-tripping breaker to the coordinator."""
+        with contextlib.suppress(OSError):
+            self._send({"kind": "suspect", "node": int(node)})
+
+    # -- protocol --------------------------------------------------------------
+
+    def register(
+        self, rank: int, host: str, port: int
+    ) -> tuple[dict[int, tuple[str, int]], int, bool]:
+        """Announce this rank's buffer server; block for the address book.
+
+        Returns ``(endpoints, resume_step, rejoin)``: a fresh rank resumes
+        at step 0 owning its slice; a rejoining rank starts bare at
+        ``resume_step`` and reclaims its slice via the assignment attached
+        to that step's release.
+        """
+        self._send({
+            "kind": "register", "rank": rank, "host": host, "port": port,
+        })
         while True:
             msg = self._recv()
-            if msg.get("kind") == "addrbook":
-                return {
-                    int(r): (str(ep[0]), int(ep[1]))
-                    for r, ep in msg["endpoints"].items()
-                }
+            if msg.get("kind") == "probe":
+                self.heartbeat()
+            elif msg.get("kind") == "addrbook":
+                return (
+                    {
+                        int(r): (str(ep[0]), int(ep[1]))
+                        for r, ep in msg["endpoints"].items()
+                    },
+                    int(msg.get("resume_step", 0)),
+                    bool(msg.get("rejoin", False)),
+                )
 
-    def barrier(self, name: str) -> None:
-        """Arrive at ``name``; block until the coordinator releases it."""
+    def barrier(self, name: str) -> dict:
+        """Arrive at ``name``; block for the release, answering probes.
+
+        Returns the release message itself — step-start releases may carry
+        ownership ``assignments`` and endpoint updates.
+        """
         self._send({"kind": "barrier", "name": name})
         while True:
             msg = self._recv()
-            if msg.get("kind") == "release" and msg.get("name") == name:
-                return
+            if msg.get("kind") == "probe":
+                self.heartbeat()
+            elif msg.get("kind") == "release" and msg.get("name") == name:
+                return msg
 
     def report(self, payload: dict) -> None:
         self._send(dict(payload, kind="report"))
@@ -310,22 +641,31 @@ class _ControlClient:
 
 
 def _rank_main(rank: int, cfg: dict) -> None:
-    """One rank: load plan by hash, serve the buffer, replay the slice."""
+    """One rank: load plan by hash, serve the buffer, replay the slice —
+    and, under recovery, adopt/drop orphaned slices at step boundaries."""
     from repro.core.plan import Schedule
     from repro.data.loaders import update_batch_digest
     from repro.data.peer import SocketTransport
     from repro.data.pipeline import build_store, execute
+    from repro.runtime import faults as faults_mod
     from repro.runtime.server import BufferServer
 
     spec = cfg["spec"]
     barrier_timeout_s = float(cfg["barrier_timeout_s"])
-    die_at_step = cfg.get("die_at_step")
+    armed = faults_mod.arm(cfg.get("fault_plan"), rank)
+    crash_at = armed.crash_step() if armed is not None else None
+    if cfg.get("die_at_step") is not None:
+        crash_at = int(cfg["die_at_step"])
 
-    ctrl = _ControlClient(cfg["control_port"], timeout_s=barrier_timeout_s)
+    ctrl = _ControlClient(
+        cfg["control_port"], timeout_s=barrier_timeout_s,
+        hb_interval_s=float(cfg.get("heartbeat_interval_s", 0.2)),
+    )
     store = build_store(spec)
     server = None
     transport = None
-    executor = None
+    owned: dict[int, object] = {}   # node -> its ScheduleExecutor
+    iters: dict[int, object] = {}   # node -> that executor's plan walk
     try:
         schedule = Schedule.load(cfg["plan_path"])
         digest = schedule.artifact_digest()
@@ -335,58 +675,228 @@ def _rank_main(rank: int, cfg: dict) -> None:
                 f"launcher's {cfg['plan_digest']} — refusing to execute a "
                 "plan I cannot verify"
             )
-        sliced = schedule.for_node(rank)
+        total_steps = schedule.num_steps
 
         server = BufferServer(
             rank, store.sample_shape, store.dtype, host=_HOST, port=0
         ).start()
-        endpoints = ctrl.register(rank, server.host, server.port)
-        # the executor does not exist yet: both the server and the transport
-        # reach the mirrors through late-bound closures.
+        endpoints, resume_step, rejoining = ctrl.register(
+            rank, server.host, server.port
+        )
+
+        def _mirror_for(node):
+            ex = owned.get(node)
+            return None if ex is None else ex._mirror(node)
+
         transport = SocketTransport(
             {r: ep for r, ep in endpoints.items() if r != rank},
             self_node=rank,
-            mirror_of=lambda n: executor._mirror(n),
+            mirror_of=_mirror_for,
             sample_shape=store.sample_shape,
             dtype=store.dtype,
             timeout_s=min(barrier_timeout_s, 5.0),
+            retry=cfg.get("retry"),
+            escalate=ctrl.suspect,
         )
-        executor = execute(spec, sliced, store=store, peer_transport=transport)
-        server.attach(lambda n: executor._mirror(n))
+        server.attach(_mirror_for)
 
-        h = hashlib.sha256()
-        idx = 0
+        # -- progress accounting (heartbeat payload) -------------------------
+        h = hashlib.sha256()          # own-node stream digest (parity tests)
+        agg = bytearray(32)           # XOR of per-(step, node) batch digests
+        cursors: dict[int, int] = {}  # node -> next step to execute
+        resliced_samples = 0
+        prog_lock = threading.Lock()
+
+        def _record(node: int, step_idx: int, sb, *, adopted: bool) -> None:
+            nonlocal resliced_samples
+            d = hashlib.sha256()
+            update_batch_digest(d, sb)
+            with prog_lock:
+                # one lock makes (cursors, agg) an atomic snapshot: the
+                # coordinator re-slices from exactly what was reported.
+                _xor_into(agg, d.digest())
+                cursors[node] = step_idx + 1
+            if adopted:
+                resliced_samples += int(sum(x.size for x in sb.node_ids))
+
+        def _progress():
+            with prog_lock:
+                return dict(cursors), bytes(agg).hex()
+
+        ctrl.progress = _progress
+        ctrl.start_heartbeats()
+
+        #: node -> the primed (EpochPlan, NodeStepPlan-slice) for the step
+        #: about to run.  Priming (``next()`` on the plan walk) happens
+        #: *before* the step-start barrier because the first ``next()``
+        #: stages/restages the node's buffer mirror — peers may fetch the
+        #: moment the barrier releases, so the mirror must already be in
+        #: start-of-step state by then.
+        staged: dict[int, tuple] = {}
+
+        if rejoining:
+            # a rejoiner owns nothing until it reclaims its slice at the
+            # resume boundary: refuse fetches instead of serving an
+            # unstaged mirror.
+            server.drop(rank)
+        else:
+            ex = execute(
+                spec, schedule.for_node(rank), store=store,
+                peer_transport=transport,
+            )
+            owned[rank] = ex
+            iters[rank] = ex.plan_steps()
+
+        def _adopt(node: int, from_step: int, boundary: int) -> None:
+            """Take over ``node``'s plan: rebuild its mirror at the current
+            boundary (delta replay + one coalesced restage via
+            ``fast_forward``), replay catch-up steps from the store, then
+            start serving it.  Runs outside the server's mutation lock: the
+            node is not in ``serving`` yet, so peers racing this get the
+            all-False refusal (PFS fallback), never a half-built mirror.
+            """
+            ex = execute(
+                spec, schedule.for_node(node), store=store,
+                peer_transport=transport,
+            )
+            if from_step > 0:
+                ex.fast_forward(from_step)
+            it = ex.plan_steps()
+            owned[node] = ex
+            iters[node] = it
+            if node != rank:
+                transport.add_local(node)
+            for s in range(from_step, boundary):
+                cep, csp = next(it)
+                # catch-up replays without peer traffic: a peer row's PFS
+                # fallback is digest-identical, and the sources' mirrors
+                # are already past these steps anyway.
+                sb = ex.execute_step(
+                    cep, csp, peer_arrays=[None] * len(csp.nodes)
+                )
+                _record(node, s, sb, adopted=True)
+            if boundary < total_steps:
+                # prime the boundary step now — with zero catch-up this
+                # first next() performs the coalesced restage, which must
+                # finish before the node becomes fetchable.
+                staged[node] = next(it)
+            server.adopt(node)
+
+        def _apply_release(rel: dict, boundary: int) -> None:
+            assignments = rel.get("assignments", ())
+            if not assignments:
+                return
+            # last entry per node wins: a death-reassignment and a rejoin
+            # reclaim can ride the same release, and only the final owner
+            # should adopt (an intermediate adopter would double-hash the
+            # catch-up steps).
+            final: dict[int, dict] = {}
+            for a in assignments:
+                final[int(a["node"])] = a
+            moved: dict[int, tuple[str, int]] = {}
+            for node in sorted(final):
+                a = final[node]
+                owner = int(a["owner"])
+                from_step = int(a["from_step"])
+                endpoint = a.get("endpoint")
+                if owner == rank:
+                    if node not in owned:
+                        _adopt(node, from_step, boundary)
+                else:
+                    if node in owned and node != rank:
+                        # ownership moved away (a rejoined rank reclaimed
+                        # it): stop executing and serving it here.
+                        server.drop(node)
+                        owned.pop(node, None)
+                        iters.pop(node, None)
+                        staged.pop(node, None)
+                        transport.remove_local(node)
+                    if endpoint is not None and node != rank:
+                        moved[node] = (str(endpoint[0]), int(endpoint[1]))
+            if moved:
+                transport.update_endpoints(moved)
+
+        idx = int(resume_step)
         t0 = time.perf_counter()
-        for ep, sp in executor.plan_steps():
+        while idx < total_steps:
+            for node in sorted(owned):
+                if node not in staged:
+                    staged[node] = next(iters[node])
             # Mirror state now == start-of-step idx: publish BEFORE the
             # barrier so every released peer finds a serving server.
             server.at_step(idx)
-            ctrl.barrier(f"s:{idx}")
-            if die_at_step is not None and idx == int(die_at_step):
+            release = ctrl.barrier(f"s:{idx}")
+            _apply_release(release, idx)
+            if crash_at is not None and idx == crash_at:
                 os._exit(17)  # fault injection: vanish mid-step, no cleanup
+            if armed is not None:
+                stall = armed.stall(idx)
+                if stall > 0:
+                    # false-suspect harness: go silent without dying —
+                    # heartbeats suppressed AND the step loop wedged.
+                    ctrl.suppress_heartbeats(stall)
+                    time.sleep(stall)
             transport.at_step(idx)
-            peer_arrays = executor.gather_peers(sp)
+            gathered = {
+                node: owned[node].gather_peers(staged[node][1])
+                for node in sorted(owned)
+            }
             # Everyone fetched before anyone mutates (the ordering contract
             # of repro.data.peer, stretched across processes).
             ctrl.barrier(f"f:{idx}")
             with server.mutating():
-                sb = executor.execute_step(ep, sp, peer_arrays=peer_arrays)
-            update_batch_digest(h, sb)
+                for node in sorted(owned):
+                    cep, csp = staged.pop(node)
+                    sb = owned[node].execute_step(
+                        cep, csp, peer_arrays=gathered[node]
+                    )
+                    if node == rank:
+                        update_batch_digest(h, sb)
+                    _record(node, idx, sb, adopted=node != rank)
+            # synchronous beat: the coordinator sees this step's cursors
+            # and aggregate before the next boundary can re-slice them.
+            with contextlib.suppress(OSError):
+                ctrl.heartbeat()
             idx += 1
         wall = time.perf_counter() - t0
 
-        ex = executor.peer_exchange
+        summary: dict = {}
+        served_by_source: dict[int, int] = {}
+        peer_served = 0
+        peer_fallbacks = 0
+        for node in sorted(owned):
+            ex_rep = owned[node].report.summary()
+            if node == rank:
+                summary = dict(ex_rep)
+            else:
+                for k in ("numPFS", "misses", "remote_fetches"):
+                    summary[k] = summary.get(k, 0) + int(ex_rep.get(k, 0))
+            pe = owned[node].peer_exchange
+            if pe is not None:
+                peer_served += int(pe.served)
+                peer_fallbacks += int(pe.fallbacks)
+                for k, v in pe.served_by_source.items():
+                    served_by_source[int(k)] = (
+                        served_by_source.get(int(k), 0) + int(v)
+                    )
+        cursors_snap, agg_hex = _progress()
         ctrl.report({
             "rank": rank,
             "digest": h.hexdigest(),
-            "steps": idx,
-            "summary": executor.report.summary(),
+            "agg": agg_hex,
+            "steps": idx - int(resume_step),
+            "summary": summary,
             "served_by_source": {
-                str(k): int(v) for k, v in (ex.served_by_source if ex else {}).items()
+                str(k): int(v) for k, v in served_by_source.items()
             },
-            "peer_served": int(ex.served) if ex else 0,
-            "peer_fallbacks": int(ex.fallbacks) if ex else 0,
+            "peer_served": peer_served,
+            "peer_fallbacks": peer_fallbacks,
             "stale_refusals": int(server.stale_refusals),
+            "resliced_samples": int(resliced_samples),
+            "adopted_nodes": sorted(int(n) for n in owned if n != rank),
+            "transport": transport.stats(),
+            "faults_fired": armed.summary() if armed is not None else {},
+            "rejoined": bool(rejoining),
             "wall_time_s": round(wall, 4),
         })
     finally:
@@ -396,6 +906,7 @@ def _rank_main(rank: int, cfg: dict) -> None:
             transport.close()
         store.close()
         ctrl.close()
+        faults_mod.disarm()
 
 
 # ---------------------------------------------------------------------------
@@ -409,6 +920,9 @@ class RankResult:
     #: ``ok`` (report received) or ``dead`` (process vanished mid-run).
     status: str
     digest: str | None = None
+    #: the rank's XOR aggregate over every (step, node) batch it executed —
+    #: including adopted nodes and catch-up replays.
+    agg: str | None = None
     steps: int = 0
     #: the rank's LoaderReport summary (numPFS, misses, remote, ...).
     summary: dict = dataclasses.field(default_factory=dict)
@@ -417,6 +931,17 @@ class RankResult:
     peer_served: int = 0
     peer_fallbacks: int = 0
     stale_refusals: int = 0
+    #: samples this rank executed on behalf of dead ranks' slices.
+    resliced_samples: int = 0
+    adopted_nodes: list[int] = dataclasses.field(default_factory=list)
+    #: transport failure-ladder counters (retries, breaker_opens, ...).
+    transport: dict = dataclasses.field(default_factory=dict)
+    #: which armed faults actually fired in this rank's process.
+    faults_fired: dict = dataclasses.field(default_factory=dict)
+    rejoined: bool = False
+    #: seconds between the rank's last control message and run collection
+    #: (``None`` for ranks that reported normally).
+    last_heartbeat_age_s: float | None = None
     wall_time_s: float = 0.0
     exitcode: int | None = None
 
@@ -429,6 +954,14 @@ class DistributedReport:
     ranks: list[RankResult]
     plan_digest: str
     wall_time_s: float
+    recovery: str = "reslice"
+    #: aggregate digests frozen from dead ranks' last heartbeats — the
+    #: prefix work that does not need redoing, XORed into the aggregate.
+    dead_aggs: list[str] = dataclasses.field(default_factory=list)
+    false_suspects: int = 0
+    peer_suspicions: int = 0
+    rejoins: int = 0
+    resliced_nodes: int = 0
 
     @property
     def dead(self) -> list[int]:
@@ -441,24 +974,59 @@ class DistributedReport:
     def digests(self) -> dict[int, str | None]:
         return {r.rank: r.digest for r in self.ranks}
 
+    @property
+    def resliced_samples(self) -> int:
+        return sum(r.resliced_samples for r in self.ranks)
+
+    def aggregate_digest(self) -> str:
+        """XOR of every reported per-(step, node) batch digest.
+
+        Survivor finals already include adopted and catch-up work; dead
+        ranks contribute the prefix frozen in their last heartbeat.  Equal
+        to :func:`in_process_aggregate` iff the run executed the planned
+        global sample stream exactly once — re-sliced, rejoined, or not.
+        """
+        acc = bytearray(32)
+        for r in self.ranks:
+            if r.status == "ok" and r.agg:
+                _xor_into(acc, bytes.fromhex(r.agg))
+        for a in self.dead_aggs:
+            _xor_into(acc, bytes.fromhex(a))
+        return bytes(acc).hex()
+
     def summary(self) -> dict:
         """One JSON-safe run report: per-rank rows + cross-rank aggregates."""
         agg_keys = ("numPFS", "misses", "remote_fetches")
         agg = {k: 0 for k in agg_keys}
+        ladder_keys = (
+            "retries", "breaker_opens", "breaker_skips", "escalations",
+            "unknown_source_fallbacks",
+        )
+        ladder = {k: 0 for k in ladder_keys}
         serving: dict[int, int] = {}
         for r in self.ranks:
             for k in agg_keys:
                 agg[k] += int(r.summary.get(k, 0))
+            for k in ladder_keys:
+                ladder[k] += int(r.transport.get(k, 0))
             for src, n in r.served_by_source.items():
                 serving[int(src)] = serving.get(int(src), 0) + int(n)
         return {
             "num_ranks": self.num_ranks,
             "dead_ranks": self.dead,
+            "recovery": self.recovery,
             "plan_digest": self.plan_digest,
+            "aggregate_digest": self.aggregate_digest(),
             "wall_time_s": round(self.wall_time_s, 4),
             "peer_served": sum(r.peer_served for r in self.ranks),
             "peer_fallbacks": sum(r.peer_fallbacks for r in self.ranks),
             "stale_refusals": sum(r.stale_refusals for r in self.ranks),
+            "resliced_samples": self.resliced_samples,
+            "resliced_nodes": self.resliced_nodes,
+            "rejoins": self.rejoins,
+            "false_suspects": self.false_suspects,
+            "peer_suspicions": self.peer_suspicions,
+            **ladder,
             "served_by_source": {str(k): serving[k] for k in sorted(serving)},
             **agg,
             "ranks": [
@@ -468,6 +1036,11 @@ class DistributedReport:
                     "digest": r.digest,
                     "steps": r.steps,
                     "exitcode": r.exitcode,
+                    "resliced_samples": r.resliced_samples,
+                    "adopted_nodes": r.adopted_nodes,
+                    "rejoined": r.rejoined,
+                    "faults_fired": r.faults_fired,
+                    "last_heartbeat_age_s": r.last_heartbeat_age_s,
                     "wall_time_s": r.wall_time_s,
                     **{k: r.summary.get(k) for k in agg_keys},
                 }
@@ -480,6 +1053,20 @@ class DistributedReport:
 # The launcher
 # ---------------------------------------------------------------------------
 
+_RECOVERY_MODES = ("reslice", "degrade")
+
+
+def _validate_config(**kv: float) -> None:
+    bad = [
+        f"{name}={value!r} (must be > 0)"
+        for name, value in kv.items()
+        if not (isinstance(value, (int, float)) and value > 0)
+    ]
+    if bad:
+        raise LauncherConfigError(
+            "invalid launcher configuration: " + "; ".join(bad)
+        )
+
 
 def run_distributed(
     spec,
@@ -489,6 +1076,13 @@ def run_distributed(
     timeout_s: float = 300.0,
     barrier_timeout_s: float = 60.0,
     die_at_step: Mapping[int, int] | None = None,
+    faults=None,
+    recovery: str = "reslice",
+    restart_ranks=None,
+    heartbeat_interval_s: float = 0.2,
+    suspect_timeout_s: float = 2.0,
+    probe_grace_s: float = 2.0,
+    retry=None,
 ) -> DistributedReport:
     """Execute ``spec``'s plan as ``spec.num_nodes`` real OS processes.
 
@@ -498,13 +1092,38 @@ def run_distributed(
     ``collect_data=True``, synchronous stepping (the barrier protocol owns
     the step cadence, so ``prefetch_depth`` is forced to 0 inside ranks).
 
-    ``die_at_step`` maps rank -> global step index at which that rank is
-    killed mid-step (``os._exit``) — the fault-injection hook the dead-peer
-    tests and benchmarks use.  Raises ``TimeoutError`` only if the run as a
-    whole exceeds ``timeout_s`` even after dead ranks are written off.
+    Fault injection: ``die_at_step`` maps rank -> global step index at
+    which that rank is killed mid-step (``os._exit``); ``faults`` takes a
+    :class:`~repro.runtime.faults.FaultPlan` arming the full site catalog
+    (frame corruption/truncation, dial resets, slow serving, crashes,
+    heartbeat loss).
+
+    Recovery: ``"reslice"`` (default) reassigns a dead rank's remaining
+    plan to survivors at the next step boundary; ``"degrade"`` keeps the
+    PR 5 behaviour (survivors fall back to the PFS for the dead rank's
+    rows).  ``restart_ranks`` names ranks respawned once after death — the
+    restarted process re-registers and reclaims its slice (a rejoin).
+
+    Raises ``TimeoutError`` — naming the pending ranks and their last
+    heartbeat ages — only if the run as a whole exceeds ``timeout_s`` even
+    after dead ranks are written off.
     """
+    import dataclasses as _dc
+
+    from repro.data.peer import RetryPolicy
     from repro.data.pipeline import plan as plan_fn
 
+    _validate_config(
+        timeout_s=timeout_s,
+        barrier_timeout_s=barrier_timeout_s,
+        heartbeat_interval_s=heartbeat_interval_s,
+        suspect_timeout_s=suspect_timeout_s,
+        probe_grace_s=probe_grace_s,
+    )
+    if recovery not in _RECOVERY_MODES:
+        raise LauncherConfigError(
+            f"unknown recovery mode {recovery!r}; have {_RECOVERY_MODES}"
+        )
     if spec.store is not None:
         raise ValueError(
             "run_distributed needs a path-based LoaderSpec: every rank "
@@ -532,9 +1151,21 @@ def run_distributed(
     plan_digest = schedule.artifact_digest()
     cleanup_dir = run_dir if own_dir else None
 
-    coord = _Coordinator(spec.num_nodes).start()
+    base_retry = retry if retry is not None else RetryPolicy()
+    restart_ranks = frozenset(int(r) for r in (restart_ranks or ()))
+    coord = _Coordinator(
+        spec.num_nodes,
+        barrier_timeout_s=barrier_timeout_s,
+        recovery=recovery,
+        heartbeat_interval_s=heartbeat_interval_s,
+        suspect_timeout_s=suspect_timeout_s,
+        probe_grace_s=probe_grace_s,
+    ).start()
     ctx = multiprocessing.get_context("spawn")
-    procs = []
+    procs: list = []
+    old_procs: list = []
+    cfgs: list[dict] = []
+    restarted: set[int] = set()
     t0 = time.perf_counter()
     try:
         for rank in range(spec.num_nodes):
@@ -544,8 +1175,13 @@ def run_distributed(
                 "plan_digest": plan_digest,
                 "control_port": coord.port,
                 "barrier_timeout_s": barrier_timeout_s,
+                "heartbeat_interval_s": heartbeat_interval_s,
                 "die_at_step": (die_at_step or {}).get(rank),
+                "fault_plan": faults,
+                # per-rank jitter streams stay decorrelated and seeded.
+                "retry": _dc.replace(base_retry, seed=base_retry.seed + rank),
             }
+            cfgs.append(cfg)
             p = ctx.Process(
                 target=_rank_main, args=(rank, cfg),
                 name=f"solar-rank-{rank}", daemon=True,
@@ -554,24 +1190,50 @@ def run_distributed(
             procs.append(p)
         deadline = time.monotonic() + timeout_s
         while not coord.wait_done(1.0):
-            # a child that crashed before ever connecting leaves no control
-            # connection to drop — report it from the process table.
-            for rank, p in enumerate(procs):
-                if p.exitcode is not None:
+            for rank in range(spec.num_nodes):
+                p = procs[rank]
+                if p.exitcode is None:
+                    continue
+                if (
+                    rank in restart_ranks
+                    and rank not in restarted
+                    and recovery == "reslice"
+                    and coord.is_dead(rank)
+                ):
+                    # rejoin: one respawn, with the lethal faults stripped
+                    # (a restarted rank re-crashing at the same step would
+                    # never make progress).
+                    restarted.add(rank)
+                    cfg2 = dict(
+                        cfgs[rank], die_at_step=None, fault_plan=None
+                    )
+                    p2 = ctx.Process(
+                        target=_rank_main, args=(rank, cfg2),
+                        name=f"solar-rank-{rank}-rejoin", daemon=True,
+                    )
+                    p2.start()
+                    old_procs.append(p)
+                    procs[rank] = p2
+                elif rank not in restarted:
+                    # a child that crashed before ever connecting leaves no
+                    # control connection to drop — report it from the
+                    # process table.
                     coord.mark_dead_if_silent(rank)
             if time.monotonic() > deadline:
                 raise TimeoutError(
                     f"distributed run did not finish within {timeout_s}s: "
-                    f"done={sorted(coord.done)} dead={sorted(coord.dead)}"
+                    f"done={sorted(coord.done)} dead={sorted(coord.dead)} "
+                    f"pending(last-contact ages s)={coord.pending_detail()}"
                 )
         deadline = time.monotonic() + 10.0
-        for p in procs:
+        for p in procs + old_procs:
             p.join(timeout=max(deadline - time.monotonic(), 0.1))
     finally:
-        for p in procs:
+        for p in procs + old_procs:
             if p.is_alive():
                 p.terminate()
                 p.join(timeout=5.0)
+        pending_ages = coord.pending_detail()
         coord.close()
         if cleanup_dir is not None:  # every rank is gone: artifact done
             import shutil
@@ -584,12 +1246,21 @@ def run_distributed(
         rep = coord.reports.get(rank)
         exitcode = procs[rank].exitcode if rank < len(procs) else None
         if rep is None:
-            results.append(RankResult(rank=rank, status="dead", exitcode=exitcode))
+            now = time.monotonic()
+            age = coord.last_msg.get(rank)
+            results.append(RankResult(
+                rank=rank, status="dead", exitcode=exitcode,
+                last_heartbeat_age_s=(
+                    round(now - age, 3) if age is not None
+                    else pending_ages.get(rank)
+                ),
+            ))
         else:
             results.append(RankResult(
                 rank=rank,
                 status="ok",
                 digest=str(rep.get("digest")),
+                agg=rep.get("agg"),
                 steps=int(rep.get("steps", 0)),
                 summary=dict(rep.get("summary", {})),
                 served_by_source={
@@ -599,18 +1270,48 @@ def run_distributed(
                 peer_served=int(rep.get("peer_served", 0)),
                 peer_fallbacks=int(rep.get("peer_fallbacks", 0)),
                 stale_refusals=int(rep.get("stale_refusals", 0)),
+                resliced_samples=int(rep.get("resliced_samples", 0)),
+                adopted_nodes=[
+                    int(n) for n in rep.get("adopted_nodes", ())
+                ],
+                transport=dict(rep.get("transport", {})),
+                faults_fired=dict(rep.get("faults_fired", {})),
+                rejoined=bool(rep.get("rejoined", False)),
                 wall_time_s=float(rep.get("wall_time_s", 0.0)),
                 exitcode=exitcode,
             ))
     return DistributedReport(
         num_ranks=spec.num_nodes, ranks=results,
         plan_digest=plan_digest, wall_time_s=wall,
+        recovery=recovery,
+        dead_aggs=list(coord.dead_aggs),
+        false_suspects=coord.false_suspects,
+        peer_suspicions=coord.peer_suspicions,
+        rejoins=coord.rejoins,
+        resliced_nodes=coord.resliced_nodes,
     )
 
 
 # ---------------------------------------------------------------------------
-# Digest parity reference
+# Digest parity references
 # ---------------------------------------------------------------------------
+
+
+def _reference_walk(spec, schedule, store):
+    """Yield ``(schedule, executor, close)`` for an in-process reference run."""
+    from repro.data.pipeline import execute, plan as plan_fn
+
+    ref_spec = spec.replace(
+        transport="shared", collect_data=True, prefetch_depth=0,
+        plan_cache=None, plan_path=None,
+    )
+    if store is not None:
+        ref_spec = ref_spec.replace(store=store, path=None)
+    if schedule is None:
+        schedule = plan_fn(ref_spec)
+    executor = execute(ref_spec, schedule)
+    own_store = store is None and ref_spec.store is None
+    return schedule, executor, own_store
 
 
 def in_process_digests(spec, schedule=None, *, store=None) -> dict[int, str]:
@@ -624,17 +1325,8 @@ def in_process_digests(spec, schedule=None, *, store=None) -> dict[int, str]:
     bit.
     """
     from repro.data.loaders import StepBatch, update_batch_digest
-    from repro.data.pipeline import execute, plan as plan_fn
 
-    ref_spec = spec.replace(
-        transport="shared", collect_data=True, prefetch_depth=0,
-        plan_cache=None, plan_path=None,
-    )
-    if store is not None:
-        ref_spec = ref_spec.replace(store=store, path=None)
-    if schedule is None:
-        schedule = plan_fn(ref_spec)
-    executor = execute(ref_spec, schedule)
+    schedule, executor, own_store = _reference_walk(spec, schedule, store)
     try:
         hashers = {r: hashlib.sha256() for r in range(schedule.num_nodes)}
         for ep, sp in executor.plan_steps():
@@ -650,5 +1342,35 @@ def in_process_digests(spec, schedule=None, *, store=None) -> dict[int, str]:
                 ))
         return {r: h.hexdigest() for r, h in hashers.items()}
     finally:
-        if store is None and ref_spec.store is None:
+        if own_store:
+            executor.store.close()
+
+
+def in_process_aggregate(spec, schedule=None, *, store=None) -> str:
+    """XOR-aggregate digest of the whole plan executed in this process.
+
+    XOR of the sha256 of every (step, node) single-node batch — the
+    ownership-independent counterpart of :func:`in_process_digests`:
+    re-slicing moves batches *between* ranks but never changes the set, so
+    :meth:`DistributedReport.aggregate_digest` must equal this even for
+    runs with deaths, adoptions, and rejoins.
+    """
+    from repro.data.loaders import StepBatch, update_batch_digest
+
+    _schedule, executor, own_store = _reference_walk(spec, schedule, store)
+    acc = bytearray(32)
+    try:
+        for ep, sp in executor.plan_steps():
+            sb = executor.execute_step(ep, sp)
+            for pos in range(len(sp.nodes)):
+                d = hashlib.sha256()
+                update_batch_digest(d, StepBatch(
+                    sb.epoch, sb.step,
+                    [sb.node_ids[pos]], [sb.node_data[pos]],
+                    [sb.hit_masks[pos]],
+                ))
+                _xor_into(acc, d.digest())
+        return bytes(acc).hex()
+    finally:
+        if own_store:
             executor.store.close()

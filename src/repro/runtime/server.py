@@ -33,10 +33,11 @@ from __future__ import annotations
 import contextlib
 import socket
 import threading
+import time
 
 import numpy as np
 
-from repro.runtime import wire
+from repro.runtime import faults, wire
 
 __all__ = ["BufferServer"]
 
@@ -69,6 +70,9 @@ class BufferServer:
         self.dtype = np.dtype(dtype)
         #: lock shared by fetch handlers and the executor's delta replay.
         self.guard = threading.Lock()
+        #: nodes this server currently speaks for: its own rank plus any
+        #: adopted after a re-slice (elastic recovery, DESIGN.md §9).
+        self.serving: set[int] = {self.node}
         self._mirror_of = None
         self._step = _PAUSED
         #: fetches refused because the step guard fired (observability).
@@ -140,6 +144,26 @@ class BufferServer:
             self._step = _PAUSED
             yield
 
+    def adopt(self, node: int) -> None:
+        """Start answering fetches for ``node`` (this rank adopted it).
+
+        Called only after the adopted mirror has been rebuilt to the
+        current step boundary, so the first served fetch already sees the
+        start-of-step state the plan priced.
+        """
+        with self.guard:
+            self.serving.add(int(node))
+
+    def drop(self, node: int) -> None:
+        """Stop speaking for ``node`` (ownership moved, e.g. a rejoin).
+
+        A client mid-transition that still dials here gets a *transient*
+        refusal ("not serving node"), retries, and lands on the new owner
+        once its address book update arrives.
+        """
+        with self.guard:
+            self.serving.discard(int(node))
+
     # -- serving side ----------------------------------------------------------
 
     def _accept_loop(self) -> None:
@@ -159,7 +183,7 @@ class BufferServer:
             self._threads.append(t)
 
     def _serve_conn(self, conn: socket.socket) -> None:
-        helloed = False
+        serve_node: int | None = None
         with contextlib.suppress(OSError, wire.WireError), conn:
             conn.settimeout(self._accept_timeout_s * 100)
             while not self._closed.is_set():
@@ -168,11 +192,11 @@ class BufferServer:
                     return  # client hung up cleanly
                 msg_type, payload = frame
                 if msg_type == wire.MSG_HELLO:
-                    if not self._handle_hello(conn, payload):
+                    serve_node = self._handle_hello(conn, payload)
+                    if serve_node is None:
                         return
-                    helloed = True
                 elif msg_type == wire.MSG_FETCH:
-                    if not helloed:
+                    if serve_node is None:
                         # geometry was never negotiated on this connection:
                         # serving anyway could hand out same-row-size bytes
                         # in the wrong layout without either side noticing.
@@ -181,7 +205,7 @@ class BufferServer:
                             b"FETCH before HELLO: negotiate geometry first",
                         )
                         return
-                    self._handle_fetch(conn, payload)
+                    self._handle_fetch(conn, payload, serve_node)
                 else:
                     wire.send_frame(
                         conn, wire.MSG_ERROR,
@@ -189,15 +213,18 @@ class BufferServer:
                     )
                     return
 
-    def _handle_hello(self, conn: socket.socket, payload: bytes) -> bool:
+    def _handle_hello(self, conn: socket.socket, payload: bytes) -> int | None:
+        """Negotiate one connection; returns the node it will serve.
+
+        Geometry (shape/dtype) disagreement is fatal for the deployment and
+        stays a loud "geometry mismatch" refusal.  A HELLO for a node this
+        server does not (currently) speak for is *transient* — mid-ownership
+        transition a client can race the address-book update — so its
+        refusal reads differently and the client retries instead of raising.
+        """
         hello = wire.unpack_json(payload)
-        mine = {
-            "node": self.node,
-            "shape": list(self.sample_shape),
-            "dtype": self.dtype.str,
-        }
+        mine = {"shape": list(self.sample_shape), "dtype": self.dtype.str}
         theirs = {
-            "node": hello.get("node"),
             "shape": list(hello.get("shape", ())),
             "dtype": hello.get("dtype"),
         }
@@ -207,20 +234,40 @@ class BufferServer:
                 f"geometry mismatch: client expects {theirs}, "
                 f"server is {mine}".encode(),
             )
-            return False
-        wire.send_frame(conn, wire.MSG_HELLO_OK, wire.pack_json(mine))
-        return True
-
-    def _handle_fetch(self, conn: socket.socket, payload: bytes) -> None:
-        step, ids = wire.unpack_fetch(payload)
+            return None
+        node = hello.get("node")
         with self.guard:
+            known = node in self.serving
+        if not known:
+            wire.send_frame(
+                conn, wire.MSG_ERROR,
+                f"not serving node {node} here (serves {self.node})".encode(),
+            )
+            return None
+        wire.send_frame(
+            conn, wire.MSG_HELLO_OK, wire.pack_json({"node": node, **mine})
+        )
+        return int(node)
+
+    def _handle_fetch(
+        self, conn: socket.socket, payload: bytes, serve_node: int
+    ) -> None:
+        step, ids = wire.unpack_fetch(payload)
+        delay = faults.on_serve()
+        if delay > 0:
+            time.sleep(delay)  # injected slow-peer latency (chaos harness)
+        with self.guard:
+            mirror = (
+                self._mirror_of(serve_node)
+                if self._mirror_of is not None and serve_node in self.serving
+                else None
+            )
             serveable = (
-                self._mirror_of is not None
+                mirror is not None
                 and self._step != _PAUSED
                 and self._step == step
             )
             if serveable:
-                mirror = self._mirror_of(self.node)
                 slots = mirror.lookup(ids)
                 ok = slots >= 0
                 rows = (
@@ -230,8 +277,10 @@ class BufferServer:
                 )
             else:
                 self.stale_refusals += int(
-                    self._mirror_of is not None and self._step != step
+                    mirror is not None and self._step != step
                 )
                 ok = np.zeros(ids.size, bool)
                 rows = np.empty((0,) + self.sample_shape, self.dtype)
-        wire.send_frame(conn, wire.MSG_ROWS, wire.pack_rows(ok, rows))
+        wire.send_frame(
+            conn, wire.MSG_ROWS, wire.pack_rows(ok, rows), site="server.rows"
+        )

@@ -122,12 +122,38 @@ def _frame_digest(header: bytes, payload: bytes) -> bytes:
     return h.digest()
 
 
-def send_frame(sock: socket.socket, msg_type: int, payload: bytes) -> None:
-    """Write one framed message (header + payload + checksum) to ``sock``."""
+def send_frame(
+    sock: socket.socket, msg_type: int, payload: bytes, *, site: str | None = None
+) -> None:
+    """Write one framed message (header + payload + checksum) to ``sock``.
+
+    ``site`` names this send for the fault-injection harness
+    (:mod:`repro.runtime.faults`); when a fault is armed there the frame is
+    deliberately damaged — a bit flip in the payload (caught downstream as
+    :class:`ChecksumMismatch`) or a partial write followed by an injected
+    close (caught as :class:`TruncatedFrame`).  Unnamed sends are never
+    faulted.
+    """
     if len(payload) > MAX_FRAME_PAYLOAD:
         raise ProtocolError(f"frame payload too large: {len(payload)} bytes")
     header = _HEADER.pack(MAGIC, WIRE_VERSION, int(msg_type), len(payload))
-    sock.sendall(header + payload + _frame_digest(header, payload))
+    digest = _frame_digest(header, payload)
+    if site is not None:
+        from . import faults
+
+        action = faults.on_send(site)
+        if action == "corrupt":
+            frame = bytearray(header + payload + digest)
+            frame[len(frame) // 2] ^= 0x40
+            sock.sendall(bytes(frame))
+            return
+        if action == "truncate":
+            frame = header + payload + digest
+            sock.sendall(frame[: max(1, len(frame) // 2)])
+            raise faults.InjectedTruncation(
+                f"injected truncation at site {site!r}"
+            )
+    sock.sendall(header + payload + digest)
 
 
 def _recv_exact(sock: socket.socket, n: int, *, eof_ok: bool = False) -> bytes | None:

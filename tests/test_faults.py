@@ -1,0 +1,409 @@
+"""Fault-injection harness + failure ladder (DESIGN.md §9) — unit and
+property tests.
+
+The load-bearing property: *no* damaged frame — any single bit flip, any
+truncation length — may ever decode into ROWS bytes.  The wire protocol's
+checksum/length/magic validation must turn every corruption into a
+:class:`~repro.runtime.wire.WireError`, because a mis-decoded frame would
+feed wrong bytes into a training batch (the one failure mode the whole
+tier exists to prevent).
+"""
+import socket
+
+import numpy as np
+import pytest
+
+# hypothesis is an optional dev dependency (requirements-dev.txt).  The
+# framing properties below are stated once as check functions; with
+# hypothesis present they run under @given, without it they run over a
+# seeded deterministic sweep — the property is exercised either way.
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - depends on the environment
+    HAVE_HYPOTHESIS = False
+
+from repro.data.peer import RetryPolicy, SocketTransport, _Breaker
+from repro.runtime import faults, wire
+from repro.runtime.faults import ArmedFaults, Fault, FaultPlan
+
+
+# ---------------------------------------------------------------------------
+# Wire framing under corruption: the property the checksums buy
+# ---------------------------------------------------------------------------
+
+
+def _valid_frame() -> bytes:
+    ids = np.arange(17, dtype=np.int64)
+    payload = wire.pack_fetch(5, ids)
+    header = wire._HEADER.pack(
+        wire.MAGIC, wire.WIRE_VERSION, wire.MSG_FETCH, len(payload)
+    )
+    return header + payload + wire._frame_digest(header, payload)
+
+
+_FRAME = _valid_frame()
+
+
+def _recv_damaged(frame_bytes: bytes):
+    """Push ``frame_bytes`` through a real socket and decode one frame."""
+    a, b = socket.socketpair()
+    try:
+        a.settimeout(2.0)
+        b.settimeout(2.0)
+        a.sendall(frame_bytes)
+        a.shutdown(socket.SHUT_WR)
+        return wire.recv_frame(b)
+    finally:
+        a.close()
+        b.close()
+
+
+def test_valid_frame_roundtrips():
+    msg_type, payload = _recv_damaged(_FRAME)
+    assert msg_type == wire.MSG_FETCH
+    step, ids = wire.unpack_fetch(payload)
+    assert step == 5 and ids.size == 17
+
+
+def _check_bit_flip(offset: int, bit: int) -> None:
+    """A single flipped bit anywhere in the frame must raise WireError —
+    never return a decoded frame with altered content.  Header, payload,
+    and the trailing digest are all covered by the checksum, so a
+    "successful" decode of damaged bytes is always a detection failure."""
+    damaged = bytearray(_FRAME)
+    damaged[offset] ^= 1 << bit
+    try:
+        got = _recv_damaged(bytes(damaged))
+    except wire.WireError:
+        return
+    pytest.fail(
+        f"bit {bit} at offset {offset} flipped undetected: got {got!r}"
+    )
+
+
+def _check_truncation(cut: int) -> None:
+    """A frame cut short at any byte must raise WireError (TruncatedFrame),
+    never yield a partially-decoded message."""
+    with pytest.raises(wire.WireError):
+        _recv_damaged(_FRAME[:cut])
+
+
+def _check_splice(offset: int, junk: bytes) -> None:
+    """Random bytes spliced mid-frame must never decode as valid content
+    (the checksum covers header and payload)."""
+    damaged = _FRAME[:offset] + junk + _FRAME[offset + len(junk):]
+    if damaged == _FRAME:
+        return
+    with pytest.raises(wire.WireError):
+        _recv_damaged(damaged)
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=60, deadline=None)
+    @given(
+        offset=st.integers(min_value=0, max_value=len(_FRAME) - 1),
+        bit=st.integers(min_value=0, max_value=7),
+    )
+    def test_any_bit_flip_is_detected(offset, bit):
+        _check_bit_flip(offset, bit)
+
+    @settings(max_examples=60, deadline=None)
+    @given(cut=st.integers(min_value=0, max_value=len(_FRAME) - 1))
+    def test_any_truncation_is_detected(cut):
+        _check_truncation(cut)
+
+    @settings(max_examples=30, deadline=None)
+    @given(
+        offset=st.integers(min_value=0, max_value=len(_FRAME) - 1),
+        junk=st.binary(min_size=1, max_size=8),
+    )
+    def test_random_splices_are_detected(offset, junk):
+        _check_splice(offset, junk)
+
+else:
+    # deterministic fallback sweep: every truncation length, and a seeded
+    # sample of (offset, bit) flips and splices across the whole frame.
+    _rng = np.random.default_rng(0)
+    _FLIPS = sorted(
+        (int(off), int(_rng.integers(8)))
+        for off in _rng.choice(len(_FRAME), size=48, replace=False)
+    )
+    _SPLICES = [
+        (int(_rng.integers(len(_FRAME))), bytes(_rng.integers(0, 256, 4, dtype=np.uint8)))
+        for _ in range(16)
+    ]
+
+    @pytest.mark.parametrize("offset,bit", _FLIPS)
+    def test_any_bit_flip_is_detected(offset, bit):
+        _check_bit_flip(offset, bit)
+
+    @pytest.mark.parametrize("cut", range(len(_FRAME)))
+    def test_any_truncation_is_detected(cut):
+        _check_truncation(cut)
+
+    @pytest.mark.parametrize("offset,junk", _SPLICES)
+    def test_random_splices_are_detected(offset, junk):
+        _check_splice(offset, junk)
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan: deterministic compilation, rank slicing, parsing
+# ---------------------------------------------------------------------------
+
+
+def test_fault_plan_is_deterministic():
+    a = FaultPlan.compile(42, 4, crashes=1, corrupt=3, resets=2, slow=1)
+    b = FaultPlan.compile(42, 4, crashes=1, corrupt=3, resets=2, slow=1)
+    assert a == b
+    c = FaultPlan.compile(43, 4, crashes=1, corrupt=3, resets=2, slow=1)
+    assert a != c
+
+
+def test_fault_plan_rank_slices_partition_the_plan():
+    plan = FaultPlan.compile(7, 4, crashes=2, corrupt=4, truncate=2, slow=3)
+    sliced = [plan.for_rank(r) for r in range(4)]
+    assert sum(len(s) for s in sliced) == len(plan.faults)
+    for r, s in enumerate(sliced):
+        assert all(f.rank == r for f in s)
+
+
+def test_fault_plan_spare_rank_never_crashes():
+    for seed in range(10):
+        plan = FaultPlan.compile(seed, 3, crashes=2, spare_rank=0)
+        assert all(
+            f.rank != 0 for f in plan.faults if f.kind in ("crash", "hb_loss")
+        )
+
+
+def test_fault_plan_parse_cli_form():
+    plan = FaultPlan.parse("ranks=4,seed=9,crash=1,corrupt=2,slow=1")
+    assert plan == FaultPlan.compile(9, 4, crashes=1, corrupt=2, slow=1)
+    with pytest.raises(ValueError, match="ranks=N"):
+        FaultPlan.parse("seed=9,crash=1")
+    with pytest.raises(ValueError, match="unknown"):
+        FaultPlan.parse("ranks=2,frobnicate=1")
+    with pytest.raises(ValueError, match="key=value"):
+        FaultPlan.parse("ranks=2,crash")
+
+
+def test_fault_validation_rejects_malformed_faults():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        Fault("melt", 0)
+    with pytest.raises(ValueError, match="send site"):
+        Fault("corrupt", 0, site="nonsense", nth=1)
+    with pytest.raises(ValueError, match="needs a step"):
+        Fault("crash", 0)
+    with pytest.raises(ValueError, match="nth"):
+        Fault("reset", 0, nth=0)
+
+
+def test_armed_faults_fire_on_exact_passage():
+    armed = ArmedFaults(
+        (
+            Fault("corrupt", 0, site="server.rows", nth=2),
+            Fault("reset", 0, nth=1),
+            Fault("slow", 0, nth=3, delay_s=0.25),
+        ),
+        rank=0,
+    )
+    assert armed.on_send("server.rows") is None          # passage 1
+    assert armed.on_send("server.rows") == "corrupt"     # passage 2: fires
+    assert armed.on_send("server.rows") is None          # passage 3
+    assert armed.on_dial() is True
+    assert armed.on_dial() is False
+    assert armed.on_serve() == 0.0
+    assert armed.on_serve() == 0.0
+    assert armed.on_serve() == 0.25
+    assert armed.summary() == {
+        "corrupt:server.rows": 1, "reset:None": 1, "slow:None": 1,
+    }
+
+
+def test_module_hooks_are_noops_when_disarmed():
+    faults.disarm()
+    assert faults.on_send("server.rows") is None
+    assert faults.on_dial() is False
+    assert faults.on_serve() == 0.0
+    assert faults.active() is None
+    try:
+        armed = faults.arm(FaultPlan(faults=(Fault("reset", 0, nth=1),)), 0)
+        assert faults.active() is armed
+        assert faults.on_dial() is True
+    finally:
+        faults.disarm()
+
+
+# ---------------------------------------------------------------------------
+# Circuit breaker: the state machine with an injected clock
+# ---------------------------------------------------------------------------
+
+
+def _policy(**kw) -> RetryPolicy:
+    defaults = dict(
+        max_attempts=1, breaker_threshold=2, breaker_cooldown_s=10.0,
+        escalate_after=2,
+    )
+    defaults.update(kw)
+    return RetryPolicy(**defaults)
+
+
+def test_breaker_opens_after_threshold_consecutive_failures():
+    br = _Breaker(_policy())
+    assert br.allow(0.0)
+    assert br.failure(0.0) is False      # 1 of 2
+    assert br.state == "closed"
+    assert br.failure(1.0) is True       # 2 of 2: opens
+    assert br.state == "open"
+    assert br.opens_in_row == 1
+    assert not br.allow(5.0), "open breaker must short-circuit"
+
+
+def test_breaker_half_open_probe_then_close():
+    br = _Breaker(_policy())
+    br.failure(0.0)
+    br.failure(0.0)
+    assert br.state == "open"
+    assert br.allow(10.0), "cooldown elapsed: admit one probe"
+    assert br.state == "half_open"
+    br.success()
+    assert br.state == "closed"
+    assert br.opens_in_row == 0, "success resets the escalation count"
+    assert br.allow(10.0)
+
+
+def test_breaker_half_open_failure_reopens_immediately():
+    br = _Breaker(_policy())
+    br.failure(0.0)
+    br.failure(0.0)
+    assert br.allow(10.0)                 # half-open probe
+    assert br.failure(10.0) is True, "half-open failure re-opens at once"
+    assert br.opens_in_row == 2
+    assert not br.allow(10.1)
+
+
+def test_breaker_success_resets_failure_streak():
+    br = _Breaker(_policy(breaker_threshold=3))
+    br.failure(0.0)
+    br.failure(0.0)
+    br.success()
+    assert br.failure(0.0) is False, "streak must restart after a success"
+    assert br.state == "closed"
+
+
+def test_retry_policy_backoff_grows_and_caps():
+    import random
+
+    pol = RetryPolicy(backoff_base_s=0.01, backoff_max_s=0.04, jitter=0.0)
+    rng = random.Random(0)
+    waits = [pol.backoff_s(i, rng) for i in range(5)]
+    assert waits[0] == pytest.approx(0.01)
+    assert waits[1] == pytest.approx(0.02)
+    assert waits == sorted(waits)
+    assert max(waits) == pytest.approx(0.04), "backoff must cap"
+
+
+def test_retry_policy_validates():
+    with pytest.raises(ValueError, match="max_attempts"):
+        RetryPolicy(max_attempts=0)
+    with pytest.raises(ValueError, match="breaker_threshold"):
+        RetryPolicy(breaker_threshold=0)
+
+
+# ---------------------------------------------------------------------------
+# Transport counters: retries, breaker trips, unknown-source fallbacks
+# ---------------------------------------------------------------------------
+
+
+def test_transport_counts_retries_and_breaker_opens():
+    """A peer that is never there: each fetch retries, exhausts, and feeds
+    the breaker; once open, fetches short-circuit (breaker_skips)."""
+    # a listener we close immediately: connection refused on every dial
+    probe = socket.socket()
+    probe.bind(("127.0.0.1", 0))
+    port = probe.getsockname()[1]
+    probe.close()
+    escalated = []
+    transport = SocketTransport(
+        {0: ("127.0.0.1", port)}, timeout_s=0.5,
+        sample_shape=(4,), dtype="<f4",
+        retry=RetryPolicy(
+            max_attempts=2, backoff_base_s=0.001, backoff_max_s=0.002,
+            breaker_threshold=2, breaker_cooldown_s=60.0, escalate_after=1,
+        ),
+        escalate=escalated.append,
+    )
+    try:
+        for _ in range(3):
+            rows, ok = transport.fetch(0, np.asarray([1, 2]))
+            assert not ok.any()
+        stats = transport.stats()
+        assert stats["retries"] >= 2, "each exhausted fetch retried once"
+        assert stats["breaker_opens"] >= 1
+        assert stats["breaker_skips"] >= 1, (
+            "post-open fetches must short-circuit, not dial"
+        )
+        assert stats["escalations"] >= 1 and escalated == [0] * stats[
+            "escalations"
+        ]
+    finally:
+        transport.close()
+
+
+def test_transport_unknown_source_has_its_own_counter():
+    transport = SocketTransport({}, sample_shape=(4,), dtype="<f4")
+    try:
+        rows, ok = transport.fetch(99, np.asarray([1, 2, 3]))
+        assert not ok.any() and rows.shape == (0, 4)
+        assert transport.stats()["unknown_source_fallbacks"] == 1
+        assert transport.stats()["retries"] == 0, (
+            "an unknown source is a config gap, not a flaky peer — it must "
+            "not burn retries or trip breakers"
+        )
+    finally:
+        transport.close()
+
+
+def test_transport_retry_recovers_from_one_reset():
+    """An injected dial reset on the first attempt + a healthy server:
+    the retry rung masks the blip entirely (served rows, one retry, no
+    breaker trip, no fallback)."""
+    from repro.runtime.server import BufferServer
+
+    class _Arena:
+        def __init__(self, ids):
+            self._ids = {int(s): i for i, s in enumerate(ids)}
+            self.data = np.zeros((len(ids), 4), "<f4")
+            self.data[:, 0] = ids
+
+        def lookup(self, ids):
+            return np.asarray(
+                [self._ids.get(int(s), -1) for s in ids], np.int64
+            )
+
+        def rows(self, slots):
+            return self.data[slots]
+
+    arena = _Arena([5, 6, 7])
+    server = BufferServer(0, (4,), "<f4").start()
+    server.attach(lambda node: arena)
+    server.at_step(3)
+    faults.arm(FaultPlan(faults=(Fault("reset", 1, nth=1),)), rank=1)
+    transport = SocketTransport(
+        {0: (server.host, server.port)}, self_node=1, timeout_s=2.0,
+        sample_shape=(4,), dtype="<f4",
+        retry=RetryPolicy(max_attempts=3, backoff_base_s=0.001),
+    )
+    try:
+        transport.at_step(3)
+        rows, ok = transport.fetch(0, np.asarray([5, 7]))
+        assert ok.all(), "retry must mask a single dial reset"
+        assert np.array_equal(rows[:, 0].astype(np.int64), [5, 7])
+        stats = transport.stats()
+        assert stats["retries"] == 1
+        assert stats["breaker_opens"] == 0
+    finally:
+        faults.disarm()
+        transport.close()
+        server.close()

@@ -378,3 +378,157 @@ def test_launcher_distributes_plan_by_hash(tmp_path, monkeypatch):
     report = run_distributed(spec, schedule=schedule, timeout_s=120.0)
     assert report.dead == [0, 1]
     assert not report.ok
+
+
+# ---------------------------------------------------------------------------
+# Elastic recovery (DESIGN.md §9): re-slicing, false suspects, rejoins
+# ---------------------------------------------------------------------------
+
+
+def test_launcher_rejects_invalid_configuration():
+    from repro.runtime import LauncherConfigError
+
+    spec = LoaderSpec(
+        loader="solar", backend="binary", path="/nonexistent", num_nodes=2,
+        local_batch=4, num_epochs=1, buffer_size=16, transport="socket",
+    )
+    with pytest.raises(LauncherConfigError, match="barrier_timeout_s"):
+        run_distributed(spec, barrier_timeout_s=0.0)
+    with pytest.raises(LauncherConfigError, match="barrier_timeout_s"):
+        run_distributed(spec, barrier_timeout_s=-5.0)
+    with pytest.raises(LauncherConfigError, match="suspect_timeout_s"):
+        run_distributed(spec, suspect_timeout_s=0)
+    with pytest.raises(LauncherConfigError, match="recovery"):
+        run_distributed(spec, recovery="pray")
+
+
+def test_coordinator_pending_detail_names_silent_ranks():
+    """The who-is-missing for run timeouts: unfinished ranks with their
+    last-contact ages (None for ranks that never spoke)."""
+    from repro.runtime.launcher import _Coordinator
+
+    coord = _Coordinator(3, barrier_timeout_s=5.0).start()
+    try:
+        detail = coord.pending_detail()
+        assert sorted(detail) == [0, 1, 2]
+        assert all(age is None for age in detail.values())
+    finally:
+        coord.close()
+
+
+@pytest.mark.dist
+def test_launcher_reslices_dead_ranks_plan_onto_survivors(tmp_path):
+    """The elastic headline: a rank killed mid-run is re-sliced away — a
+    survivor adopts its remaining plan at the next step boundary, the run
+    completes, and the XOR-aggregate digest (dead rank's heartbeat prefix
+    ⊕ survivor finals) is bit-identical to the in-process reference."""
+    from repro.runtime import in_process_aggregate
+
+    spec = _dist_spec(tmp_path, 4, epochs=2)
+    report = run_distributed(
+        spec, timeout_s=240.0, die_at_step={2: 5}, recovery="reslice"
+    )
+    assert report.dead == [2]
+    assert report.resliced_samples > 0, "nobody adopted the orphaned plan"
+    assert report.resliced_nodes == 1
+    assert report.aggregate_digest() == in_process_aggregate(spec), (
+        "the global per-step sample set was not preserved across the death"
+    )
+    # survivors' own-node stream digests are untouched by adoption
+    ref = in_process_digests(spec)
+    for r in report.ranks:
+        if r.status == "ok":
+            assert r.digest == ref[r.rank]
+    # exactly one survivor reports the adopted node
+    adopters = [r for r in report.ranks if r.adopted_nodes]
+    assert len(adopters) == 1 and adopters[0].adopted_nodes == [2]
+    summ = report.summary()
+    assert summ["resliced_samples"] == report.resliced_samples
+    assert summ["recovery"] == "reslice"
+
+
+@pytest.mark.dist
+def test_launcher_degrade_mode_keeps_legacy_behavior(tmp_path):
+    """recovery='degrade' must not re-slice: survivors eat PFS fallbacks
+    (the PR 5 path, kept as the chaos benchmark's comparison baseline)."""
+    spec = _dist_spec(tmp_path, 4, epochs=2)
+    report = run_distributed(
+        spec, timeout_s=240.0, die_at_step={2: 5}, recovery="degrade"
+    )
+    assert report.dead == [2]
+    assert report.resliced_samples == 0
+    assert all(not r.adopted_nodes for r in report.ranks)
+    ref = in_process_digests(spec)
+    for r in report.ranks:
+        if r.status == "ok":
+            assert r.digest == ref[r.rank]
+
+
+@pytest.mark.dist
+def test_launcher_readmits_false_suspect_without_divergence(tmp_path):
+    """Regression: a rank that merely goes silent (heartbeat loss + stalled
+    step loop, process alive) must be suspected, probed, and re-admitted —
+    never killed, never re-sliced — and every digest stays bit-identical."""
+    from repro.runtime import Fault, FaultPlan, in_process_aggregate
+
+    spec = _dist_spec(tmp_path, 2, epochs=2)
+    faults = FaultPlan(
+        seed=0, faults=(Fault("hb_loss", 1, step=4, delay_s=1.0),)
+    )
+    report = run_distributed(
+        spec, timeout_s=240.0, faults=faults,
+        heartbeat_interval_s=0.1, suspect_timeout_s=0.3, probe_grace_s=10.0,
+    )
+    assert report.ok, f"a stall must not kill the rank: {report.dead}"
+    assert report.false_suspects >= 1, "the stall was never suspected"
+    assert report.resliced_samples == 0, "re-admission must not re-slice"
+    assert report.rejoins == 0
+    assert report.digests() == in_process_digests(spec)
+    assert report.aggregate_digest() == in_process_aggregate(spec)
+    fired = report.ranks[1].faults_fired
+    assert fired.get("hb_loss:4") == 1, fired
+
+
+@pytest.mark.dist
+def test_launcher_restarted_rank_rejoins_and_reclaims_its_slice(tmp_path):
+    """A restarted rank re-registers, resumes at the current boundary, and
+    reclaims its slice from the interim adopter — aggregate parity across
+    death, adoption, and handback."""
+    from repro.runtime import in_process_aggregate
+
+    spec = _dist_spec(tmp_path, 4, epochs=2)
+    report = run_distributed(
+        spec, timeout_s=240.0, die_at_step={1: 3}, restart_ranks={1},
+    )
+    assert report.rejoins == 1
+    r1 = report.ranks[1]
+    assert r1.status == "ok" and r1.rejoined
+    assert 0 < r1.steps, "the rejoiner never executed a step"
+    assert report.resliced_samples > 0, (
+        "someone must cover the gap between death and rejoin"
+    )
+    assert report.aggregate_digest() == in_process_aggregate(spec)
+
+
+@pytest.mark.dist
+def test_launcher_survives_mixed_chaos_with_digest_parity(tmp_path):
+    """Frame corruption, truncation, dial resets, slow serving — all armed
+    at once from one seed: the retry/breaker ladder masks everything, no
+    rank dies, counters move, and both digest forms stay bit-identical."""
+    from repro.runtime import FaultPlan, in_process_aggregate
+
+    spec = _dist_spec(tmp_path, 4, epochs=2)
+    faults = FaultPlan.compile(
+        11, 4, num_steps=8, corrupt=2, truncate=1, resets=2, slow=2
+    )
+    report = run_distributed(spec, timeout_s=240.0, faults=faults)
+    assert report.ok, f"flaky faults must never kill ranks: {report.dead}"
+    assert report.digests() == in_process_digests(spec)
+    assert report.aggregate_digest() == in_process_aggregate(spec)
+    summ = report.summary()
+    assert summ["retries"] > 0, "injected faults never exercised the ladder"
+    fired: dict = {}
+    for r in report.ranks:
+        for k, v in r.faults_fired.items():
+            fired[k] = fired.get(k, 0) + v
+    assert fired, "the armed plan never fired"
