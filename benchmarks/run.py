@@ -32,6 +32,7 @@ from benchmarks import (
     peer,
     pipeline,
     plan,
+    stream,
 )
 
 SUITES = {
@@ -50,6 +51,7 @@ SUITES = {
     "plan": plan.run,                   # plan-once/train-many amortization
     "dist": dist.run,                   # multi-process runtime digest parity
     "chaos": chaos.run,                 # elastic recovery under injected faults
+    "stream": stream.run,               # overlapped window planning + ingest rates
 }
 
 

@@ -1,0 +1,227 @@
+"""Streaming ingestion benchmarks (``BENCH_stream.json``).
+
+Two experiments over the streaming subsystem (DESIGN.md §10):
+
+  * **overlap** — overlapped window planning vs stop-the-world replanning.
+    Both modes replay the *same pre-fed arrival trace* (producers finish
+    before training starts, ``watermark=0``), so every sealed manifest —
+    and therefore every window plan — is identical; the only difference is
+    *when* window ``k+1`` is planned.  Stop-the-world plans it at the
+    window boundary while training stalls; overlap plans it on a second
+    thread underneath window ``k``'s steps.  The headline metric is
+    ``blocked_on_planning_s`` (training time spent waiting at boundaries),
+    and the run asserts the determinism contract: both modes' batch-stream
+    digests match each other *and* the one-shot offline replan.
+  * **rates** — ingest throughput vs training throughput.  Producers feed
+    the session live at a throttled aggregate rate while training drains
+    windows as they seal; reports arrivals/s vs steps/s and how long the
+    stream blocked waiting for the watermark at each rate.
+
+    PYTHONPATH=src python -m benchmarks.stream              # full run
+    PYTHONPATH=src python -m benchmarks.run --only stream --json-out BENCH_stream.json
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import threading
+import time
+
+from benchmarks.common import emit
+from repro.data import DatasetSpec, LoaderSpec, create_store
+from repro.stream import IngestSession, StreamSpec, run_producers, run_stream
+
+
+def _fresh_session(spec: LoaderSpec, num_samples: int, sample_floats: int,
+                   root: str, tag: str, max_pending: int | None = None):
+    """A writable memory store + ingest session of its own (never cached:
+    sealed rows from one run must not leak into the next)."""
+    path = os.path.join(root, f"stream_{tag}")
+    store = create_store(
+        path, "memory",
+        spec=DatasetSpec(num_samples, (sample_floats,), "<f4"),
+        fill="zeros",
+    )
+    session = IngestSession(
+        store, seed=spec.seed, admission=spec.stream.admission,
+        reservoir_size=spec.stream.reservoir_size,
+        max_pending=max_pending if max_pending is not None else num_samples,
+    )
+    return store, session
+
+
+def _one_mode(spec: LoaderSpec, session, store, *, overlap: bool,
+              compute_s: float, verify: bool):
+    def _compute(_sb):
+        if compute_s:
+            time.sleep(compute_s)  # stand-in for the jitted device step
+
+    rep = run_stream(
+        spec.replace(store=store, path=None), session,
+        overlap=overlap, verify=verify, on_batch=_compute,
+    )
+    return rep
+
+
+def _overlap_experiment(num_samples: int, sample_floats: int, nodes: int,
+                        local_batch: int, buffer: int, window_steps: int,
+                        max_windows: int, compute_s: float, root: str) -> dict:
+    base = LoaderSpec(
+        loader="stream", num_nodes=nodes, local_batch=local_batch,
+        buffer_size=buffer, seed=0, collect_data=True,
+        stream=StreamSpec(
+            window_steps=window_steps, admission="reservoir",
+            watermark=0, max_windows=max_windows,
+        ),
+    )
+    out: dict = {}
+    digests: dict = {}
+    for overlap in (False, True):
+        tag = "overlap" if overlap else "stw"
+        store, session = _fresh_session(
+            base, num_samples, sample_floats, root, tag
+        )
+        try:
+            # Pre-feed the whole trace so both modes seal identical
+            # manifests — the comparison isolates *when* planning happens.
+            run_producers(session, range(num_samples), threads=2)
+            rep = _one_mode(
+                base, session, store,
+                overlap=overlap, compute_s=compute_s, verify=True,
+            )
+        finally:
+            store.close()
+        assert rep.ok, f"{tag}: determinism contract violated: {rep.verify}"
+        digests[tag] = (rep.plan_digest, rep.stream_digest)
+        out[tag] = {
+            "steps": rep.steps,
+            "windows": rep.windows,
+            "wall_s": round(rep.wall_s, 4),
+            "bootstrap_s": round(rep.bootstrap_s, 4),
+            "blocked_on_planning_s": round(rep.blocked_on_planning_s, 4),
+            "plan_s": round(rep.plan_s, 4),
+            "plan_digest": rep.plan_digest,
+            "stream_digest": rep.stream_digest,
+        }
+        emit(f"stream/{tag}/blocked_on_planning",
+             rep.blocked_on_planning_s * 1e6,
+             f"{rep.blocked_on_planning_s:.4f}s over {rep.windows} windows")
+        emit(f"stream/{tag}/wall", rep.wall_s * 1e6, f"{rep.wall_s:.3f}s")
+    assert digests["stw"] == digests["overlap"], (
+        "overlapped and stop-the-world planning must execute identical "
+        f"batch streams: {digests}"
+    )
+    stw = out["stw"]["blocked_on_planning_s"]
+    ov = out["overlap"]["blocked_on_planning_s"]
+    assert ov < stw, (
+        f"overlapped planning must beat stop-the-world on steps blocked on "
+        f"planning: overlap {ov}s >= stop-the-world {stw}s"
+    )
+    out["blocked_reduction"] = round(stw / ov, 2) if ov else float("inf")
+    out["digest_parity"] = True
+    emit("stream/overlap_vs_stw/blocked_reduction", 0.0,
+         f"{out['blocked_reduction']}x less boundary stall")
+    return out
+
+
+def _rates_experiment(num_samples: int, sample_floats: int, nodes: int,
+                      local_batch: int, buffer: int, window_steps: int,
+                      rates, compute_s: float, root: str) -> dict:
+    out: dict = {}
+    for rate_hz in rates:
+        tag = "unthrottled" if rate_hz is None else f"{int(rate_hz)}hz"
+        spec = LoaderSpec(
+            loader="stream", num_nodes=nodes, local_batch=local_batch,
+            buffer_size=buffer, seed=0, collect_data=True,
+            stream=StreamSpec(
+                window_steps=window_steps, admission="reservoir",
+                watermark=max(local_batch * nodes, 1), max_windows=None,
+            ),
+        )
+        # keep the default-ish backpressure bound: a live producer blocking
+        # on a slow consumer is part of what this experiment measures.
+        store, session = _fresh_session(
+            spec, num_samples, sample_floats, root, f"rate_{tag}",
+            max_pending=4096,
+        )
+        try:
+            producer = threading.Thread(
+                target=run_producers, args=(session, range(num_samples)),
+                kwargs=dict(threads=2, rate_hz=rate_hz),
+                name=f"bench-producers-{tag}", daemon=True,
+            )
+            t0 = time.perf_counter()
+            producer.start()
+            rep = _one_mode(
+                spec, session, store,
+                overlap=True, compute_s=compute_s, verify=False,
+            )
+            producer.join(timeout=30.0)
+            wall = time.perf_counter() - t0
+        finally:
+            store.close()
+        arrivals = rep.ingest_stats["arrivals"]
+        out[tag] = {
+            "rate_hz": rate_hz,
+            "steps": rep.steps,
+            "windows": rep.windows,
+            "wall_s": round(wall, 4),
+            "train_steps_per_s": round(rep.steps / wall, 2) if wall else 0.0,
+            "ingest_samples_per_s": (
+                round(arrivals / wall, 2) if wall else 0.0
+            ),
+            "blocked_on_planning_s": round(rep.blocked_on_planning_s, 4),
+            "ingest_blocked_s": round(rep.ingest_stats["blocked_s"], 4),
+            "admitted": rep.ingest_stats["admitted"],
+        }
+        emit(f"stream/rate/{tag}",
+             (wall / rep.steps) * 1e6 if rep.steps else 0.0,
+             f"{out[tag]['train_steps_per_s']} steps/s vs "
+             f"{out[tag]['ingest_samples_per_s']} arrivals/s")
+    return out
+
+
+def run(
+    num_samples: int = 8192,
+    sample_floats: int = 256,
+    nodes: int = 4,
+    local_batch: int = 16,
+    buffer: int = 1024,
+    window_steps: int = 16,
+    max_windows: int = 8,
+    compute_s: float = 2e-3,
+    rates=(None, 20000.0, 4000.0),
+    json_out: str | None = None,
+) -> dict:
+    root = tempfile.mkdtemp(prefix="solar_bench_stream_")
+    try:
+        results = {
+            "config": {
+                "num_samples": num_samples, "sample_floats": sample_floats,
+                "nodes": nodes, "local_batch": local_batch,
+                "buffer": buffer, "window_steps": window_steps,
+                "max_windows": max_windows, "compute_s": compute_s,
+            },
+            "overlap_vs_stop_the_world": _overlap_experiment(
+                num_samples, sample_floats, nodes, local_batch, buffer,
+                window_steps, max_windows, compute_s, root,
+            ),
+            "ingest_vs_training": _rates_experiment(
+                num_samples, sample_floats, nodes, local_batch, buffer,
+                window_steps, rates, compute_s, root,
+            ),
+        }
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+    if json_out:
+        with open(json_out, "w") as f:
+            json.dump(results, f, indent=1, sort_keys=True)
+        emit("stream/json", 0.0, json_out)
+    return results
+
+
+if __name__ == "__main__":
+    run(json_out="BENCH_stream.json")

@@ -44,6 +44,7 @@ __all__ = [
     "ScheduleStats",
     "PlanArtifactError",
     "PLAN_SCHEMA_VERSION",
+    "concat_schedules",
 ]
 
 #: bump on any change to the packed array layout or meta record.
@@ -173,12 +174,16 @@ class StepPlan:
 
     def global_batch(self) -> np.ndarray:
         """The multiset of samples trained this step across all nodes."""
+        if not self.nodes:
+            # A for_node() slice of a rank with no work this step: an empty
+            # batch, not an error — the runtime still barriers through it.
+            return np.empty(0, np.int64)
         return np.concatenate([n.sample_ids for n in self.nodes])
 
     @property
     def max_pfs_samples(self) -> int:
         """Per-step critical path: the most-loaded node (nodes load in parallel)."""
-        return max(n.pfs_samples for n in self.nodes)
+        return max((n.pfs_samples for n in self.nodes), default=0)
 
 
 @dataclasses.dataclass
@@ -239,7 +244,9 @@ class ScheduleStats:
             "mean_step_max_miss": float(self.per_step_max_miss.mean())
             if self.per_step_max_miss.size
             else 0.0,
-            "batch_size_std": float(self.batch_sizes.std()),
+            "batch_size_std": float(self.batch_sizes.std())
+            if self.batch_sizes.size
+            else 0.0,
         }
 
 
@@ -389,10 +396,13 @@ class Schedule:
 
     def stats(self) -> ScheduleStats:
         hits = misses = pfs = chunk_reads = singleton = trained = peer = 0
-        max_miss, bsz, msc = [], [], []
+        max_miss: list[int] = []
+        bsz_rows: list[list[int]] = []
+        msc_rows: list[list[int]] = []
         for ep in self.epochs:
             for sp in ep.steps:
                 step_miss = []
+                row_b, row_m = [], []
                 for n in sp.nodes:
                     trained += n.num_real
                     hits += n.num_hits
@@ -405,10 +415,21 @@ class Schedule:
                         else:
                             singleton += 1
                     step_miss.append(n.num_pfs_misses)
-                    bsz.append(n.num_real)
-                    msc.append(n.num_misses)
+                    row_b.append(n.num_real)
+                    row_m.append(n.num_misses)
                 max_miss.append(max(step_miss) if step_miss else 0)
+                bsz_rows.append(row_b)
+                msc_rows.append(row_m)
         nsteps = self.num_steps
+        # A for_node() slice carries fewer plans per step than num_nodes —
+        # possibly zero for a rank with no work — so per-step rows can be
+        # ragged.  Pad short rows with zeros instead of reshaping blindly.
+        width = max((len(r) for r in bsz_rows), default=0)
+        batch_sizes = np.zeros((nsteps, width), np.int64)
+        miss_counts = np.zeros((nsteps, width), np.int64)
+        for i, (rb, rm) in enumerate(zip(bsz_rows, msc_rows)):
+            batch_sizes[i, : len(rb)] = rb
+            miss_counts[i, : len(rm)] = rm
         return ScheduleStats(
             num_nodes=self.num_nodes,
             num_epochs=len(self.epochs),
@@ -420,12 +441,51 @@ class Schedule:
             total_chunk_reads=chunk_reads,
             total_singleton_reads=singleton,
             per_step_max_miss=np.asarray(max_miss, dtype=np.int64),
-            # -1: a for_node() slice carries fewer plans per step than
-            # num_nodes, but each step still contributes one row.
-            batch_sizes=np.asarray(bsz, dtype=np.int64).reshape(nsteps, -1),
-            miss_counts=np.asarray(msc, dtype=np.int64).reshape(nsteps, -1),
+            batch_sizes=batch_sizes,
+            miss_counts=miss_counts,
             total_peer_fetches=peer,
         )
+
+
+def concat_schedules(segments: list["Schedule"]) -> "Schedule":
+    """Concatenate plan segments (streaming windows) into one schedule.
+
+    Every segment must share geometry (``num_nodes``, ``local_batch``,
+    ``capacity``, ``buffer_size``) and ``strategy``; epochs and
+    ``epoch_order`` are concatenated in segment order.  The result's
+    ``config_hash`` is the segments' common hash when they agree, else empty
+    (provenance checks are then skipped on execution).
+
+    This is the identity behind the streaming determinism contract
+    (DESIGN.md §10): ``concat(window_0 .. window_K)`` must be
+    digest-identical to a one-shot offline plan over the same admitted
+    manifests, because each window is a pure function of (seed, window
+    index, manifest, carried buffer state).
+    """
+    if not segments:
+        raise ValueError("concat_schedules needs at least one segment")
+    head = segments[0]
+    for seg in segments[1:]:
+        for field in ("num_nodes", "local_batch", "capacity", "buffer_size",
+                      "strategy"):
+            if getattr(seg, field) != getattr(head, field):
+                raise ValueError(
+                    f"segment {field} mismatch: "
+                    f"{getattr(seg, field)!r} != {getattr(head, field)!r}"
+                )
+    hashes = {seg.config_hash for seg in segments}
+    return Schedule(
+        num_nodes=head.num_nodes,
+        local_batch=head.local_batch,
+        capacity=head.capacity,
+        buffer_size=head.buffer_size,
+        epoch_order=np.concatenate(
+            [np.asarray(seg.epoch_order, np.int64) for seg in segments]
+        ),
+        epochs=[ep for seg in segments for ep in seg.epochs],
+        strategy=head.strategy,
+        config_hash=head.config_hash if len(hashes) == 1 else "",
+    )
 
 
 # ---------------------------------------------------------------------------

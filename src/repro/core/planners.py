@@ -443,14 +443,24 @@ class PlanCache:
 
     def get(self, key: str) -> Schedule | None:
         path = self.path_for(key)
-        if not os.path.exists(path):
+        try:
+            before = os.stat(path)
+        except OSError:
             return None
         try:
             return Schedule.load(path, expect_hash=key)
         except PlanArtifactError:
-            # a corrupt/mismatched entry is a miss, never an error
+            # A corrupt/mismatched entry is a miss, never an error.  Only
+            # drop the file if it is still the bytes we failed on: writers
+            # stage to a unique temp and atomically replace, so a concurrent
+            # builder may have installed a *valid* artifact between our open
+            # and this cleanup — removing that would evict a good entry.
             try:
-                os.remove(path)
+                after = os.stat(path)
+                if (after.st_ino, after.st_mtime_ns, after.st_size) == (
+                    before.st_ino, before.st_mtime_ns, before.st_size,
+                ):
+                    os.remove(path)
             except OSError:
                 pass
             return None

@@ -231,6 +231,38 @@ class BaseBackend(CoalescingReadsMixin):
             self.bytes_read = 0
             self.read_calls = 0
 
+    # -- ingest (streaming writers, DESIGN.md §10) -----------------------------
+
+    @property
+    def writable(self) -> bool:
+        """Whether :meth:`write_rows` is supported (streaming ingest)."""
+        return False
+
+    def write_rows(self, start: int, rows: np.ndarray) -> None:
+        """Overwrite samples ``[start, start + len(rows))`` in place.
+
+        Only writable backends (``memory``, ``sharded``) implement this; the
+        store is pre-sized, so ingest never grows or shrinks the id space.
+        """
+        raise NotImplementedError(
+            f"{self.backend_name!r} backend is read-only; streaming ingest "
+            "needs a writable backend ('memory' or 'sharded')"
+        )
+
+    def flush(self) -> None:
+        """Make prior :meth:`write_rows` durable/visible to other processes."""
+
+    def _check_write(self, start: int, rows: np.ndarray) -> np.ndarray:
+        if self._closed:
+            raise ValueError(f"store {self.path!r} is closed")
+        rows = np.ascontiguousarray(
+            np.asarray(rows, self.dtype).reshape((-1,) + self.sample_shape)
+        )
+        stop = start + rows.shape[0]
+        if not 0 <= start <= stop <= self.num_samples:
+            raise IndexError((start, stop, self.num_samples))
+        return rows
+
     @property
     def closed(self) -> bool:
         return self._closed

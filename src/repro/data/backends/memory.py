@@ -76,6 +76,23 @@ class MemoryBackend(BaseBackend):
         # copy: callers may hold rows past subsequent reads/close().
         return self._data[start:stop].copy()
 
+    # -- ingest ----------------------------------------------------------------
+
+    @property
+    def writable(self) -> bool:
+        return self._data.flags.writeable
+
+    def write_rows(self, start: int, rows: np.ndarray) -> None:
+        """In-RAM row overwrite (streaming ingest, DESIGN.md §10).
+
+        Writes land in the staged array only — same-process readers see them
+        immediately; the on-disk binary layout (if any) is untouched, so a
+        multi-process streaming run must use a file-backed writable backend
+        (``sharded``) instead.
+        """
+        rows = self._check_write(int(start), rows)
+        self._data[start : start + rows.shape[0]] = rows
+
     # No _close_resources override: close() only flips _closed (new reads
     # fail loudly) while the array stays valid for reads already in flight —
     # the same "in-flight reads finish, new ones fail" contract the fd/handle

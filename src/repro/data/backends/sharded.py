@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import json
 import os
+import threading
 
 import numpy as np
 
@@ -63,6 +64,10 @@ class ShardedBackend(CoalescingReadsMixin):
         assert int(self._starts[-1]) == self.num_samples
         self._latency = float(simulated_latency_s)
         self._closed = False
+        # Streaming-ingest write path: one lazily-opened r+b descriptor per
+        # shard, serialized under a lock (readers pread their own fd pools).
+        self._write_lock = threading.Lock()
+        self._write_fds: dict[int, object] = {}
 
     # -- protocol: geometry + stats (delegated to the shards) -----------------
 
@@ -123,10 +128,62 @@ class ShardedBackend(CoalescingReadsMixin):
             k += 1
         return parts[0] if len(parts) == 1 else np.concatenate(parts)
 
+    # -- ingest (streaming writers, DESIGN.md §10) -----------------------------
+
+    @property
+    def writable(self) -> bool:
+        return True
+
+    def write_rows(self, start: int, rows: np.ndarray) -> None:
+        """Overwrite samples ``[start, start + len(rows))`` across shards.
+
+        Writes go straight to the shard files (unbuffered), so same-host
+        reader processes pread-ing the same inodes observe the new bytes —
+        the property the distributed streaming runtime relies on.  Callers
+        must :meth:`flush` before publishing a sealed manifest.
+        """
+        start = int(start)
+        rows = np.ascontiguousarray(
+            np.asarray(rows, self.dtype).reshape((-1,) + self.sample_shape)
+        )
+        stop = start + rows.shape[0]
+        if not 0 <= start <= stop <= self.num_samples:
+            raise IndexError((start, stop, self.num_samples))
+        if self._closed:
+            raise ValueError(f"store {self.path!r} is closed")
+        if start == stop:
+            return
+        with self._write_lock:
+            k = int(np.searchsorted(self._starts, start, side="right")) - 1
+            pos = start
+            while pos < stop:
+                base, end = int(self._starts[k]), int(self._starts[k + 1])
+                hi = min(stop, end)
+                f = self._write_fds.get(k)
+                if f is None:
+                    f = open(_shard_path(self.path, k), "r+b", buffering=0)
+                    self._write_fds[k] = f
+                f.seek((pos - base) * self.sample_bytes)
+                f.write(rows[pos - start : hi - start].tobytes())
+                pos = hi
+                k += 1
+
+    def flush(self) -> None:
+        with self._write_lock:
+            for f in self._write_fds.values():
+                os.fsync(f.fileno())
+
     # -- lifecycle -------------------------------------------------------------
 
     def close(self) -> None:
         self._closed = True
+        with self._write_lock:
+            for f in self._write_fds.values():
+                try:
+                    f.close()
+                except OSError:  # pragma: no cover - best effort
+                    pass
+            self._write_fds.clear()
         for s in self.shards:
             s.close()
 

@@ -43,9 +43,11 @@ from repro.core.plan import Schedule
 from repro.core.planners import PLANNERS, PlanCache, Planner, SolarPlanner
 from repro.core.scheduler import SolarConfig
 from repro.data.backends.base import backend_names, create_store, open_store
+from repro.stream.windows import STREAM_STRATEGY, StreamSpec, WindowPlanner
 
 __all__ = [
     "LoaderSpec",
+    "StreamSpec",
     "plan",
     "execute",
     "build_pipeline",
@@ -109,6 +111,11 @@ class LoaderSpec:
     #: explicit plan-artifact path: loaded (and hash-verified) when present,
     #: built and saved there when not.  Mutually exclusive with ``plan_cache``.
     plan_path: str | None = None
+    #: streaming-ingestion knobs (DESIGN.md §10); required iff
+    #: ``loader="stream"``.  Stream specs compile plans incrementally per
+    #: sealed window (:mod:`repro.stream`), so offline ``plan()`` and the
+    #: plan cache/artifact paths do not apply to them.
+    stream: StreamSpec | None = None
 
     def replace(self, **changes) -> "LoaderSpec":
         return dataclasses.replace(self, **changes)
@@ -116,8 +123,27 @@ class LoaderSpec:
     def validate(self) -> "LoaderSpec":
         """Raise one ``ValueError`` naming every inconsistency in the spec."""
         errs = []
-        if self.loader not in PLANNERS:
-            errs.append(f"unknown loader {self.loader!r}; have {sorted(PLANNERS)}")
+        if self.loader not in PLANNERS and self.loader != STREAM_STRATEGY:
+            errs.append(
+                f"unknown loader {self.loader!r}; have "
+                f"{sorted(PLANNERS) + [STREAM_STRATEGY]}"
+            )
+        if self.loader == STREAM_STRATEGY and self.stream is None:
+            errs.append(
+                "loader='stream' needs stream=StreamSpec(...) on the spec"
+            )
+        if self.stream is not None:
+            if self.loader != STREAM_STRATEGY:
+                errs.append(
+                    f"stream=StreamSpec(...) requires loader='stream', "
+                    f"got loader={self.loader!r}"
+                )
+            errs.extend(self.stream.validate())
+            if self.plan_cache is not None or self.plan_path is not None:
+                errs.append(
+                    "streaming specs compile plans incrementally per sealed "
+                    "window — 'plan_cache'/'plan_path' do not apply"
+                )
         if self.store is None:
             if self.path is None:
                 errs.append("one of 'path' or 'store' is required")
@@ -262,6 +288,12 @@ def make_planner(spec: LoaderSpec, *, sample_bytes: int | None = None) -> Planne
     default :class:`PeerCostModel` when the peer tier is enabled without an
     explicit one — planning is otherwise dataset-content-free.
     """
+    if spec.loader == STREAM_STRATEGY:
+        raise ValueError(
+            "stream specs have no offline planner: windows are compiled "
+            "incrementally by repro.stream.WindowPlanner as manifests seal "
+            "(drive them with repro.stream.run_stream / run_stream_distributed)"
+        )
     if spec.loader == "solar":
         cfg = spec.solar
         if cfg is None:
@@ -387,11 +419,20 @@ def execute(spec: LoaderSpec, schedule: Schedule, *, store=None,
     opened_here = spec.store is None
     st = spec.store if spec.store is not None else build_store(spec)
     try:
-        planner = make_planner(spec, sample_bytes=st.sample_bytes)
-        _check_schedule(spec, schedule, planner, st.num_samples)
-        solar_config = (
-            planner.config if isinstance(planner, SolarPlanner) else None
-        )
+        solar_config = None
+        serve_peers = None
+        if spec.loader == STREAM_STRATEGY:
+            # No offline planner: the schedule is the first window segment
+            # (later ones arrive via executor.extend()); provenance is the
+            # WindowPlanner's config hash instead of a planner cache key.
+            _check_stream_schedule(spec, schedule)
+            serve_peers = spec.stream.peer_fetch or peer_transport is not None
+        else:
+            planner = make_planner(spec, sample_bytes=st.sample_bytes)
+            _check_schedule(spec, schedule, planner, st.num_samples)
+            solar_config = (
+                planner.config if isinstance(planner, SolarPlanner) else None
+            )
         executor = ScheduleExecutor(
             st,
             schedule,
@@ -399,6 +440,7 @@ def execute(spec: LoaderSpec, schedule: Schedule, *, store=None,
             cost_model=spec.cost_model,
             solar_config=solar_config,
             peer_transport=peer_transport,
+            serve_peers=serve_peers,
         )
     except BaseException:
         if opened_here:  # never leak a handle the caller cannot reach
@@ -411,6 +453,31 @@ def execute(spec: LoaderSpec, schedule: Schedule, *, store=None,
             executor, depth=spec.prefetch_depth, num_workers=spec.num_workers
         )
     return executor
+
+
+def _check_stream_schedule(spec: LoaderSpec, schedule: Schedule) -> None:
+    errs = []
+    if schedule.strategy != STREAM_STRATEGY:
+        errs.append(
+            f"schedule was planned by {schedule.strategy!r}, stream specs "
+            f"replay {STREAM_STRATEGY!r} segments"
+        )
+    for field in ("num_nodes", "local_batch", "buffer_size"):
+        if getattr(schedule, field) != getattr(spec, field):
+            errs.append(
+                f"schedule {field}={getattr(schedule, field)} contradicts "
+                f"spec {field}={getattr(spec, field)}"
+            )
+    if schedule.config_hash:
+        key = WindowPlanner.for_spec(spec).config_hash()
+        if schedule.config_hash != key:
+            errs.append(
+                f"window config hash {schedule.config_hash} != the spec's "
+                f"{key} — the segment was planned under a different "
+                "streaming config"
+            )
+    if errs:
+        raise ValueError("schedule does not match spec: " + "; ".join(errs))
 
 
 def _check_schedule(

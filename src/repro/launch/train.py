@@ -15,6 +15,12 @@
     PYTHONPATH=src python -m repro.launch.train distributed --nodes 2 \
         --peer-fetch --num-samples 2048 --epochs 2 --verify
 
+    # streaming ingestion: train over samples produced live (DESIGN.md §10)
+    PYTHONPATH=src python -m repro.launch.train stream --nodes 2 \
+        --num-samples 2048 --window-steps 8 --watermark 32 --verify
+    PYTHONPATH=src python -m repro.launch.train stream --distributed \
+        --nodes 2 --backend sharded --num-samples 2048 --verify
+
 Runs on whatever devices are visible (CPU here; the same code path drives
 the production mesh — the dry-run proves the sharded lowering).
 """
@@ -310,6 +316,133 @@ def run_distributed_cmd(args) -> None:
         raise SystemExit(f"ranks {report.dead} died during the run")
 
 
+def _add_stream_args(ap: argparse.ArgumentParser) -> None:
+    from repro.stream import ADMISSION_POLICIES
+
+    ap.add_argument("--nodes", type=int, default=2)
+    ap.add_argument("--local-batch", type=int, default=8)
+    ap.add_argument("--buffer", type=int, default=256)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--num-samples", type=int, default=2048,
+                    help="id space of the stream (store rows; producers "
+                         "emit each id once)")
+    ap.add_argument("--backend", default="sharded",
+                    choices=("memory", "sharded"),
+                    help="writable backend holding the stream (distributed "
+                         "runs require 'sharded': ranks read the rows the "
+                         "parent's ingest writes)")
+    ap.add_argument("--data", default=None,
+                    help="store path (default: /tmp/solar_stream.<backend>)")
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--window-steps", type=int, default=8,
+                    help="training steps per plan window")
+    ap.add_argument("--watermark", type=int, default=16,
+                    help="fresh admissions a seal waits for before the next "
+                         "window is planned")
+    ap.add_argument("--admission", default="reservoir",
+                    choices=ADMISSION_POLICIES,
+                    help="seeded admission policy for arriving samples")
+    ap.add_argument("--reservoir", type=int, default=None,
+                    help="admitted-set bound for reservoir/latest policies "
+                         "(default: unbounded)")
+    ap.add_argument("--max-windows", type=int, default=None,
+                    help="stop after this many windows (default: run until "
+                         "producers finish with nothing fresh)")
+    ap.add_argument("--rate", type=float, default=None,
+                    help="aggregate producer arrival rate in samples/s "
+                         "(default: unthrottled)")
+    ap.add_argument("--producer-threads", type=int, default=2)
+    ap.add_argument("--prefetch-depth", type=int, default=0,
+                    help="pipeline read-ahead in steps (single-process only)")
+    ap.add_argument("--distributed", action="store_true",
+                    help="execute as --nodes rank processes: each sealed "
+                         "window's plan is broadcast by content hash and "
+                         "ranks cut over at the same step boundary")
+    ap.add_argument("--stop-the-world", action="store_true",
+                    help="plan each window synchronously at the boundary "
+                         "instead of overlapping planning with training "
+                         "(the baseline benchmarks/stream.py compares)")
+    ap.add_argument("--verify", action="store_true",
+                    help="assert the streaming determinism contract: the "
+                         "concatenated window plans and the executed batch "
+                         "stream match a one-shot offline replan (and, "
+                         "distributed, every rank's slice digest matches "
+                         "the in-process reference)")
+    ap.add_argument("--timeout", type=float, default=300.0)
+
+
+def run_stream_cmd(args) -> None:
+    import threading
+
+    from repro.stream import (
+        IngestSession,
+        StreamSpec,
+        run_producers,
+        run_stream,
+    )
+    from repro.stream.distributed import run_stream_distributed
+
+    if args.data is None:
+        args.data = f"/tmp/solar_stream.{args.backend}"
+    if args.distributed and args.backend != "sharded":
+        raise SystemExit(
+            "stream --distributed requires --backend sharded (ranks must "
+            "see the parent's row writes; 'memory' stages at open)"
+        )
+    spec = LoaderSpec(
+        loader="stream", backend=args.backend, path=args.data,
+        num_nodes=args.nodes, local_batch=args.local_batch,
+        buffer_size=args.buffer, seed=args.seed, collect_data=True,
+        prefetch_depth=0 if args.distributed else args.prefetch_depth,
+        stream=StreamSpec(
+            window_steps=args.window_steps, admission=args.admission,
+            watermark=args.watermark, reservoir_size=args.reservoir,
+            max_windows=args.max_windows,
+        ),
+    )
+    store = build_store(
+        spec, create=True,
+        dataset=DatasetSpec(
+            args.num_samples, (args.seq_len + 1,), "<i4", num_shards=4
+        ),
+        fill="zeros",
+    )
+    try:
+        session = IngestSession(
+            store, seed=args.seed, admission=args.admission,
+            reservoir_size=args.reservoir,
+        )
+        producer = threading.Thread(
+            target=run_producers, args=(session, range(args.num_samples)),
+            kwargs=dict(
+                threads=args.producer_threads, data_seed=args.seed,
+                rate_hz=args.rate,
+            ),
+            name="stream-producers", daemon=True,
+        )
+        producer.start()
+        if args.distributed:
+            report = run_stream_distributed(
+                spec, session, verify=args.verify, timeout_s=args.timeout,
+            )
+        else:
+            report = run_stream(
+                spec.replace(store=store, path=None), session,
+                overlap=not args.stop_the_world, verify=args.verify,
+            )
+        producer.join(timeout=30.0)
+        print(json.dumps(report.summary(), indent=1))
+        if args.distributed and report.dead:
+            raise SystemExit(f"ranks {report.dead} died during the stream")
+        if args.verify and not report.ok:
+            raise SystemExit(
+                "streaming determinism violated: the live window plans or "
+                "batches diverged from the one-shot offline replan"
+            )
+    finally:
+        store.close()
+
+
 def run_train(args) -> None:
     cfg = get_config(args.arch)
     if args.reduced:
@@ -383,7 +516,9 @@ def main(argv=None):
     argv = list(sys.argv[1:] if argv is None else argv)
     # Back-compat: a bare flag list is the train subcommand — but leave
     # top-level help reachable so the plan subcommand stays discoverable.
-    if argv and argv[0] not in ("train", "plan", "distributed", "-h", "--help"):
+    if argv and argv[0] not in (
+        "train", "plan", "distributed", "stream", "-h", "--help"
+    ):
         argv = ["train"] + argv
     ap = argparse.ArgumentParser(prog="repro.launch.train")
     sub = ap.add_subparsers(dest="cmd", required=True)
@@ -395,11 +530,17 @@ def main(argv=None):
         "distributed",
         help="execute one plan as N rank processes over the socket peer "
              "transport (data pipeline only, no model training)"))
+    _add_stream_args(sub.add_parser(
+        "stream",
+        help="train over a live sample stream: seeded admission, rolling "
+             "window plans, deterministic vs an offline replan"))
     args = ap.parse_args(argv)
     if args.cmd == "plan":
         run_plan(args)
     elif args.cmd == "distributed":
         run_distributed_cmd(args)
+    elif args.cmd == "stream":
+        run_stream_cmd(args)
     else:
         run_train(args)
 

@@ -162,6 +162,12 @@ class _Coordinator:
         self.resliced_nodes = 0
         self.last_released_step = -1
         self._pending_assignments: list[dict] = []
+        #: names of barriers already released (streaming parents pace their
+        #: window lookahead on these).
+        self.released_barriers: set[str] = set()
+        #: every window announcement broadcast so far — replayed to late
+        #: registrants so no rank can miss a plan segment.
+        self.windows_sent: list[dict] = []
         self._closed = threading.Event()
         self._threads: list[threading.Thread] = []
         self._accept_thread = threading.Thread(
@@ -311,6 +317,10 @@ class _Coordinator:
                 # the book so *its* fetches work; fetches *to* it from
                 # peers that never saw its endpoint fall back to PFS.
                 self._send_addrbook(conn)
+            for w in self.windows_sent:
+                # replay every window announcement: a registrant must never
+                # miss a plan segment broadcast before it connected.
+                self._send_ctrl(conn, w)
             self._cond.notify_all()
 
     @staticmethod
@@ -459,6 +469,38 @@ class _Coordinator:
                 for r in sorted(arrived & self.alive):
                     self._send_ctrl(self._conns[r], msg)
                 del self._barriers[name]
+                self.released_barriers.add(name)
+                self._cond.notify_all()
+
+    # -- streaming window distribution ------------------------------------------
+
+    def broadcast_window(self, msg: dict) -> None:
+        """Announce one sealed window's plan segment to every rank.
+
+        The message is recorded and replayed to any rank that registers
+        later, so delivery is reliable regardless of registration order —
+        clients stash ``kind == "window"`` frames until their
+        ``wait_window`` asks for that index.
+        """
+        with self._cond:
+            msg = dict(msg, kind="window")
+            self.windows_sent.append(msg)
+            for conn in self._conns.values():
+                self._send_ctrl(conn, msg)
+
+    def wait_barrier(self, name: str, timeout_s: float) -> bool:
+        """Block until barrier ``name`` has been released (True) or the
+        timeout expires (False) — the streaming parent's lookahead pacing:
+        window ``k+1`` is sealed only once every rank cut over to ``k``."""
+        deadline = time.monotonic() + timeout_s
+        with self._cond:
+            while name not in self.released_barriers:
+                if self.dead and not (self.alive - self.done):
+                    return False  # every remaining rank died: never releases
+                remaining = deadline - time.monotonic()
+                if remaining <= 0 or not self._cond.wait(timeout=remaining):
+                    return False
+            return True
 
     # -- parent-side waits -----------------------------------------------------
 
@@ -530,6 +572,9 @@ class _ControlClient:
         self.sock.settimeout(timeout_s)
         self._send_lock = threading.Lock()
         self.hb_interval_s = float(hb_interval_s)
+        #: streaming window announcements received out of band (during
+        #: register/barrier waits); drained by :meth:`wait_window`.
+        self.windows: list[dict] = []
         #: bound by the rank loop: () -> (cursors dict, aggregate hex).
         self.progress = None
         self._hb_stop = threading.Event()
@@ -607,6 +652,8 @@ class _ControlClient:
             msg = self._recv()
             if msg.get("kind") == "probe":
                 self.heartbeat()
+            elif msg.get("kind") == "window":
+                self.windows.append(msg)
             elif msg.get("kind") == "addrbook":
                 return (
                     {
@@ -628,8 +675,34 @@ class _ControlClient:
             msg = self._recv()
             if msg.get("kind") == "probe":
                 self.heartbeat()
+            elif msg.get("kind") == "window":
+                self.windows.append(msg)
             elif msg.get("kind") == "release" and msg.get("name") == name:
                 return msg
+
+    def wait_window(self, index: int, timeout_s: float | None = None) -> dict:
+        """Block until the window announcement for ``index`` arrives.
+
+        Checks the stash first (announcements routinely land during barrier
+        waits), then receives — answering probes and stashing other windows
+        — until the wanted index shows up or ``timeout_s`` passes.
+        """
+        deadline = (
+            None if timeout_s is None else time.monotonic() + timeout_s
+        )
+        while True:
+            for w in self.windows:
+                if int(w.get("index", -1)) == int(index):
+                    return w
+            if deadline is not None and time.monotonic() > deadline:
+                raise TimeoutError(
+                    f"no window {index} announcement within {timeout_s}s"
+                )
+            msg = self._recv()
+            if msg.get("kind") == "probe":
+                self.heartbeat()
+            elif msg.get("kind") == "window":
+                self.windows.append(msg)
 
     def report(self, payload: dict) -> None:
         self._send(dict(payload, kind="report"))
@@ -774,7 +847,11 @@ def _rank_main(rank: int, cfg: dict) -> None:
                 sb = ex.execute_step(
                     cep, csp, peer_arrays=[None] * len(csp.nodes)
                 )
-                _record(node, s, sb, adopted=True)
+                if sb.node_ids:
+                    _record(node, s, sb, adopted=True)
+                else:
+                    with prog_lock:
+                        cursors[node] = s + 1
             if boundary < total_steps:
                 # prime the boundary step now — with zero catch-up this
                 # first next() performs the coalesced restage, which must
@@ -850,9 +927,16 @@ def _rank_main(rank: int, cfg: dict) -> None:
                     sb = owned[node].execute_step(
                         cep, csp, peer_arrays=gathered[node]
                     )
-                    if node == rank:
-                        update_batch_digest(h, sb)
-                    _record(node, idx, sb, adopted=node != rank)
+                    if sb.node_ids:
+                        if node == rank:
+                            update_batch_digest(h, sb)
+                        _record(node, idx, sb, adopted=node != rank)
+                    else:
+                        # an empty for_node slice at this step: nothing to
+                        # hash — the reference digests only cover steps a
+                        # node appears in — but the cursor still advances.
+                        with prog_lock:
+                            cursors[node] = idx + 1
             # synchronous beat: the coordinator sees this step's cursors
             # and aggregate before the next boundary can re-slice them.
             with contextlib.suppress(OSError):

@@ -1,0 +1,58 @@
+"""Streaming ingestion: plan-first loading over data that doesn't exist yet.
+
+Producers ``put()`` rows into a writable backend under seeded admission
+(:mod:`repro.stream.ingest`); sealed manifests feed a :class:`WindowPlanner`
+that compiles rolling :class:`~repro.core.plan.Schedule` segments
+(:mod:`repro.stream.windows`); drivers chain the segments onto a live
+:class:`~repro.data.loaders.ScheduleExecutor` — in-process with overlapped
+planning (:func:`run_stream`) or across rank processes with plan broadcast
+over the control plane (:func:`run_stream_distributed`).  See DESIGN.md §10.
+"""
+from repro.stream.ingest import (
+    ADMISSION_POLICIES,
+    IngestError,
+    IngestSession,
+    StreamClosed,
+    WindowManifest,
+    admission_priority,
+    run_producers,
+    synthetic_row,
+)
+from repro.stream.windows import STREAM_STRATEGY, StreamSpec, WindowPlanner
+
+__all__ = [
+    "ADMISSION_POLICIES",
+    "IngestError",
+    "IngestSession",
+    "StreamClosed",
+    "WindowManifest",
+    "admission_priority",
+    "run_producers",
+    "synthetic_row",
+    "STREAM_STRATEGY",
+    "StreamSpec",
+    "WindowPlanner",
+    "StreamReport",
+    "run_stream",
+    "StreamDistReport",
+    "run_stream_distributed",
+]
+
+_LAZY = {
+    # driver/distributed import repro.data.pipeline, which imports
+    # repro.stream.windows — resolve them lazily so importing either side
+    # first works.
+    "StreamReport": "repro.stream.driver",
+    "run_stream": "repro.stream.driver",
+    "StreamDistReport": "repro.stream.distributed",
+    "run_stream_distributed": "repro.stream.distributed",
+}
+
+
+def __getattr__(name: str):
+    mod = _LAZY.get(name)
+    if mod is None:
+        raise AttributeError(f"module 'repro.stream' has no attribute {name!r}")
+    import importlib
+
+    return getattr(importlib.import_module(mod), name)

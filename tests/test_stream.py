@@ -1,0 +1,395 @@
+"""Streaming ingestion subsystem (DESIGN.md §10): seeded admission
+properties, rolling window plans, live ``extend()``, digest parity with
+one-shot offline replans — plus the empty-rank-slice and concurrent
+plan-cache satellites."""
+import hashlib
+import os
+import random
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.data import (
+    DatasetSpec,
+    LoaderSpec,
+    PlanCache,
+    create_store,
+    execute,
+    make_planner,
+    plan,
+)
+from repro.stream import (
+    IngestSession,
+    StreamSpec,
+    WindowPlanner,
+    admission_priority,
+    run_producers,
+    run_stream,
+    synthetic_row,
+)
+
+SRC = os.path.join(os.path.dirname(os.path.dirname(__file__)), "src")
+
+
+def _mem_store(tmp_path, n=512, width=8, tag="s"):
+    return create_store(
+        str(tmp_path / f"stream_{tag}"), "memory",
+        spec=DatasetSpec(n, (width,), "<f4"), fill="zeros",
+    )
+
+
+def _feed(session, trace, threads=1, seed=0):
+    run_producers(session, trace, threads=threads, data_seed=seed)
+
+
+def _stream_spec(store=None, *, nodes=2, local_batch=4, buffer=64,
+                 window_steps=4, watermark=0, max_windows=4, **stream_kw):
+    return LoaderSpec(
+        loader="stream", store=store, num_nodes=nodes,
+        local_batch=local_batch, buffer_size=buffer, seed=0,
+        collect_data=True,
+        stream=StreamSpec(
+            window_steps=window_steps, watermark=watermark,
+            max_windows=max_windows, **stream_kw,
+        ),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Seeded admission: deterministic in (seed, trace), interleaving-independent
+# ---------------------------------------------------------------------------
+
+
+def test_admitted_set_deterministic_in_seed_and_trace(tmp_path):
+    """Same (seed, arrival trace) -> identical admitted multiset, even when
+    the trace arrives in a different order; a different seed retains a
+    different subset."""
+    trace = list(range(400))
+    shuffled = list(trace)
+    random.Random(7).shuffle(shuffled)
+    sealed = {}
+    for tag, (seed, order) in {
+        "a": (3, trace), "b": (3, shuffled), "c": (11, trace),
+    }.items():
+        with _mem_store(tmp_path, tag=tag) as st:
+            sess = IngestSession(
+                st, seed=seed, admission="reservoir", reservoir_size=64,
+                max_pending=len(trace),
+            )
+            _feed(sess, order)
+            sealed[tag] = sess.seal(min_fresh=0).ids
+    np.testing.assert_array_equal(sealed["a"], sealed["b"])
+    assert not np.array_equal(sealed["a"], sealed["c"])
+
+
+@pytest.mark.parametrize("threads", [1, 2, 4])
+def test_admitted_set_independent_of_producer_interleaving(tmp_path, threads):
+    """Producer thread count (and therefore put() interleaving) never
+    changes the admitted set or the bytes an admitted id carries."""
+    n, reservoir = 512, 96
+    with _mem_store(tmp_path, n=n, tag=f"t{threads}") as st:
+        sess = IngestSession(
+            st, seed=5, admission="reservoir", reservoir_size=reservoir,
+            max_pending=n,
+        )
+        _feed(sess, range(n), threads=threads, seed=9)
+        m = sess.seal(min_fresh=0)
+        rows = st.read_ranges([(i, i + 1) for i in m.ids])
+    expected = np.asarray(
+        sorted(
+            range(n), key=lambda i: (admission_priority(5, i), i)
+        )[:reservoir],
+        np.int64,
+    )
+    np.testing.assert_array_equal(m.ids, np.sort(expected))
+    for sid, row in zip(m.ids, rows):
+        np.testing.assert_array_equal(
+            row[0], synthetic_row(sid, st.sample_shape, st.dtype, 9)
+        )
+
+
+def test_latest_policy_retains_freshest_ids(tmp_path):
+    with _mem_store(tmp_path, tag="latest") as st:
+        sess = IngestSession(
+            st, seed=0, admission="latest", reservoir_size=32, max_pending=512,
+        )
+        _feed(sess, range(300))
+        m = sess.seal(min_fresh=0)
+    np.testing.assert_array_equal(m.ids, np.arange(268, 300))
+    assert sess.stats["evicted"] == 268
+
+
+def test_sealed_ids_are_immutable(tmp_path):
+    """A sealed id is visible to readers through its manifest: a re-put is
+    refused and the stored row keeps its original bytes."""
+    with _mem_store(tmp_path, tag="sealed") as st:
+        sess = IngestSession(st, seed=0, admission="all")
+        first = np.full(st.sample_shape, 1.5, "<f4")
+        assert sess.put(3, first)
+        sess.seal(min_fresh=0)
+        assert not sess.put(3, np.full(st.sample_shape, -9.0, "<f4"))
+        assert sess.stats["rejected_sealed"] == 1
+        np.testing.assert_array_equal(st.read_ranges([(3, 4)])[0][0], first)
+
+
+def test_put_rejects_ids_outside_the_store(tmp_path):
+    from repro.stream import IngestError
+
+    with _mem_store(tmp_path, n=16, tag="oob") as st:
+        sess = IngestSession(st, admission="all")
+        with pytest.raises(IngestError):
+            sess.put(16, np.zeros(st.sample_shape, "<f4"))
+        with pytest.raises(ValueError):
+            IngestSession(st, admission="bogus")
+
+
+# ---------------------------------------------------------------------------
+# Spec validation + planner registry
+# ---------------------------------------------------------------------------
+
+
+def test_stream_spec_validation(tmp_path):
+    with _mem_store(tmp_path, tag="val") as st:
+        with pytest.raises(ValueError, match="needs stream="):
+            LoaderSpec(loader="stream", store=st).validate()
+        with pytest.raises(ValueError, match="requires loader='stream'"):
+            LoaderSpec(loader="solar", store=st, stream=StreamSpec()).validate()
+        with pytest.raises(ValueError, match="plan_cache"):
+            _stream_spec(st).replace(plan_cache=str(tmp_path)).validate()
+        with pytest.raises(ValueError, match="admission"):
+            _stream_spec(st, admission="bogus").validate()
+        with pytest.raises(ValueError, match="no offline planner"):
+            make_planner(_stream_spec(st))
+
+
+def test_extend_rejects_geometry_mismatch(tmp_path):
+    with _mem_store(tmp_path, tag="geom") as st:
+        spec = _stream_spec(st)
+        sess = IngestSession(st, admission="all", max_pending=512)
+        _feed(sess, range(128))
+        ids = sess.seal(min_fresh=0).ids
+        seg = WindowPlanner.for_spec(spec).plan_window(ids)
+        other = WindowPlanner.for_spec(
+            spec.replace(local_batch=spec.local_batch * 2)
+        ).plan_window(ids)
+        ex = execute(spec, seg, store=st)
+        with pytest.raises(ValueError, match="local_batch"):
+            ex.extend(other)
+
+
+# ---------------------------------------------------------------------------
+# The determinism contract: live windows == one-shot offline replan
+# ---------------------------------------------------------------------------
+
+
+def test_run_stream_overlap_and_stop_the_world_agree(tmp_path):
+    """Overlapped window planning and stop-the-world replanning execute
+    byte-identical batch streams, and both match the offline replan."""
+    reports = {}
+    for overlap in (False, True):
+        with _mem_store(tmp_path, n=256, tag=f"ov{overlap}") as st:
+            sess = IngestSession(st, seed=0, admission="all", max_pending=256)
+            _feed(sess, range(256), threads=2)
+            rep = run_stream(
+                _stream_spec(st), sess, overlap=overlap, verify=True,
+            )
+        assert rep.ok, rep.verify
+        assert rep.windows == 4 and rep.steps == 16
+        reports[overlap] = rep
+    assert reports[False].plan_digest == reports[True].plan_digest
+    assert reports[False].stream_digest == reports[True].stream_digest
+
+
+def test_run_stream_drains_when_producers_finish(tmp_path):
+    """With no window cap the stream runs until the producers finish and a
+    seal comes back empty — and still replays offline digest-identically."""
+    import threading
+
+    with _mem_store(tmp_path, n=384, tag="drain") as st:
+        sess = IngestSession(st, seed=1, admission="all", max_pending=64)
+        t = threading.Thread(
+            target=_feed, args=(sess, range(384)), kwargs=dict(threads=2),
+            daemon=True,
+        )
+        t.start()
+        rep = run_stream(
+            _stream_spec(st, max_windows=None, watermark=16), sess,
+            verify=True,
+        )
+        t.join(timeout=30.0)
+    assert rep.ok, rep.verify
+    assert sess.finished and rep.windows >= 1
+    assert rep.ingest_stats["admitted"] == 384
+
+
+def test_prefetched_stream_matches_synchronous(tmp_path):
+    """The pipelined executor coordinates with extend() at window
+    boundaries (instead of deadlocking read-ahead) and reproduces the
+    synchronous batch stream exactly."""
+    digests = {}
+    for depth in (0, 2):
+        with _mem_store(tmp_path, n=256, tag=f"pf{depth}") as st:
+            sess = IngestSession(st, seed=2, admission="all", max_pending=256)
+            _feed(sess, range(256), threads=2)
+            rep = run_stream(
+                _stream_spec(st).replace(prefetch_depth=depth), sess,
+                verify=True,
+            )
+        assert rep.ok, rep.verify
+        digests[depth] = (rep.plan_digest, rep.stream_digest)
+    assert digests[0] == digests[2]
+
+
+# ---------------------------------------------------------------------------
+# Satellite: a rank whose slice is empty is a valid plan, not an error
+# ---------------------------------------------------------------------------
+
+
+def _offline_spec(tmp_path, *, nodes=2, tag="off"):
+    path = str(tmp_path / f"ds_{tag}")
+    create_store(
+        path, "binary", spec=DatasetSpec(256, (8,), "<f4"), fill="arange",
+    ).close()
+    return LoaderSpec(
+        loader="naive", backend="binary", path=path, num_nodes=nodes,
+        local_batch=8, num_epochs=1, buffer_size=32, collect_data=True,
+    )
+
+
+def test_empty_rank_slice_is_a_valid_plan(tmp_path):
+    spec = _offline_spec(tmp_path)
+    sched = plan(spec)
+    with pytest.raises(ValueError, match="out of range"):
+        sched.for_node(2)
+    empty = sched.for_node(0).for_node(1)  # rank 1 of a rank-0-only slice
+    stats = empty.stats()
+    assert stats.total_samples_trained == 0
+    assert empty.artifact_digest()
+    for ep in empty.epochs:
+        for sp in ep.steps:
+            assert sp.global_batch().size == 0 and sp.max_pfs_samples == 0
+    ex = execute(spec, empty)
+    h = hashlib.sha256()
+    steps = 0
+    for sb in ex:
+        steps += 1
+        assert sb.node_ids == []
+    assert steps == sum(len(ep.steps) for ep in empty.epochs) > 0
+    assert h.hexdigest() == hashlib.sha256().hexdigest()
+
+
+@pytest.mark.dist
+def test_distributed_rank_with_empty_slice_barriers_through(tmp_path):
+    """A rank handed an empty slice must still register, barrier through
+    every step, and report the empty-stream digest — not crash or stall."""
+    from repro.runtime.launcher import in_process_digests, run_distributed
+
+    spec = _offline_spec(tmp_path, tag="dist")
+    sched = plan(spec).for_node(0)  # rank 1's share of this plan is empty
+    report = run_distributed(spec, schedule=sched, timeout_s=240.0)
+    assert report.ok, f"dead ranks: {report.dead}"
+    digests = report.digests()
+    assert digests[1] == hashlib.sha256().hexdigest()
+    assert digests == in_process_digests(spec, sched)
+
+
+# ---------------------------------------------------------------------------
+# Distributed streaming: broadcast windows, same-step cut-over, digest parity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.dist
+def test_stream_distributed_two_ranks_digest_parity(tmp_path):
+    from repro.data import build_store
+    from repro.stream.distributed import run_stream_distributed
+
+    spec = LoaderSpec(
+        loader="stream", backend="sharded", path=str(tmp_path / "shard"),
+        num_nodes=2, local_batch=4, buffer_size=64, seed=0,
+        collect_data=True,
+        stream=StreamSpec(window_steps=4, watermark=0, max_windows=3),
+    )
+    store = build_store(
+        spec, create=True, dataset=DatasetSpec(256, (8,), "<f4"),
+        fill="zeros",
+    )
+    try:
+        sess = IngestSession(store, seed=0, admission="all", max_pending=256)
+        _feed(sess, range(256), threads=2)
+        rep = run_stream_distributed(spec, sess, verify=True, timeout_s=240.0)
+    finally:
+        store.close()
+    assert not rep.dead, f"dead ranks: {rep.dead}"
+    assert rep.windows == 3 and rep.steps == 12
+    assert rep.ok, rep.verify
+    assert rep.verify["plan_parity"] and rep.verify["rank_parity"]
+
+
+# ---------------------------------------------------------------------------
+# Satellite: PlanCache under concurrent writers
+# ---------------------------------------------------------------------------
+
+_CACHE_WORKER = r"""
+import sys
+from repro.core.planners import PlanCache
+from repro.data import LoaderSpec, make_planner, open_store
+
+path, cache_dir = sys.argv[1], sys.argv[2]
+store = open_store(path, "binary")
+spec = LoaderSpec(
+    loader="solar", store=store, num_nodes=4, local_batch=8,
+    num_epochs=2, buffer_size=64, seed=0,
+)
+planner = make_planner(spec)
+sched, hit = PlanCache(cache_dir).load_or_build(planner, store.num_samples, 2)
+print(sched.artifact_digest(), int(hit))
+store.close()
+"""
+
+
+def test_plan_cache_safe_under_concurrent_writers(tmp_path):
+    """N processes racing load_or_build on the same key must all come back
+    with the same valid schedule — never a corrupt artifact or a
+    miss-forever cache entry."""
+    path = str(tmp_path / "race.bin")
+    create_store(
+        path, "binary", spec=DatasetSpec(512, (8,), "<f4"), fill="arange",
+    ).close()
+    cache_dir = str(tmp_path / "cache")
+    env = dict(os.environ, PYTHONPATH=SRC)
+    procs = [
+        subprocess.Popen(
+            [sys.executable, "-c", _CACHE_WORKER, path, cache_dir],
+            stdout=subprocess.PIPE, stderr=subprocess.PIPE, env=env,
+            text=True,
+        )
+        for _ in range(4)
+    ]
+    outs = [p.communicate(timeout=240.0) for p in procs]
+    for p, (out, err) in zip(procs, outs):
+        assert p.returncode == 0, err
+    digests = {out.split()[0] for out, _ in outs}
+    assert len(digests) == 1, f"racing writers diverged: {digests}"
+    # the installed entry is valid (no corrupt-miss-forever), and no
+    # half-written temp files were left behind
+    from repro.data import open_store
+
+    with open_store(path, "binary") as store:
+        spec = LoaderSpec(
+            loader="solar", store=store, num_nodes=4, local_batch=8,
+            num_epochs=2, buffer_size=64, seed=0,
+        )
+        planner = make_planner(spec)
+        cache = PlanCache(cache_dir)
+        key = planner.cache_key(store.num_samples, 2)
+        cached = cache.get(key)
+        assert cached is not None
+        assert cached.artifact_digest() == digests.pop()
+        sched, hit = cache.load_or_build(planner, store.num_samples, 2)
+        assert hit
+    leftovers = [
+        f for f in os.listdir(cache_dir) if not f.endswith(".npz")
+    ]
+    assert leftovers == [], f"stale temp files: {leftovers}"
