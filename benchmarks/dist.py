@@ -16,6 +16,10 @@ report's serving-load accounting matches the per-rank sums.  A dead-peer
 row additionally kills one rank mid-run and shows the survivors complete
 with correct digests and PFS fallbacks instead of hanging.
 
+A prefetch-depth sweep (0 vs 2 vs 4 at 2 ranks) times the epoch-window
+skew protocol: digests stay bit-identical at every depth while ms/step at
+depth >= 2 must come in strictly below the depth-0 lockstep baseline.
+
 Emits per-variant rows and returns the comparison dict for
 ``BENCH_dist.json``.
 """
@@ -38,7 +42,7 @@ EPOCHS = 2
 SAMPLE_FLOATS = 64
 
 
-def _dist_spec(nodes: int) -> LoaderSpec:
+def _dist_spec(nodes: int, depth: int = 0) -> LoaderSpec:
     path = os.path.join(
         tempfile.gettempdir(),
         f"solar_bench_dist_{NUM_SAMPLES}_{SAMPLE_FLOATS}",
@@ -57,6 +61,7 @@ def _dist_spec(nodes: int) -> LoaderSpec:
         loader="solar", backend="binary", path=path, num_nodes=nodes,
         local_batch=LOCAL_BATCH, num_epochs=EPOCHS, buffer_size=BUFFER,
         collect_data=True, peer_fetch=True, solar=solar, transport="socket",
+        prefetch_depth=depth,
     )
 
 
@@ -130,6 +135,49 @@ def _run_dead_peer(nodes: int = 4, die_rank: int = 2, die_step: int = 6) -> dict
     }
 
 
+def _run_depth_sweep(nodes: int = 2, depths=(0, 2, 4)) -> dict:
+    """Epoch-window skew sweep (DESIGN.md §11): same plan, same digests,
+    fewer barriers.  ``prefetch_depth`` D widens the window to D+1 steps —
+    ranks barrier only on window boundaries and pipeline up to D steps of
+    chunk reads inside each window, so per-step barrier + read latency
+    overlaps compute.  The acceptance bar: ms/step at depth >= 2 strictly
+    below the depth-0 lockstep baseline, with digest parity at every depth.
+    """
+    from repro.runtime import in_process_digests, run_distributed
+
+    rows: dict = {}
+    for depth in depths:
+        spec = _dist_spec(nodes, depth)
+        ref = in_process_digests(spec)
+        t0 = time.perf_counter()
+        report = run_distributed(spec, timeout_s=600.0)
+        wall = time.perf_counter() - t0
+        assert report.ok, f"depth {depth}: dead ranks {report.dead}"
+        assert report.digests() == ref, (
+            f"depth {depth} trained different bytes"
+        )
+        assert sum(r.peer_fallbacks for r in report.ranks) == 0
+        assert sum(r.stale_refusals for r in report.ranks) == 0
+        steps = report.ranks[0].steps
+        rows[str(depth)] = {
+            "depth": depth,
+            "window_steps": depth + 1,
+            "steps": steps,
+            "digest_identical": True,
+            "max_observed_skew": report.summary()["max_observed_skew"],
+            "wall_s": round(wall, 4),
+            "ms_per_step": round(wall * 1e3 / max(steps, 1), 3),
+        }
+    base = rows[str(depths[0])]["ms_per_step"]
+    for depth in depths:
+        if depth >= 2:
+            assert rows[str(depth)]["ms_per_step"] < base, (
+                f"depth {depth} must beat the lockstep baseline "
+                f"({rows[str(depth)]['ms_per_step']} >= {base} ms/step)"
+            )
+    return {"nodes": nodes, "depths": rows}
+
+
 def run() -> dict:
     results: dict = {"ranks": {}}
     for nodes in (2, 4):
@@ -140,6 +188,11 @@ def run() -> dict:
         emit(f"dist/{nodes}ranks/peer_served", 0.0, str(row["peer_served"]))
         emit(f"dist/{nodes}ranks/overhead_ms_per_step", 0.0,
              f"{row['overhead_ms_per_step']}ms")
+    sweep = _run_depth_sweep()
+    results["depth_sweep"] = sweep
+    for depth, row in sweep["depths"].items():
+        emit(f"dist/depth{depth}/ms_per_step", 0.0,
+             f"{row['ms_per_step']}ms")
     dead = _run_dead_peer()
     results["dead_peer"] = dead
     emit("dist/dead_peer/survivors_identical", 0.0,

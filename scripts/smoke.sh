@@ -72,9 +72,12 @@ assert steps == 3 * (32768 // 512), steps
 print(f"smoke fig13 occupancy regression: OK ({steps} steps)")
 PY
 
-# 2-process distributed smoke (DESIGN.md §8): a real 2-rank launcher run
-# over the socket peer transport must produce per-rank stream digests
-# bit-identical to the same plan executed in-process, with zero fallbacks.
+# 2-process distributed smoke (DESIGN.md §8, §11): a real 2-rank launcher
+# run over the socket peer transport must produce per-rank stream digests
+# bit-identical to the same plan executed in-process, with zero fallbacks —
+# first in lockstep, then again at prefetch depth 2 (epoch-window skew:
+# barriers every 3 steps, ranks up to 2 steps apart) with the *same*
+# digests and zero stale refusals.
 # Staged as a real file with a __main__ guard: multiprocessing's spawn
 # re-imports the parent's main module, which a stdin heredoc cannot satisfy.
 DIST_SMOKE="$(mktemp -t solar_dist_smoke.XXXXXX.py)"
@@ -102,12 +105,25 @@ def main():
     )
     report = run_distributed(spec, timeout_s=240.0)
     assert report.ok, f"dead ranks: {report.dead}"
-    assert report.digests() == in_process_digests(spec), "digest mismatch"
+    ref = in_process_digests(spec)
+    assert report.digests() == ref, "digest mismatch"
     assert sum(r.peer_fallbacks for r in report.ranks) == 0
     served = sum(r.peer_served for r in report.ranks)
     assert served > 0, "socket tier never fired"
     print(f"smoke distributed: OK (2 ranks, {report.ranks[0].steps} steps, "
           f"{served} peer-served, digest parity)")
+
+    # the same plan at prefetch depth 2: window barriers + skewed ranks
+    # must train exactly the lockstep bytes (DESIGN.md §11)
+    windowed = run_distributed(spec.replace(prefetch_depth=2), timeout_s=240.0)
+    assert windowed.ok, f"dead ranks: {windowed.dead}"
+    assert windowed.digests() == ref, "depth-2 window run changed bytes"
+    assert sum(r.peer_fallbacks for r in windowed.ranks) == 0
+    assert sum(r.stale_refusals for r in windowed.ranks) == 0
+    skew = windowed.summary()["max_observed_skew"]
+    assert skew <= 3, f"observed skew {skew} beyond the depth-2 window"
+    print(f"smoke windowed distributed: OK (depth 2, window 3, "
+          f"max skew {skew}, digest parity vs lockstep reference)")
 
 
 if __name__ == "__main__":

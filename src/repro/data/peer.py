@@ -239,6 +239,7 @@ class SocketTransport:
         )
         self.dtype = None if dtype is None else np.dtype(dtype)
         self._step = -1
+        self._window: int | None = None
         self._conns: dict[int, socket.socket] = {}
         self.retry = retry if retry is not None else RetryPolicy()
         self._escalate = escalate
@@ -250,6 +251,10 @@ class SocketTransport:
         self.breaker_skips = 0
         self.escalations = 0
         self.unknown_source_fallbacks = 0
+        #: fetches that ended in a peer's *stale refusal* (window-skew guard
+        #: or an ownership transition) — expected under skew, so they fall
+        #: back to the PFS without charging the breaker/escalation ladder.
+        self.stale_refusal_fallbacks = 0
         errs = []
         seen: dict[tuple[str, int], int] = {}
         for node in sorted(self.endpoints):
@@ -273,10 +278,14 @@ class SocketTransport:
                 "invalid peer address book: " + "; ".join(errs)
             )
 
-    def at_step(self, step: int) -> None:
+    def at_step(self, step: int, window: int | None = None) -> None:
         """Stamp subsequent fetches with the requester's global step index
-        (the serving side's step-epoch guard, DESIGN.md §8)."""
+        (the serving side's step-epoch guard, DESIGN.md §8).  With
+        ``window`` given, fetches ride the windowed frame (``MSG_FETCHW``)
+        so the serving side applies the window-skew guard instead of the
+        exact-step guard (DESIGN.md §11)."""
         self._step = int(step)
+        self._window = None if window is None else int(window)
 
     # -- elastic membership (launcher recovery path) ------------------------
 
@@ -323,6 +332,7 @@ class SocketTransport:
             "breaker_skips": self.breaker_skips,
             "escalations": self.escalations,
             "unknown_source_fallbacks": self.unknown_source_fallbacks,
+            "stale_refusal_fallbacks": self.stale_refusal_fallbacks,
         }
 
     def _breaker(self, source: int) -> _Breaker:
@@ -381,8 +391,14 @@ class SocketTransport:
                     raise wire.HandshakeError(
                         f"peer {source} refused the handshake: {reason}"
                     )
-                # any other refusal (e.g. "not serving node N" during an
-                # ownership transition) is transient: retriable wire error.
+                if "not serving node" in reason:
+                    # mid ownership transition (window-edge re-slice or a
+                    # rejoin reclaim): expected under the epoch-window
+                    # protocol — retriable, but never a breaker fault.
+                    raise wire.StaleRefusal(
+                        f"peer {source} refused the handshake: {reason}"
+                    )
+                # any other refusal is transient: retriable wire error.
                 raise wire.ProtocolError(
                     f"peer {source} refused the handshake: {reason}"
                 )
@@ -440,15 +456,23 @@ class SocketTransport:
         attempts: list[socket.socket | None] = [None] * self.retry.max_attempts
         if pooled is not None:
             attempts.insert(0, pooled)
+        refused_stale = False
         for i, conn in enumerate(attempts):
             last = i == len(attempts) - 1
             try:
                 if conn is None:
                     conn = self._connect(source)
-                wire.send_frame(
-                    conn, wire.MSG_FETCH, wire.pack_fetch(self._step, ids),
-                    site="transport.fetch",
-                )
+                if self._window is not None:
+                    wire.send_frame(
+                        conn, wire.MSG_FETCHW,
+                        wire.pack_fetchw(self._window, self._step, ids),
+                        site="transport.fetch",
+                    )
+                else:
+                    wire.send_frame(
+                        conn, wire.MSG_FETCH, wire.pack_fetch(self._step, ids),
+                        site="transport.fetch",
+                    )
                 msg_type, payload = wire.recv_frame(conn)
                 if msg_type != wire.MSG_ROWS:
                     raise wire.ProtocolError(
@@ -457,9 +481,10 @@ class SocketTransport:
                 ok, rows = wire.unpack_rows(
                     payload, ids.size, self.sample_shape, self.dtype
                 )
-            except (wire.WireError, OSError):
+            except (wire.WireError, OSError) as exc:
                 # truncated / corrupt / reset / dead peer: never wrong bytes
                 # — drop the connection and climb the ladder.
+                refused_stale = isinstance(exc, wire.StaleRefusal)
                 if conn is not None:
                     with contextlib.suppress(OSError):
                         conn.close()
@@ -475,6 +500,14 @@ class SocketTransport:
             self._conns[source] = conn
             breaker.success()
             return rows, ok
+        if refused_stale:
+            # the final word was the peer's window-skew guard refusing —
+            # expected under skew (DESIGN.md §11): PFS fallback, but no
+            # breaker failure and no escalation.  Charging the ladder here
+            # would open breakers (and suspect healthy ranks) every time
+            # ownership moves across a window edge.
+            self.stale_refusal_fallbacks += 1
+            return self._fallback(ids.size)
         # every attempt exhausted: one breaker failure for the whole fetch.
         if breaker.failure(time.monotonic()):
             self.breaker_opens += 1

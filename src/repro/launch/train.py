@@ -219,6 +219,11 @@ def _add_distributed_args(ap: argparse.ArgumentParser) -> None:
                     choices=("reslice", "degrade"),
                     help="on rank death: re-slice its remaining plan onto "
                          "survivors (default) or degrade to PFS fallbacks")
+    ap.add_argument("--prefetch-depth", type=int, default=0,
+                    help="epoch-window skew: ranks barrier only every "
+                         "depth+1 steps and pipeline that many steps of "
+                         "chunk reads inside the window (0 = lockstep; "
+                         "digests are depth-invariant)")
 
 
 def run_distributed_cmd(args) -> None:
@@ -254,6 +259,7 @@ def run_distributed_cmd(args) -> None:
         num_epochs=args.epochs, buffer_size=args.buffer, seed=args.seed,
         collect_data=True, peer_fetch=args.peer_fetch, solar=solar,
         plan_cache=args.plan_cache, transport="socket",
+        prefetch_depth=max(args.prefetch_depth, 0),
     )
     store = build_store(
         spec, create=True,
@@ -353,7 +359,9 @@ def _add_stream_args(ap: argparse.ArgumentParser) -> None:
                          "(default: unthrottled)")
     ap.add_argument("--producer-threads", type=int, default=2)
     ap.add_argument("--prefetch-depth", type=int, default=0,
-                    help="pipeline read-ahead in steps (single-process only)")
+                    help="pipeline read-ahead in steps; distributed ranks "
+                         "run it as async prefetch inside their stream "
+                         "windows (digests stay depth-invariant)")
     ap.add_argument("--distributed", action="store_true",
                     help="execute as --nodes rank processes: each sealed "
                          "window's plan is broadcast by content hash and "
@@ -393,7 +401,7 @@ def run_stream_cmd(args) -> None:
         loader="stream", backend=args.backend, path=args.data,
         num_nodes=args.nodes, local_batch=args.local_batch,
         buffer_size=args.buffer, seed=args.seed, collect_data=True,
-        prefetch_depth=0 if args.distributed else args.prefetch_depth,
+        prefetch_depth=max(args.prefetch_depth, 0),
         stream=StreamSpec(
             window_steps=args.window_steps, admission=args.admission,
             watermark=args.watermark, reservoir_size=args.reservoir,

@@ -122,6 +122,7 @@ class _Coordinator:
         heartbeat_interval_s: float = 0.2,
         suspect_timeout_s: float = 2.0,
         probe_grace_s: float = 2.0,
+        window_steps: int = 1,
     ):
         self.num_ranks = int(num_ranks)
         self.barrier_timeout_s = float(barrier_timeout_s)
@@ -129,6 +130,10 @@ class _Coordinator:
         self.heartbeat_interval_s = float(heartbeat_interval_s)
         self.suspect_timeout_s = float(suspect_timeout_s)
         self.probe_grace_s = float(probe_grace_s)
+        #: epoch-window size in steps (DESIGN.md §11): step barriers exist
+        #: only at multiples of this, so rejoins and ownership transitions
+        #: land exclusively on window boundaries.
+        self.window_steps = max(int(window_steps), 1)
         self._listener = socket.create_server((_HOST, 0))
         self._listener.settimeout(0.1)
         self.port = self._listener.getsockname()[1]
@@ -240,6 +245,9 @@ class _Coordinator:
                         self.hb_state[rank] = {
                             "cursors": dict(msg.get("cursors", {})),
                             "agg": msg.get("agg"),
+                            # window cursor: which epoch window the rank is
+                            # executing (skew diagnosis under DESIGN.md §11).
+                            "window": msg.get("window"),
                         }
                 elif kind == "suspect":
                     self._peer_suspect(rank, int(msg.get("node", -1)))
@@ -281,9 +289,17 @@ class _Coordinator:
             if not rejoin:
                 self.joined_at.setdefault(rank, 0)
             if rejoin:
-                # hand back the rank's own slice at the next unreleased step
-                # boundary; the interim adopter drops it in the same release.
-                resume = self.last_released_step + 1
+                # hand back the rank's own slice at the next unreleased
+                # *window* boundary; the interim adopter drops it in the
+                # same release.  Resuming mid-window would double-execute
+                # the steps the adopter already ran inside the live window
+                # (XOR pairs cancel out of the aggregate) — ownership only
+                # ever moves on window edges.
+                w = self.window_steps
+                resume = (
+                    0 if self.last_released_step < 0
+                    else (self.last_released_step // w + 1) * w
+                )
                 self.joined_at[rank] = resume
                 self.owner_of[rank] = rank
                 pending = next(
@@ -603,11 +619,14 @@ class _ControlClient:
 
     def heartbeat(self) -> None:
         """Send one liveness beat carrying the progress snapshot."""
-        cursors, agg = ({}, None) if self.progress is None else self.progress()
+        snap = ({}, None) if self.progress is None else self.progress()
+        cursors, agg = snap[0], snap[1]
+        window = snap[2] if len(snap) > 2 else None
         self._send({
             "kind": "hb",
             "cursors": {str(k): int(v) for k, v in cursors.items()},
             "agg": agg,
+            "window": window,
         })
 
     def start_heartbeats(self) -> None:
@@ -715,16 +734,28 @@ class _ControlClient:
 
 def _rank_main(rank: int, cfg: dict) -> None:
     """One rank: load plan by hash, serve the buffer, replay the slice —
-    and, under recovery, adopt/drop orphaned slices at step boundaries."""
+    and, under recovery, adopt/drop orphaned slices at window boundaries.
+
+    Epoch-window protocol (DESIGN.md §11): with ``prefetch_depth = d`` the
+    window is ``d + 1`` steps; ranks barrier only at window boundaries and
+    run freely (and skewed, up to ``d`` steps apart) inside one, with each
+    step's coalesced chunk reads issued up to ``d`` steps ahead.  The
+    buffer server absorbs the skew: its window guard serves any step in the
+    live window from the matching snapshot.  ``d = 0`` degenerates to
+    one-barrier-per-step lockstep.
+    """
     from repro.core.plan import Schedule
     from repro.data.loaders import update_batch_digest
     from repro.data.peer import SocketTransport
     from repro.data.pipeline import build_store, execute
+    from repro.data.prefetch import WindowReadAhead
     from repro.runtime import faults as faults_mod
     from repro.runtime.server import BufferServer
 
     spec = cfg["spec"]
     barrier_timeout_s = float(cfg["barrier_timeout_s"])
+    depth = max(int(cfg.get("prefetch_depth", 0)), 0)
+    window_steps = depth + 1
     armed = faults_mod.arm(cfg.get("fault_plan"), rank)
     crash_at = armed.crash_step() if armed is not None else None
     if cfg.get("die_at_step") is not None:
@@ -737,6 +768,7 @@ def _rank_main(rank: int, cfg: dict) -> None:
     store = build_store(spec)
     server = None
     transport = None
+    readahead = None
     owned: dict[int, object] = {}   # node -> its ScheduleExecutor
     iters: dict[int, object] = {}   # node -> that executor's plan walk
     try:
@@ -751,7 +783,8 @@ def _rank_main(rank: int, cfg: dict) -> None:
         total_steps = schedule.num_steps
 
         server = BufferServer(
-            rank, store.sample_shape, store.dtype, host=_HOST, port=0
+            rank, store.sample_shape, store.dtype, host=_HOST, port=0,
+            skew_window=window_steps,
         ).start()
         endpoints, resume_step, rejoining = ctrl.register(
             rank, server.host, server.port
@@ -779,6 +812,12 @@ def _rank_main(rank: int, cfg: dict) -> None:
         cursors: dict[int, int] = {}  # node -> next step to execute
         resliced_samples = 0
         prog_lock = threading.Lock()
+        #: current epoch window index (heartbeats carry it as the window
+        #: cursor; mutated only by the rank loop, read by the hb thread).
+        win_state = {"window": 0}
+        #: boundaries at which this rank adopted orphaned nodes — the
+        #: invariant chaos tests pin: adoption lands on window edges only.
+        adoption_boundaries: list[int] = []
 
         def _record(node: int, step_idx: int, sb, *, adopted: bool) -> None:
             nonlocal resliced_samples
@@ -794,18 +833,26 @@ def _rank_main(rank: int, cfg: dict) -> None:
 
         def _progress():
             with prog_lock:
-                return dict(cursors), bytes(agg).hex()
+                return dict(cursors), bytes(agg).hex(), win_state["window"]
 
         ctrl.progress = _progress
         ctrl.start_heartbeats()
 
-        #: node -> the primed (EpochPlan, NodeStepPlan-slice) for the step
-        #: about to run.  Priming (``next()`` on the plan walk) happens
-        #: *before* the step-start barrier because the first ``next()``
-        #: stages/restages the node's buffer mirror — peers may fetch the
-        #: moment the barrier releases, so the mirror must already be in
-        #: start-of-step state by then.
-        staged: dict[int, tuple] = {}
+        #: (node, step) -> the pulled (EpochPlan, NodeStepPlan-slice,
+        #: chunk-read futures) for steps not yet executed.  Pulling
+        #: (``next()`` on the plan walk) is pure in steady state, so the
+        #: loop runs it up to ``depth`` steps ahead and issues the chunk
+        #: reads concurrently; the first pull after a fast-forward
+        #: restages the node's buffer mirror, which is why each window's
+        #: first step is primed *before* the boundary barrier — peers may
+        #: fetch the moment the release lands.
+        prefetched: dict[tuple[int, int], tuple] = {}
+        #: node -> next step index to pull from its plan walk.
+        pulled: dict[int, int] = {}
+        readahead = (
+            WindowReadAhead(spec.num_workers)
+            if depth > 0 and spec.collect_data else None
+        )
 
         if rejoining:
             # a rejoiner owns nothing until it reclaims its slice at the
@@ -819,6 +866,7 @@ def _rank_main(rank: int, cfg: dict) -> None:
             )
             owned[rank] = ex
             iters[rank] = ex.plan_steps()
+            pulled[rank] = int(resume_step)
 
         def _adopt(node: int, from_step: int, boundary: int) -> None:
             """Take over ``node``'s plan: rebuild its mirror at the current
@@ -856,7 +904,12 @@ def _rank_main(rank: int, cfg: dict) -> None:
                 # prime the boundary step now — with zero catch-up this
                 # first next() performs the coalesced restage, which must
                 # finish before the node becomes fetchable.
-                staged[node] = next(it)
+                cep, csp = next(it)
+                prefetched[(node, boundary)] = (cep, csp, None)
+                pulled[node] = boundary + 1
+            else:
+                pulled[node] = boundary
+            adoption_boundaries.append(int(boundary))
             server.adopt(node)
 
         def _apply_release(rel: dict, boundary: int) -> None:
@@ -886,7 +939,9 @@ def _rank_main(rank: int, cfg: dict) -> None:
                         server.drop(node)
                         owned.pop(node, None)
                         iters.pop(node, None)
-                        staged.pop(node, None)
+                        pulled.pop(node, None)
+                        for key in [k for k in prefetched if k[0] == node]:
+                            del prefetched[key]
                         transport.remove_local(node)
                     if endpoint is not None and node != rank:
                         moved[node] = (str(endpoint[0]), int(endpoint[1]))
@@ -896,14 +951,21 @@ def _rank_main(rank: int, cfg: dict) -> None:
         idx = int(resume_step)
         t0 = time.perf_counter()
         while idx < total_steps:
-            for node in sorted(owned):
-                if node not in staged:
-                    staged[node] = next(iters[node])
-            # Mirror state now == start-of-step idx: publish BEFORE the
-            # barrier so every released peer finds a serving server.
-            server.at_step(idx)
-            release = ctrl.barrier(f"s:{idx}")
-            _apply_release(release, idx)
+            win_state["window"] = idx // window_steps
+            if idx % window_steps == 0:
+                # Window boundary: the ONLY synchronization point (DESIGN.md
+                # §11).  Prime each owned node's first step before
+                # publishing — the first pull after a fast-forward restages
+                # the mirror, and peers may fetch the moment the release
+                # lands.
+                for node in sorted(owned):
+                    if pulled[node] <= idx:
+                        cep, csp = next(iters[node])
+                        prefetched[(node, idx)] = (cep, csp, None)
+                        pulled[node] = idx + 1
+                server.at_step(idx)
+                release = ctrl.barrier(f"s:{idx}")
+                _apply_release(release, idx)
             if crash_at is not None and idx == crash_at:
                 os._exit(17)  # fault injection: vanish mid-step, no cleanup
             if armed is not None:
@@ -913,19 +975,40 @@ def _rank_main(rank: int, cfg: dict) -> None:
                     # heartbeats suppressed AND the step loop wedged.
                     ctrl.suppress_heartbeats(stall)
                     time.sleep(stall)
-            transport.at_step(idx)
+            # Pull ahead up to `depth` steps, clipped to the window edge,
+            # and issue their coalesced chunk reads concurrently.  The
+            # current step's reads stay synchronous (execute_step performs
+            # them); only strictly-future steps ride the read-ahead pool.
+            horizon = min(total_steps, (idx // window_steps + 1) * window_steps)
+            for node in sorted(owned):
+                tgt = min(idx + 1 + depth, horizon)
+                while pulled[node] < tgt:
+                    step_i = pulled[node]
+                    cep, csp = next(iters[node])
+                    futs = (
+                        readahead.submit(owned[node].store, csp)
+                        if readahead is not None and step_i > idx else None
+                    )
+                    prefetched[(node, step_i)] = (cep, csp, futs)
+                    pulled[node] = step_i + 1
+            # Inside the window ranks run skewed: no f: barrier.  The
+            # serving side's window-skew guard (history overlay for lag,
+            # bounded wait for lead) keeps every fetched byte exact, and a
+            # refusal beyond the window degrades to the PFS fallback —
+            # digest-identical either way.
+            server.at_step(idx)
+            transport.at_step(idx, window=idx // window_steps)
             gathered = {
-                node: owned[node].gather_peers(staged[node][1])
+                node: owned[node].gather_peers(prefetched[(node, idx)][1])
                 for node in sorted(owned)
             }
-            # Everyone fetched before anyone mutates (the ordering contract
-            # of repro.data.peer, stretched across processes).
-            ctrl.barrier(f"f:{idx}")
-            with server.mutating():
+            with server.mutating(idx):
                 for node in sorted(owned):
-                    cep, csp = staged.pop(node)
+                    cep, csp, futs = prefetched.pop((node, idx))
                     sb = owned[node].execute_step(
-                        cep, csp, peer_arrays=gathered[node]
+                        cep, csp,
+                        chunk_arrays=WindowReadAhead.collect(futs),
+                        peer_arrays=gathered[node],
                     )
                     if sb.node_ids:
                         if node == rank:
@@ -942,6 +1025,13 @@ def _rank_main(rank: int, cfg: dict) -> None:
             with contextlib.suppress(OSError):
                 ctrl.heartbeat()
             idx += 1
+        # Closing barrier: without the per-step f: fence a fast rank could
+        # tear down its buffer server while a peer up to `depth` steps
+        # behind still fetches from it.  One extra rendezvous pins the
+        # teardown to the run's true end (and lets a death in the final
+        # window re-slice here, on a boundary, like any other).
+        release = ctrl.barrier(f"s:{total_steps}")
+        _apply_release(release, total_steps)
         wall = time.perf_counter() - t0
 
         summary: dict = {}
@@ -963,7 +1053,7 @@ def _rank_main(rank: int, cfg: dict) -> None:
                     served_by_source[int(k)] = (
                         served_by_source.get(int(k), 0) + int(v)
                     )
-        cursors_snap, agg_hex = _progress()
+        cursors_snap, agg_hex, _ = _progress()
         ctrl.report({
             "rank": rank,
             "digest": h.hexdigest(),
@@ -982,8 +1072,14 @@ def _rank_main(rank: int, cfg: dict) -> None:
             "faults_fired": armed.summary() if armed is not None else {},
             "rejoined": bool(rejoining),
             "wall_time_s": round(wall, 4),
+            "cursors": {str(k): int(v) for k, v in cursors_snap.items()},
+            "window_steps": int(window_steps),
+            "max_observed_skew": int(server.max_observed_skew),
+            "adoption_boundaries": [int(b) for b in adoption_boundaries],
         })
     finally:
+        if readahead is not None:
+            readahead.close()
         if server is not None:
             server.close()
         if transport is not None:
@@ -1028,6 +1124,20 @@ class RankResult:
     last_heartbeat_age_s: float | None = None
     wall_time_s: float = 0.0
     exitcode: int | None = None
+    #: final per-node progress cursors (node -> next step index).
+    cursors: dict[int, int] = dataclasses.field(default_factory=dict)
+    #: the epoch-window length the rank ran with (``prefetch_depth + 1``).
+    window_steps: int = 1
+    #: widest requester-vs-server step skew the rank's buffer server
+    #: actually observed while serving windowed fetches.
+    max_observed_skew: int = 0
+    #: window boundaries at which this rank adopted orphaned nodes.
+    adoption_boundaries: list[int] = dataclasses.field(default_factory=list)
+
+    def window_cursors(self) -> dict[int, list[int]]:
+        """Each node's cursor as a ``[window, step-in-window]`` pair."""
+        w = max(int(self.window_steps), 1)
+        return {n: [c // w, c % w] for n, c in sorted(self.cursors.items())}
 
 
 @dataclasses.dataclass
@@ -1110,6 +1220,13 @@ class DistributedReport:
             "rejoins": self.rejoins,
             "false_suspects": self.false_suspects,
             "peer_suspicions": self.peer_suspicions,
+            "stale_refusal_fallbacks": sum(
+                int(r.transport.get("stale_refusal_fallbacks", 0))
+                for r in self.ranks
+            ),
+            "max_observed_skew": max(
+                (r.max_observed_skew for r in self.ranks), default=0
+            ),
             **ladder,
             "served_by_source": {str(k): serving[k] for k in sorted(serving)},
             **agg,
@@ -1126,6 +1243,15 @@ class DistributedReport:
                     "faults_fired": r.faults_fired,
                     "last_heartbeat_age_s": r.last_heartbeat_age_s,
                     "wall_time_s": r.wall_time_s,
+                    # window-aware progress: each node's final cursor as a
+                    # (window, step-in-window) pair, plus the widest fetch
+                    # skew this rank's server actually served.
+                    "window_steps": r.window_steps,
+                    "window_cursors": {
+                        str(n): wc for n, wc in r.window_cursors().items()
+                    },
+                    "max_observed_skew": r.max_observed_skew,
+                    "adoption_boundaries": r.adoption_boundaries,
                     **{k: r.summary.get(k) for k in agg_keys},
                 }
                 for r in self.ranks
@@ -1173,8 +1299,11 @@ def run_distributed(
     The spec must be **path-based** (each rank reopens the store through the
     backend registry — an open store handle cannot cross a spawn boundary)
     and is normalized for the ranks: ``transport="socket"``,
-    ``collect_data=True``, synchronous stepping (the barrier protocol owns
-    the step cadence, so ``prefetch_depth`` is forced to 0 inside ranks).
+    ``collect_data=True``.  ``spec.prefetch_depth`` selects the epoch-window
+    cadence (DESIGN.md §11): ranks barrier only every ``depth + 1`` steps
+    and run skewed inside the window with that many steps of chunk reads in
+    flight; ``0`` degenerates to one-barrier-per-step lockstep.  The
+    resulting digests are depth-invariant.
 
     Fault injection: ``die_at_step`` maps rank -> global step index at
     which that rank is killed mid-step (``os._exit``); ``faults`` takes a
@@ -1214,11 +1343,14 @@ def run_distributed(
             "reopens the store itself; a live store handle cannot be "
             "shipped to a spawned process"
         )
+    # prefetch_depth=0 keeps execute() returning a bare ScheduleExecutor —
+    # the rank loop drives the window cadence itself (cfg["prefetch_depth"]).
     child_spec = spec.replace(
         transport="socket", collect_data=True, prefetch_depth=0,
         plan_cache=None, plan_path=None,
     )
     child_spec.validate()
+    prefetch_depth = max(int(spec.prefetch_depth), 0)
     if schedule is None:
         schedule = plan_fn(spec)
     if schedule.num_nodes != spec.num_nodes:
@@ -1244,6 +1376,7 @@ def run_distributed(
         heartbeat_interval_s=heartbeat_interval_s,
         suspect_timeout_s=suspect_timeout_s,
         probe_grace_s=probe_grace_s,
+        window_steps=prefetch_depth + 1,
     ).start()
     ctx = multiprocessing.get_context("spawn")
     procs: list = []
@@ -1262,6 +1395,7 @@ def run_distributed(
                 "heartbeat_interval_s": heartbeat_interval_s,
                 "die_at_step": (die_at_step or {}).get(rank),
                 "fault_plan": faults,
+                "prefetch_depth": prefetch_depth,
                 # per-rank jitter streams stay decorrelated and seeded.
                 "retry": _dc.replace(base_retry, seed=base_retry.seed + rank),
             }
@@ -1363,6 +1497,15 @@ def run_distributed(
                 rejoined=bool(rep.get("rejoined", False)),
                 wall_time_s=float(rep.get("wall_time_s", 0.0)),
                 exitcode=exitcode,
+                cursors={
+                    int(k): int(v)
+                    for k, v in dict(rep.get("cursors", {})).items()
+                },
+                window_steps=int(rep.get("window_steps", 1)),
+                max_observed_skew=int(rep.get("max_observed_skew", 0)),
+                adoption_boundaries=[
+                    int(b) for b in rep.get("adoption_boundaries", ())
+                ],
             ))
     return DistributedReport(
         num_ranks=spec.num_nodes, ranks=results,

@@ -8,25 +8,35 @@ arena over the wire protocol (:mod:`repro.runtime.wire`).
 Correctness rests on two guards, both enforced *inside* :attr:`guard` (the
 lock shared with the executor's delta application):
 
-  * **step guard**: a FETCH carries the requester's global step index; the
-    server serves only while :meth:`at_step` has published that exact index
-    — i.e. while its mirror provably reflects the start-of-step state the
-    plan priced (DESIGN.md §6's ordering contract, stretched across
-    processes).  A fetch racing its source's eviction — arriving after the
-    source began applying that step's deltas — is answered with an all-False
-    mask, so the requester falls back to the PFS instead of receiving bytes
-    from a recycled arena slot.
+  * **step guard** (legacy ``MSG_FETCH``): a FETCH carries the requester's
+    global step index; the server serves only while :meth:`at_step` has
+    published that exact index — i.e. while its mirror provably reflects
+    the start-of-step state the plan priced (DESIGN.md §6's ordering
+    contract, stretched across processes).  A fetch racing its source's
+    eviction — arriving after the source began applying that step's deltas
+    — is answered with an all-False mask, so the requester falls back to
+    the PFS instead of receiving bytes from a recycled arena slot.
+  * **window-skew guard** (``MSG_FETCHW``, DESIGN.md §11): under the
+    epoch-window protocol ranks barrier only on window boundaries, so a
+    requester may be up to ``skew_window`` steps away from this server.
+    The guard serves any step inside the live window from the *matching*
+    snapshot: a requester *behind* this server is served from the current
+    mirror overlaid with the bounded eviction history (:meth:`mutating`
+    records what each step's delta replay evicted); a requester *ahead*
+    waits (bounded by ``skew_wait_s``) for this rank's executor to reach
+    its step.  A fetch beyond the window — or one whose wait expires — is
+    refused as stale, never mis-served: sample rows are immutable by id,
+    so every byte the guard does serve is bit-identical to the lockstep
+    run.
   * **mutation lock**: row lookup + copy-out happen under :attr:`guard`;
     the rank's executor applies its admission/eviction deltas under the
-    same lock (:meth:`mutating`).  Between the launcher's step barriers no
-    one mutates while peers fetch, so the lock is uncontended in the happy
-    path — it exists to make the *unhappy* paths (late packets, a dead
-    coordinator) refuse instead of corrupt.
+    same lock (:meth:`mutating`), so a fetch never observes a half-applied
+    delta or a recycled arena slot.
 
 A server that has not been :meth:`attach`-ed to a mirror yet, or whose
-published step does not match, is not an error — it answers "nothing
-served" and the requester degrades to PFS reads, the same fallback contract
-as every other failure in the tier.
+published step falls outside the guard, is not an error — it answers
+"nothing served" and the requester degrades to PFS reads, the same fallback
+contract as every other failure in the tier.
 """
 from __future__ import annotations
 
@@ -64,19 +74,40 @@ class BufferServer:
         host: str = "127.0.0.1",
         port: int = 0,
         accept_timeout_s: float = 0.1,
+        skew_window: int = 0,
+        skew_wait_s: float = 2.0,
     ):
         self.node = int(node)
         self.sample_shape = tuple(int(x) for x in sample_shape)
         self.dtype = np.dtype(dtype)
         #: lock shared by fetch handlers and the executor's delta replay.
         self.guard = threading.Lock()
+        #: signalled whenever :attr:`_applied` advances — windowed fetches
+        #: from a requester ahead of this rank park here.
+        self._advanced = threading.Condition(self.guard)
         #: nodes this server currently speaks for: its own rank plus any
         #: adopted after a re-slice (elastic recovery, DESIGN.md §9).
         self.serving: set[int] = {self.node}
         self._mirror_of = None
         self._step = _PAUSED
-        #: fetches refused because the step guard fired (observability).
+        #: number of step-delta replays applied: the mirrors reflect the
+        #: start-of-step ``_applied`` state (windowed guard's clock).
+        self._applied = 0
+        #: max steps of requester/server skew the windowed guard serves
+        #: (``window_steps`` of the epoch-window protocol; 0 = exact-step
+        #: only, the lockstep degenerate case).
+        self.skew_window = int(skew_window)
+        #: how long a windowed fetch for a *future* step may wait for this
+        #: rank's executor to catch up before being refused as stale.
+        self.skew_wait_s = float(skew_wait_s)
+        #: node -> step -> (ids, rows) evicted by that step's delta replay;
+        #: retained for the last ``skew_window`` steps so requesters behind
+        #: this server still get start-of-their-step rows.
+        self._history: dict[int, dict[int, list]] = {}
+        #: fetches refused because the step/window guard fired.
         self.stale_refusals = 0
+        #: largest requester/server skew the windowed guard actually served.
+        self.max_observed_skew = 0
         self._accept_timeout_s = float(accept_timeout_s)
         self._closed = threading.Event()
         self._threads: list[threading.Thread] = []
@@ -101,6 +132,8 @@ class BufferServer:
         if self._closed.is_set():
             return
         self._closed.set()
+        with self._advanced:  # unpark windowed fetches waiting on progress
+            self._advanced.notify_all()
         with contextlib.suppress(OSError):
             self._listener.close()
         for conn in self._conns:  # sever live peers so handlers unblock
@@ -133,16 +166,46 @@ class BufferServer:
 
     def at_step(self, step: int) -> None:
         """Publish that the mirror now reflects start-of-step ``step``."""
-        with self.guard:
+        with self._advanced:
             self._step = int(step)
+            self._applied = int(step)
+            self._advanced.notify_all()
 
     @contextlib.contextmanager
-    def mutating(self):
-        """Scope for the executor's delta application: serving is refused
-        (step guard pauses) and the mirror is exclusively held throughout."""
-        with self.guard:
+    def mutating(self, step: int | None = None):
+        """Scope for the executor's delta application: the mirror is
+        exclusively held throughout and the legacy step guard pauses.
+
+        With ``step`` given (the epoch-window protocol), everything the
+        replay evicts is captured into the bounded history and the windowed
+        clock advances to ``step + 1`` on exit — peers still gathering
+        ``step`` (or earlier, within the skew window) keep being served
+        from the correct snapshot instead of being refused.
+        """
+        with self._advanced:
             self._step = _PAUSED
-            yield
+            sinks: list[tuple[int, list, object]] = []
+            if step is not None and self.skew_window > 0 and self._mirror_of:
+                for node in sorted(self.serving):
+                    mirror = self._mirror_of(node)
+                    if mirror is not None:
+                        sink: list = []
+                        mirror.evict_sink = sink
+                        sinks.append((node, sink, mirror))
+            try:
+                yield
+            finally:
+                for node, sink, mirror in sinks:
+                    mirror.evict_sink = None
+                    if sink:
+                        self._history.setdefault(node, {})[int(step)] = sink
+                if step is not None:
+                    self._applied = int(step) + 1
+                    floor = self._applied - self.skew_window
+                    for per_node in self._history.values():
+                        for s in [s for s in per_node if s < floor]:
+                            del per_node[s]
+                    self._advanced.notify_all()
 
     def adopt(self, node: int) -> None:
         """Start answering fetches for ``node`` (this rank adopted it).
@@ -161,8 +224,10 @@ class BufferServer:
         refusal ("not serving node"), retries, and lands on the new owner
         once its address book update arrives.
         """
-        with self.guard:
+        with self._advanced:
             self.serving.discard(int(node))
+            self._history.pop(int(node), None)
+            self._advanced.notify_all()
 
     # -- serving side ----------------------------------------------------------
 
@@ -195,7 +260,7 @@ class BufferServer:
                     serve_node = self._handle_hello(conn, payload)
                     if serve_node is None:
                         return
-                elif msg_type == wire.MSG_FETCH:
+                elif msg_type in (wire.MSG_FETCH, wire.MSG_FETCHW):
                     if serve_node is None:
                         # geometry was never negotiated on this connection:
                         # serving anyway could hand out same-row-size bytes
@@ -205,7 +270,10 @@ class BufferServer:
                             b"FETCH before HELLO: negotiate geometry first",
                         )
                         return
-                    self._handle_fetch(conn, payload, serve_node)
+                    if msg_type == wire.MSG_FETCHW:
+                        self._handle_fetchw(conn, payload, serve_node)
+                    else:
+                        self._handle_fetch(conn, payload, serve_node)
                 else:
                     wire.send_frame(
                         conn, wire.MSG_ERROR,
@@ -279,6 +347,84 @@ class BufferServer:
                 self.stale_refusals += int(
                     mirror is not None and self._step != step
                 )
+                ok = np.zeros(ids.size, bool)
+                rows = np.empty((0,) + self.sample_shape, self.dtype)
+        wire.send_frame(
+            conn, wire.MSG_ROWS, wire.pack_rows(ok, rows), site="server.rows"
+        )
+
+    def _handle_fetchw(
+        self, conn: socket.socket, payload: bytes, serve_node: int
+    ) -> None:
+        """Serve one windowed fetch under the window-skew guard.
+
+        A requester *ahead* of this rank parks on :attr:`_advanced` until
+        the executor's delta replay reaches its step (bounded by
+        ``skew_wait_s`` — a dead or wedged rank must refuse, not hang the
+        peer).  A requester *behind* is served from the current mirror with
+        the bounded eviction history overlaid, reconstructing exactly the
+        start-of-its-step snapshot.  Anything outside ``skew_window`` is a
+        stale refusal: all-False mask, PFS fallback, never wrong bytes.
+        """
+        window, step, ids = wire.unpack_fetchw(payload)
+        delay = faults.on_serve()
+        if delay > 0:
+            time.sleep(delay)  # injected slow-peer latency (chaos harness)
+        with self._advanced:
+            deadline = time.monotonic() + self.skew_wait_s
+            while (
+                not self._closed.is_set()
+                and self._mirror_of is not None
+                and serve_node in self.serving
+                and self._applied < step
+            ):
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    break
+                self._advanced.wait(timeout=remaining)
+            mirror = (
+                self._mirror_of(serve_node)
+                if self._mirror_of is not None and serve_node in self.serving
+                else None
+            )
+            lag = self._applied - int(step)
+            # the window tag must agree with the step under this server's
+            # window geometry — a frame from a peer running a different
+            # window size (mixed restart, bad config) is refused, never
+            # guessed at.
+            tag_ok = self.skew_window <= 0 or (
+                int(window) == int(step) // self.skew_window
+            )
+            if mirror is not None and tag_ok and 0 <= lag <= self.skew_window:
+                self.max_observed_skew = max(self.max_observed_skew, lag)
+                slots = mirror.lookup(ids)
+                ok = slots >= 0
+                out = np.empty(
+                    (ids.size,) + self.sample_shape, self.dtype
+                )
+                if ok.any():
+                    out[ok] = mirror.rows(slots[ok])
+                if lag > 0 and not ok.all():
+                    # rows this server evicted after the requester's step:
+                    # replay the bounded history, newest capture wins (the
+                    # bytes are identical either way — rows are immutable
+                    # by id — only presence matters).
+                    per_node = self._history.get(serve_node, {})
+                    recovered: dict[int, np.ndarray] = {}
+                    for s in range(int(step), self._applied):
+                        for hids, hrows in per_node.get(s, ()):
+                            for j, hid in enumerate(hids.tolist()):
+                                recovered[int(hid)] = hrows[j]
+                    for j in np.flatnonzero(~ok).tolist():
+                        row = recovered.get(int(ids[j]))
+                        if row is not None:
+                            out[j] = row
+                            ok[j] = True
+                rows = out[ok] if ok.any() else np.empty(
+                    (0,) + self.sample_shape, self.dtype
+                )
+            else:
+                self.stale_refusals += int(mirror is not None)
                 ok = np.zeros(ids.size, bool)
                 rows = np.empty((0,) + self.sample_shape, self.dtype)
         wire.send_frame(

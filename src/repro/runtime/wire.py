@@ -47,10 +47,12 @@ __all__ = [
     "MSG_ROWS",
     "MSG_ERROR",
     "MSG_CTRL",
+    "MSG_FETCHW",
     "WireError",
     "TruncatedFrame",
     "ChecksumMismatch",
     "ProtocolError",
+    "StaleRefusal",
     "HandshakeError",
     "send_frame",
     "recv_frame",
@@ -58,6 +60,8 @@ __all__ = [
     "unpack_json",
     "pack_fetch",
     "unpack_fetch",
+    "pack_fetchw",
+    "unpack_fetchw",
     "pack_rows",
     "unpack_rows",
 ]
@@ -79,9 +83,18 @@ MSG_ROWS = 4
 MSG_ERROR = 5
 #: launcher control plane (register / addrbook / barrier / release / report).
 MSG_CTRL = 6
+#: client -> server: a *windowed* peer-fetch request carrying the epoch
+#: window tag alongside the step (the window-skew guard, DESIGN.md §11).
+#: A separate message type, not a payload extension of :data:`MSG_FETCH`:
+#: the legacy payload is ``(step, n) + n ids`` and the windowed one is
+#: ``(window, step, n) + n ids`` — length arithmetic alone cannot tell a
+#: windowed fetch of ``n`` ids from a legacy fetch of ``n + 1`` ids, so the
+#: type byte disambiguates and old frames keep decoding unchanged.
+MSG_FETCHW = 7
 
 _KNOWN_TYPES = frozenset(
-    (MSG_HELLO, MSG_HELLO_OK, MSG_FETCH, MSG_ROWS, MSG_ERROR, MSG_CTRL)
+    (MSG_HELLO, MSG_HELLO_OK, MSG_FETCH, MSG_ROWS, MSG_ERROR, MSG_CTRL,
+     MSG_FETCHW)
 )
 
 _HEADER = struct.Struct("!4sBBQ")
@@ -105,6 +118,15 @@ class ChecksumMismatch(WireError):
 
 class ProtocolError(WireError):
     """Structurally invalid bytes: bad magic, version, type, or length."""
+
+
+class StaleRefusal(WireError):
+    """The server refused because the fetch fell outside its live skew
+    window (or it no longer speaks for the node) — *expected* under the
+    epoch-window protocol, e.g. mid ownership transition.  Transports fall
+    back to the PFS but must not charge the failure ladder: a stale refusal
+    is a healthy guard firing, not a peer fault.
+    """
 
 
 class HandshakeError(RuntimeError):
@@ -251,6 +273,34 @@ def unpack_fetch(payload: bytes) -> tuple[int, np.ndarray]:
             f"FETCH declares {n} ids but carries {len(body)} payload bytes"
         )
     return step, np.frombuffer(body, dtype="<i8").astype(np.int64)
+
+
+_FETCHW = struct.Struct("!qqq")
+
+
+def pack_fetchw(window: int, step: int, ids: np.ndarray) -> bytes:
+    """FETCHW payload: epoch window tag + global step index + wanted ids.
+
+    The windowed form of :func:`pack_fetch` (DESIGN.md §11): the server's
+    window-skew guard serves any step inside its live window from the
+    matching snapshot (bounded eviction history) and refuses anything
+    beyond it as stale.  Rides its own message type (:data:`MSG_FETCHW`) so
+    legacy ``MSG_FETCH`` frames stay unambiguous and fully supported.
+    """
+    ids = np.ascontiguousarray(np.asarray(ids, dtype="<i8"))
+    return _FETCHW.pack(int(window), int(step), ids.size) + ids.tobytes()
+
+
+def unpack_fetchw(payload: bytes) -> tuple[int, int, np.ndarray]:
+    if len(payload) < _FETCHW.size:
+        raise ProtocolError("short FETCHW payload")
+    window, step, n = _FETCHW.unpack_from(payload)
+    body = payload[_FETCHW.size:]
+    if n < 0 or len(body) != n * 8:
+        raise ProtocolError(
+            f"FETCHW declares {n} ids but carries {len(body)} payload bytes"
+        )
+    return window, step, np.frombuffer(body, dtype="<i8").astype(np.int64)
 
 
 def pack_rows(ok: np.ndarray, rows: np.ndarray) -> bytes:

@@ -14,9 +14,13 @@ control plane (:mod:`repro.runtime.launcher`):
     refuses a segment it cannot verify (same trust model as the offline
     launcher's plan distribution);
   * ranks cut over at the same step boundary: all ranks barrier on
-    ``w:k`` after verifying + chaining window ``k`` and before executing
-    its first step, so no rank can run ahead into a window a peer has not
-    received;
+    ``w:k`` after verifying + chaining window ``k`` and before *consuming*
+    its first batch, so no rank's training loop can run ahead into a
+    window a peer has not received.  With ``spec.prefetch_depth > 0`` each
+    rank's :class:`~repro.data.prefetch.PrefetchExecutor` may *read ahead*
+    into a window this rank has already verified and chained (bounded by
+    the depth and the chained schedule's edge) — pure store reads only, so
+    the consumed batch stream and its digest are depth-invariant;
   * the parent paces its lookahead on those barriers — window ``k+1`` is
     sealed and planned while the ranks replay window ``k``, never further
     ahead — which is the distributed form of overlapped window planning.
@@ -222,7 +226,12 @@ def run_stream_distributed(
 
     ss = spec.stream
     planner = WindowPlanner.for_spec(spec)
-    child_spec = spec.replace(collect_data=True, prefetch_depth=0)
+    # prefetch_depth rides into the ranks: execute() wraps each rank's
+    # executor in a PrefetchExecutor whose stream_steps_ready probe caps
+    # the pipeline at the chained schedule's edge, so read-ahead composes
+    # with the w:k cutover barriers (and digests stay depth-invariant —
+    # streaming ranks have no peer tier, only pure store reads to overlap).
+    child_spec = spec.replace(collect_data=True)
     own_dir = run_dir is None
     if own_dir:
         run_dir = tempfile.mkdtemp(prefix="solar_stream_")

@@ -407,3 +407,65 @@ def test_transport_retry_recovers_from_one_reset():
         faults.disarm()
         transport.close()
         server.close()
+
+
+# ---------------------------------------------------------------------------
+# Seeded chaos at nonzero prefetch depth (PR 8 satellite)
+# ---------------------------------------------------------------------------
+#
+# The epoch-window protocol's recovery contract under *compound* faults:
+# whatever a seeded FaultPlan throws at a depth-4 run (a crash plus dial
+# resets plus slow stalls), orphaned slices are only ever adopted on a
+# window boundary (a mid-window adoption would double-execute live steps
+# and XOR-cancel them out of the aggregate), and the run's XOR aggregate
+# stays bit-identical to the single-process reference — exactly-once
+# execution, skew notwithstanding.
+
+
+def _chaos_spec(tmp_path):
+    from repro.core.scheduler import SolarConfig
+    from repro.data import DatasetSpec, LoaderSpec, create_store
+
+    path = str(tmp_path / "chaos")
+    import os
+    if not os.path.exists(path):
+        create_store(
+            path, "binary", spec=DatasetSpec(1024, (8,), "<f4"),
+            fill="arange",
+        ).close()
+    solar = SolarConfig(
+        num_nodes=4, local_batch=16, buffer_size=256, seed=0,
+        capacity_factor=1.0, enable_peer=True,
+    )
+    return LoaderSpec(
+        loader="solar", backend="binary", path=path, num_nodes=4,
+        local_batch=16, num_epochs=2, buffer_size=256, collect_data=True,
+        peer_fetch=True, solar=solar, transport="socket", prefetch_depth=4,
+    )
+
+
+@pytest.mark.dist
+@pytest.mark.parametrize("seed", [3, 11])
+def test_windowed_chaos_adopts_on_boundaries_and_keeps_aggregate(
+    tmp_path, seed
+):
+    from repro.runtime.launcher import (
+        in_process_aggregate, in_process_digests, run_distributed,
+    )
+
+    plan = FaultPlan.compile(
+        seed, 4, crashes=1, resets=2, slow=1, spare_rank=0
+    )
+    spec = _chaos_spec(tmp_path)
+    report = run_distributed(spec, timeout_s=240.0, faults=plan)
+    assert report.aggregate_digest() == in_process_aggregate(spec)
+    boundaries = [
+        b for r in report.ranks for b in r.adoption_boundaries
+    ]
+    if report.dead:
+        assert boundaries, "a death must hand its slice to a survivor"
+    assert all(b % 5 == 0 for b in boundaries), boundaries
+    ref = in_process_digests(spec)
+    for r in report.ranks:
+        if r.status == "ok" and not r.rejoined:
+            assert r.digest == ref[r.rank], f"rank {r.rank} corrupted"

@@ -327,6 +327,38 @@ def test_stream_distributed_two_ranks_digest_parity(tmp_path):
     assert rep.verify["plan_parity"] and rep.verify["rank_parity"]
 
 
+@pytest.mark.dist
+def test_stream_distributed_with_prefetch_depth_digest_parity(tmp_path):
+    """Async prefetch inside streaming ranks (PR 8 satellite): with
+    ``prefetch_depth > 0`` each rank's PrefetchExecutor reads ahead into
+    its already-chained windows while the main thread waits at the w:k
+    cutover barriers — and the digests still match the offline replan and
+    the in-process reference bit for bit."""
+    from repro.data import build_store
+    from repro.stream.distributed import run_stream_distributed
+
+    spec = LoaderSpec(
+        loader="stream", backend="sharded", path=str(tmp_path / "shard"),
+        num_nodes=2, local_batch=4, buffer_size=64, seed=0,
+        collect_data=True, prefetch_depth=2,
+        stream=StreamSpec(window_steps=4, watermark=0, max_windows=3),
+    )
+    store = build_store(
+        spec, create=True, dataset=DatasetSpec(256, (8,), "<f4"),
+        fill="zeros",
+    )
+    try:
+        sess = IngestSession(store, seed=0, admission="all", max_pending=256)
+        _feed(sess, range(256), threads=2)
+        rep = run_stream_distributed(spec, sess, verify=True, timeout_s=240.0)
+    finally:
+        store.close()
+    assert not rep.dead, f"dead ranks: {rep.dead}"
+    assert rep.windows == 3 and rep.steps == 12
+    assert rep.ok, rep.verify
+    assert rep.verify["plan_parity"] and rep.verify["rank_parity"]
+
+
 # ---------------------------------------------------------------------------
 # Satellite: PlanCache under concurrent writers
 # ---------------------------------------------------------------------------

@@ -1,0 +1,373 @@
+"""Epoch-window skew protocol (DESIGN.md §11) — the PR's determinism bar.
+
+Three layers, bottom up:
+
+  * **wire**: the versioned ``MSG_FETCHW`` frame (window tag + step + ids)
+    round-trips, validates its payload, and coexists with the legacy
+    ``MSG_FETCH`` frame byte for byte (old peers keep working).
+  * **window-skew guard**: property tests against a live
+    :class:`~repro.runtime.server.BufferServer` over a real
+    :class:`~repro.data.loaders._DataMirror` — any fetch inside the
+    allowed skew is served bit-identical start-of-its-step bytes (current
+    mirror + bounded eviction history), anything beyond the window is
+    refused all-False (PFS fallback), and *no* served byte is ever wrong.
+    With hypothesis installed the sweep runs under ``@given``; without it
+    a seeded deterministic sweep exercises the same check function.
+  * **distributed digests**: real rank processes at prefetch depth
+    {0, 1, 2, 4} × {2, 4} ranks produce per-rank stream digests
+    bit-identical to the depth-0 in-process reference — the protocol's
+    skew is invisible in the trained bytes.
+"""
+import socket
+import threading
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - depends on the environment
+    HAVE_HYPOTHESIS = False
+
+from repro.core.scheduler import SolarConfig
+from repro.data import DatasetSpec, LoaderSpec, SocketTransport, create_store
+from repro.data.loaders import _DataMirror
+from repro.data.peer import RetryPolicy
+from repro.runtime import wire
+from repro.runtime.launcher import in_process_digests, run_distributed
+from repro.runtime.server import BufferServer
+
+
+# ---------------------------------------------------------------------------
+# Wire: MSG_FETCHW framing + legacy coexistence
+# ---------------------------------------------------------------------------
+
+
+def _pipe():
+    a, b = socket.socketpair()
+    a.settimeout(2.0)
+    b.settimeout(2.0)
+    return a, b
+
+
+def test_fetchw_roundtrip():
+    a, b = _pipe()
+    try:
+        ids = np.asarray([3, 1, 4, 1, 5], np.int64)
+        wire.send_frame(a, wire.MSG_FETCHW, wire.pack_fetchw(2, 11, ids))
+        msg_type, payload = wire.recv_frame(b)
+        assert msg_type == wire.MSG_FETCHW
+        window, step, got = wire.unpack_fetchw(payload)
+        assert (window, step) == (2, 11)
+        assert np.array_equal(got, ids)
+    finally:
+        a.close()
+        b.close()
+
+
+def test_fetchw_is_a_distinct_message_type():
+    """The windowed frame extends FETCH with one more int64 — which makes
+    the *payload length* ambiguous between ``(step, n ids)`` and
+    ``(window, step, n-1 ids)``.  Only a distinct type byte disambiguates,
+    so the constants must never collide (and both must be known frames)."""
+    assert wire.MSG_FETCHW != wire.MSG_FETCH
+    assert wire.MSG_FETCHW in wire._KNOWN_TYPES
+    assert wire.MSG_FETCH in wire._KNOWN_TYPES
+
+
+def test_fetchw_payload_validation():
+    with pytest.raises(wire.ProtocolError, match="FETCHW"):
+        wire.unpack_fetchw(b"\x00" * 8)  # shorter than the fixed header
+    good = wire.pack_fetchw(0, 3, np.asarray([7, 8], np.int64))
+    with pytest.raises(wire.ProtocolError, match="FETCHW"):
+        wire.unpack_fetchw(good[:-4])  # id vector cut short
+    window, step, ids = wire.unpack_fetchw(good)
+    assert (window, step, ids.tolist()) == (0, 3, [7, 8])
+
+
+def test_legacy_fetch_frames_are_unchanged():
+    """Old-style peers speak exact-step MSG_FETCH; its encoding (and the
+    wire version) must not move under the windowed extension."""
+    ids = np.asarray([9, 2], np.int64)
+    payload = wire.pack_fetch(4, ids)
+    assert payload == wire._FETCH.pack(4, 2) + ids.astype("<i8").tobytes()
+    step, got = wire.unpack_fetch(payload)
+    assert step == 4 and np.array_equal(got, ids)
+    assert wire.WIRE_VERSION == 1
+
+
+# ---------------------------------------------------------------------------
+# Window-skew guard: property tests over a live server + real mirror
+# ---------------------------------------------------------------------------
+
+_SHAPE = (4,)
+_ABSENT_BASE = 10_000  # ids from here up are never admitted anywhere
+
+
+def _row(sample_id: int) -> np.ndarray:
+    """The immutable global row for ``sample_id`` (value == id)."""
+    return np.full(_SHAPE, float(sample_id), "<f4")
+
+
+def _rows(ids) -> np.ndarray:
+    return np.stack([_row(int(s)) for s in ids])
+
+
+class _WindowHarness:
+    """One serving rank's mirror + server + a windowed client transport."""
+
+    def __init__(self, skew_window: int, skew_wait_s: float = 0.5):
+        self.mirror = _DataMirror(256, _SHAPE, np.dtype("<f4"))
+        self.server = BufferServer(
+            0, _SHAPE, "<f4", port=0,
+            skew_window=skew_window, skew_wait_s=skew_wait_s,
+        ).start()
+        self.server.attach(lambda node: self.mirror)
+        self.transport = SocketTransport(
+            {0: (self.server.host, self.server.port)}, timeout_s=2.0,
+            sample_shape=_SHAPE, dtype="<f4",
+            retry=RetryPolicy(max_attempts=1, backoff_base_s=0.001),
+        )
+
+    def close(self):
+        self.transport.close()
+        self.server.close()
+
+    def fetch_at(self, step: int, window: int, ids):
+        self.transport.at_step(step, window=window)
+        return self.transport.fetch(0, np.asarray(ids, np.int64))
+
+
+def _check_window_guard(seed: int) -> None:
+    """One randomized mutation walk; the invariants the protocol stands on:
+
+      1. every id resident at the requester's step start is served, for any
+         lag in ``[0, skew_window]`` — evicted-since rows come back from
+         the bounded history, bit-identical;
+      2. every served byte equals the immutable global row (never wrong
+         bytes, whatever the skew);
+      3. a fetch beyond the window, or with a mismatched window tag, is
+         refused all-False and counted — never guessed at.
+    """
+    rng = np.random.default_rng(seed)
+    w = int(rng.integers(1, 5))
+    steps = int(rng.integers(w + 1, w + 5))
+    h = _WindowHarness(skew_window=w)
+    try:
+        universe = np.arange(128, dtype=np.int64)
+        resident = set(
+            int(s) for s in rng.choice(universe, size=48, replace=False)
+        )
+        h.mirror.admit(sorted(resident), _rows(sorted(resident)))
+        h.server.at_step(0)
+        start_of_step = {0: set(resident)}
+        for s in range(steps):
+            with h.server.mutating(s):
+                gone = [
+                    int(x) for x in rng.choice(
+                        sorted(resident),
+                        size=int(rng.integers(1, 6)), replace=False,
+                    )
+                ]
+                h.mirror.evict(gone)
+                resident.difference_update(gone)
+                fresh = [
+                    int(x) for x in universe
+                    if x not in resident
+                ][: int(rng.integers(0, 5))]
+                if fresh:
+                    h.mirror.admit(sorted(fresh), _rows(sorted(fresh)))
+                    resident.update(fresh)
+            start_of_step[s + 1] = set(resident)
+
+        # 1 + 2: every lag inside the window serves the step-start snapshot
+        for lag in range(0, w + 1):
+            r = steps - lag
+            want = sorted(start_of_step[r])[:12] + [
+                _ABSENT_BASE + int(rng.integers(64))
+            ]
+            rows, ok = h.fetch_at(r, r // w, want)
+            assert ok[:-1].all(), (
+                f"seed {seed}: lag {lag} lost resident ids "
+                f"{[i for i, o in zip(want, ok) if not o]}"
+            )
+            assert not ok[-1], "a never-resident id must not be served"
+            served = np.asarray(want)[ok]
+            assert np.array_equal(rows, _rows(served)), (
+                f"seed {seed}: wrong bytes at lag {lag}"
+            )
+
+        # 3a: one step beyond the window is a refusal, not a guess
+        before = h.server.stale_refusals
+        if steps - w - 1 >= 0:
+            r = steps - w - 1
+            rows, ok = h.fetch_at(r, r // w, sorted(start_of_step[r])[:4])
+            assert not ok.any() and rows.shape[0] == 0
+            assert h.server.stale_refusals == before + 1
+
+        # 3b: a mismatched window tag (mixed geometry) is refused too
+        before = h.server.stale_refusals
+        r = steps
+        rows, ok = h.fetch_at(r, r // w + 1, sorted(start_of_step[r])[:4])
+        assert not ok.any()
+        assert h.server.stale_refusals == before + 1
+    finally:
+        h.close()
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+    def test_window_skew_guard_property(seed):
+        _check_window_guard(seed)
+
+else:
+
+    @pytest.mark.parametrize("seed", range(8))
+    def test_window_skew_guard_property(seed):
+        _check_window_guard(seed)
+
+
+def test_requester_ahead_waits_for_the_executor_bounded():
+    """A fetch for a step this server has not reached parks (bounded) on
+    the mutation clock: if the executor catches up in time it is served,
+    and if it never does the fetch is refused — not hung."""
+    h = _WindowHarness(skew_window=2, skew_wait_s=0.4)
+    try:
+        h.mirror.admit([1, 2, 3], _rows([1, 2, 3]))
+        h.server.at_step(0)
+        with h.server.mutating(0):
+            pass
+        # executor is at step 1; requester asks for step 2 of window 1
+        t = threading.Timer(0.1, lambda: h.server.at_step(2))
+        t.start()
+        try:
+            rows, ok = h.fetch_at(2, 1, [1, 3])
+        finally:
+            t.join()
+        assert ok.all(), "catch-up within the wait budget must serve"
+        assert np.array_equal(rows, _rows([1, 3]))
+
+        # now nobody advances the clock: bounded refusal, no hang
+        before = h.server.stale_refusals
+        rows, ok = h.fetch_at(4, 2, [1])
+        assert not ok.any()
+        assert h.server.stale_refusals == before + 1
+    finally:
+        h.close()
+
+
+def test_stale_refusals_never_charge_the_breaker():
+    """PR 8 satellite: a window-skew refusal is *expected* protocol
+    behaviour — it must degrade to the PFS fallback without opening the
+    circuit breaker or escalating a suspicion against a healthy peer."""
+    escalated = []
+    h = _WindowHarness(skew_window=1, skew_wait_s=0.05)
+    h.transport._escalate = escalated.append
+    try:
+        h.mirror.admit([5, 6], _rows([5, 6]))
+        h.server.at_step(0)
+        with h.server.mutating(0):
+            pass
+        # (a) beyond-window refusal rides a ROWS frame: transport success
+        for _ in range(4):
+            rows, ok = h.fetch_at(8, 8, [5])
+            assert not ok.any()
+        # (b) an ownership-transition HELLO refusal is a StaleRefusal:
+        # retried, then a *counted* fallback — still no breaker charge
+        h.server.drop(0)
+        h.transport.close()  # force a re-dial into the refusing server
+        for _ in range(3):
+            rows, ok = h.fetch_at(1, 1, [5])
+            assert not ok.any()
+        stats = h.transport.stats()
+        assert stats["stale_refusal_fallbacks"] == 3
+        assert stats["breaker_opens"] == 0
+        assert stats["breaker_skips"] == 0
+        assert stats["escalations"] == 0 and escalated == []
+        assert h.server.stale_refusals >= 4
+    finally:
+        h.close()
+
+
+# ---------------------------------------------------------------------------
+# Distributed digest parity: depth × ranks, bit for bit
+# ---------------------------------------------------------------------------
+
+
+def _dist_spec(tmp_path, nodes, depth, *, num_samples=1024, local_batch=16,
+               buffer=256, epochs=2):
+    path = str(tmp_path / f"win_{nodes}")
+    import os
+    if not os.path.exists(path):
+        create_store(
+            path, "binary", spec=DatasetSpec(num_samples, (8,), "<f4"),
+            fill="arange",
+        ).close()
+    solar = SolarConfig(
+        num_nodes=nodes, local_batch=local_batch, buffer_size=buffer,
+        seed=0, capacity_factor=1.0, enable_peer=True,
+    )
+    return LoaderSpec(
+        loader="solar", backend="binary", path=path, num_nodes=nodes,
+        local_batch=local_batch, num_epochs=epochs, buffer_size=buffer,
+        collect_data=True, peer_fetch=True, solar=solar, transport="socket",
+        prefetch_depth=depth,
+    )
+
+
+@pytest.mark.dist
+@pytest.mark.parametrize("nodes", [2, 4])
+@pytest.mark.parametrize("depth", [0, 1, 2, 4])
+def test_depth_invariant_digest_parity(tmp_path, nodes, depth):
+    """The acceptance bar: ranks running up to ``depth`` steps skewed
+    inside their epoch windows train *exactly* the bytes of the lockstep
+    in-process reference — digest parity per rank, healthy counters, and
+    the observed skew bounded by the window."""
+    spec = _dist_spec(tmp_path, nodes, depth)
+    report = run_distributed(spec, timeout_s=240.0)
+    assert report.ok, f"dead ranks: {report.dead}"
+    assert report.digests() == in_process_digests(spec)
+    assert sum(r.peer_fallbacks for r in report.ranks) == 0
+    assert sum(r.stale_refusals for r in report.ranks) == 0
+    assert sum(r.peer_served for r in report.ranks) > 0
+    summ = report.summary()
+    # window accounting (PR 8 satellite): every rank reports its cadence
+    # and cursors in (window, step-in-window) form, and nobody ever
+    # observed more skew than the protocol allows.
+    assert summ["max_observed_skew"] <= depth + 1
+    total = None
+    for row in summ["ranks"]:
+        assert row["window_steps"] == depth + 1
+        for node, (win, off) in row["window_cursors"].items():
+            cursor = win * (depth + 1) + off
+            if total is None:
+                total = cursor
+            assert cursor == total, (
+                f"rank {row['rank']} node {node} cursor {cursor} != {total}"
+            )
+
+
+@pytest.mark.dist
+def test_windowed_run_reslices_on_window_boundaries(tmp_path):
+    """A mid-window death at depth 2: the orphan slice is adopted exactly
+    on a window edge (never mid-window — a mid-window adoption would
+    double-execute live steps and XOR-cancel them out of the aggregate),
+    and the aggregate digest stays exactly-once."""
+    from repro.runtime.launcher import in_process_aggregate
+
+    spec = _dist_spec(tmp_path, 4, 2)
+    report = run_distributed(spec, timeout_s=240.0, die_at_step={2: 5})
+    assert report.dead == [2]
+    assert report.aggregate_digest() == in_process_aggregate(spec)
+    boundaries = [
+        b for r in report.ranks for b in r.adoption_boundaries
+    ]
+    assert boundaries, "someone must have adopted the dead rank's slice"
+    assert all(b % 3 == 0 for b in boundaries), boundaries
+    ref = in_process_digests(spec)
+    for r in report.ranks:
+        if r.status == "ok":
+            assert r.digest == ref[r.rank], f"rank {r.rank} corrupted"
