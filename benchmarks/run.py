@@ -32,6 +32,7 @@ from benchmarks import (
     peer,
     pipeline,
     plan,
+    serve_tier,
     stream,
 )
 
@@ -52,6 +53,7 @@ SUITES = {
     "dist": dist.run,                   # multi-process runtime digest parity
     "chaos": chaos.run,                 # elastic recovery under injected faults
     "stream": stream.run,               # overlapped window planning + ingest rates
+    "serve_tier": serve_tier.run,       # multi-tenant reads under live training
 }
 
 

@@ -1,0 +1,226 @@
+"""Multi-tenant serve-tier benchmark (``BENCH_serve_tier.json``).
+
+The acceptance experiment for DESIGN.md §12: K tenant clients replay a
+seeded Zipf-skewed request trace against a live 2-node training run, once
+per skew level.  Per skew the run must prove
+
+  * **isolation** — every rank's stream digest is bit-identical to the
+    in-process reference (i.e. to a zero-tenant run: the reference is what
+    tenant-free runs are asserted against everywhere else);
+  * **the tier actually serves** — tenant reads come from the local buffer
+    and residency-routed peers, not all from the PFS;
+
+and the overload experiment (a standalone tier with a frozen injected
+clock and a tiny token budget) must show shedding engage — sheds counted
+on both sides — without a single client breaker charge: admission control
+is not a fault.
+
+    PYTHONPATH=src python -m benchmarks.serve_tier
+    PYTHONPATH=src python -m benchmarks.run --only serve_tier \
+        --json-out BENCH_serve_tier.json
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+import threading
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.scheduler import SolarConfig
+from repro.data import DatasetSpec, LoaderSpec, create_store
+
+NUM_SAMPLES = 1024
+LOCAL_BATCH = 16
+BUFFER = 256
+EPOCHS = 2
+NODES = 2
+TENANTS = 3
+READ_SIZE = 8
+SKEWS = (0.6, 1.1, 1.5)
+
+
+def _spec(root: str) -> LoaderSpec:
+    path = os.path.join(root, "serve_tier_store")
+    if not os.path.exists(path):
+        create_store(
+            path, "binary", spec=DatasetSpec(NUM_SAMPLES, (8,), "<f4"),
+            fill="arange",
+        ).close()
+    solar = SolarConfig(
+        num_nodes=NODES, local_batch=LOCAL_BATCH, buffer_size=BUFFER,
+        seed=0, capacity_factor=1.0, enable_peer=True,
+    )
+    return LoaderSpec(
+        loader="solar", backend="binary", path=path, num_nodes=NODES,
+        local_batch=LOCAL_BATCH, num_epochs=EPOCHS, buffer_size=BUFFER,
+        collect_data=True, peer_fetch=True, solar=solar, transport="socket",
+        prefetch_depth=1,
+    )
+
+
+def _zipf_trace(skew: float, tenant: int, length: int) -> np.ndarray:
+    """A seeded Zipf(``skew``) id trace over a tenant-specific permutation
+    (each tenant hammers a *different* hot set, like real consumers)."""
+    rng = np.random.default_rng(10_000 * tenant + int(skew * 1000))
+    perm = rng.permutation(NUM_SAMPLES)
+    p = 1.0 / np.power(np.arange(1, NUM_SAMPLES + 1, dtype=np.float64), skew)
+    p /= p.sum()
+    return perm[rng.choice(NUM_SAMPLES, size=length, p=p)].astype(np.int64)
+
+
+def _live_run_with_tenants(spec: LoaderSpec, skew: float) -> dict:
+    from repro.runtime.launcher import run_distributed
+    from repro.serve.datatier import (
+        DataTierClient, ServeTierConfig, TenantConfig,
+    )
+
+    tier_cfg = ServeTierConfig(tenants=tuple(
+        TenantConfig(t + 1, f"bench-{t + 1}") for t in range(TENANTS)
+    ))
+    done = threading.Event()
+    client_stats: dict[int, dict] = {}
+    threads: list[threading.Thread] = []
+
+    def tenant_worker(tenant: int, info: dict) -> None:
+        trace = _zipf_trace(skew, tenant, 4096)
+        client = DataTierClient(
+            info["endpoints"], tenant=tenant, token=f"bench-{tenant}",
+            shed_wait_s=0.02, max_shed_retries=1,
+        )
+        try:
+            pos = 0
+            while not done.is_set():
+                ids = trace[pos:pos + READ_SIZE]
+                pos = (pos + READ_SIZE) % (trace.size - READ_SIZE)
+                client.read(ids)
+        finally:
+            client_stats[tenant] = client.stats()
+            client.close()
+
+    def on_ready(info: dict) -> None:
+        for t in range(TENANTS):
+            th = threading.Thread(
+                target=tenant_worker, args=(t + 1, info), daemon=True,
+            )
+            th.start()
+            threads.append(th)
+
+    report = run_distributed(
+        spec, timeout_s=300.0, serve_tier=tier_cfg, on_tier_ready=on_ready,
+    )
+    done.set()
+    for th in threads:
+        th.join(timeout=15.0)
+    assert report.ok, f"dead ranks: {report.dead}"
+    summ = report.summary()
+    total = (
+        summ["tenant_hits"] + summ["tenant_peer_reads"]
+        + summ["tenant_pfs_fallbacks"]
+    )
+    rows_served = sum(s["rows_served"] for s in client_stats.values())
+    return {
+        "skew": skew,
+        "digests": {str(r): d for r, d in report.digests().items()},
+        "tenant_hits": summ["tenant_hits"],
+        "tenant_peer_reads": summ["tenant_peer_reads"],
+        "tenant_pfs_fallbacks": summ["tenant_pfs_fallbacks"],
+        "tenant_sheds": summ["tenant_sheds"],
+        "hit_rate": summ["tenant_hits"] / max(total, 1),
+        "peer_rate": summ["tenant_peer_reads"] / max(total, 1),
+        "pfs_rate": summ["tenant_pfs_fallbacks"] / max(total, 1),
+        "stale_refusals": summ["stale_refusals"],
+        "rows_served_to_tenants": rows_served,
+        "client_breaker_opens": sum(
+            s["breaker_opens"] for s in client_stats.values()
+        ),
+        "wall_time_s": round(report.wall_time_s, 3),
+    }
+
+
+def _overload_experiment(root: str) -> dict:
+    """Shedding under a frozen clock: the burst is the whole budget, so a
+    flood must shed deterministically — and charge no breaker."""
+    from repro.data.backends import open_store
+    from repro.serve.datatier import (
+        DataTierClient, ServeTierConfig, StandaloneTier, TenantConfig,
+    )
+
+    path = os.path.join(root, "serve_tier_store")
+    store = open_store(path, "binary")
+    cfg = ServeTierConfig(tenants=(
+        TenantConfig(1, "flood", rate=1.0, burst=4 * READ_SIZE),
+    ))
+    try:
+        with StandaloneTier(store, cfg, clock=lambda: 0.0) as tier:
+            client = DataTierClient(
+                {0: tier.endpoint}, tenant=1, token="flood",
+                shed_wait_s=0.005, max_shed_retries=1,
+            )
+            rng = np.random.default_rng(7)
+            for _ in range(32):
+                client.read(rng.integers(0, NUM_SAMPLES, size=READ_SIZE))
+            cstats, sstats = client.stats(), tier.stats()
+            client.close()
+    finally:
+        store.close()
+    assert sstats["tenant_sheds"] > 0, "overload never engaged shedding"
+    assert cstats["breaker_opens"] == 0 and cstats["breaker_skips"] == 0, (
+        "shedding charged the circuit breaker"
+    )
+    assert cstats["rows_served"] == 4 * READ_SIZE  # exactly the burst
+    return {
+        "reads_attempted": cstats["reads"],
+        "rows_served": cstats["rows_served"],
+        "rows_shed": cstats["rows_unserved"],
+        "client_sheds": cstats["sheds"],
+        "server_sheds": sstats["tenant_sheds"],
+        "client_breaker_opens": cstats["breaker_opens"],
+    }
+
+
+def run() -> dict:
+    from repro.runtime.launcher import in_process_digests
+
+    root = tempfile.mkdtemp(prefix="solar_serve_tier_")
+    out: dict = {"skews": {}}
+    try:
+        spec = _spec(root)
+        reference = {
+            str(r): d for r, d in in_process_digests(spec).items()
+        }
+
+        for skew in SKEWS:
+            row = _live_run_with_tenants(spec, skew)
+            assert row.pop("digests") == reference, (
+                f"tenant traffic at skew {skew} perturbed training digests"
+            )
+            assert row["tenant_hits"] + row["tenant_peer_reads"] > 0, (
+                f"skew {skew}: every tenant read fell back to the PFS"
+            )
+            # client_breaker_opens is recorded but not asserted here: the
+            # run's teardown races the still-reading tenants (servers close
+            # first), and those dial failures legitimately charge the
+            # ladder.  Shed-never-charges-the-breaker is pinned by the
+            # deterministic overload experiment below.
+            out["skews"][str(skew)] = row
+            emit(f"serve_tier/skew_{skew}/hit_rate",
+                 row["hit_rate"] * 1e6, f"peer_rate={row['peer_rate']:.3f}")
+            emit(f"serve_tier/skew_{skew}/rows_served",
+                 row["rows_served_to_tenants"],
+                 f"sheds={row['tenant_sheds']}")
+        out["digest_parity"] = True
+
+        out["overload"] = _overload_experiment(root)
+        emit("serve_tier/overload/server_sheds",
+             out["overload"]["server_sheds"],
+             f"breaker_opens={out['overload']['client_breaker_opens']}")
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+    return out
+
+
+if __name__ == "__main__":
+    run()

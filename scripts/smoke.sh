@@ -241,3 +241,10 @@ if __name__ == "__main__":
     main()
 PY
 python "$STREAM_SMOKE"
+
+# Serve-tier smoke (DESIGN.md §12): one 2-rank trainer + two tenant clients
+# reading concurrently through the multi-tenant buffer tier.  Exit 0
+# requires zero digest drift vs the tenant-free reference, at least one
+# tenant read served from buffer/peer (not all PFS), and zero sheds from
+# these unlimited tenants (a shed storm here means admission misfired).
+python scripts/serve_tier_smoke.py

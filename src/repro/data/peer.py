@@ -50,6 +50,7 @@ __all__ = [
     "AddressBookError",
     "PeerTransport",
     "RetryPolicy",
+    "Breaker",
     "SharedViewTransport",
     "SocketTransport",
     "PeerExchange",
@@ -143,6 +144,12 @@ class _Breaker:
             self.opens_in_row += 1
             return True
         return False
+
+
+#: Public alias: the serve tier's ``DataTierClient`` drives the same
+#: per-endpoint breaker state machine the trainer transport does
+#: (DESIGN.md §12) — one ladder, two consumers.
+Breaker = _Breaker
 
 
 @runtime_checkable

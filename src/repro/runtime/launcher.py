@@ -768,6 +768,7 @@ def _rank_main(rank: int, cfg: dict) -> None:
     store = build_store(spec)
     server = None
     transport = None
+    tier = None
     readahead = None
     owned: dict[int, object] = {}   # node -> its ScheduleExecutor
     iters: dict[int, object] = {}   # node -> that executor's plan walk
@@ -805,6 +806,24 @@ def _rank_main(rank: int, cfg: dict) -> None:
             escalate=ctrl.suspect,
         )
         server.attach(_mirror_for)
+
+        if cfg.get("serve_tier") is not None:
+            # multi-tenant serving (DESIGN.md §12): open this rank's buffer
+            # server to attached tenants, with misses residency-routed to
+            # peers before the PFS.  Strictly additive — with no tenants
+            # attached the fast path never observes it.
+            from repro.serve.datatier import wire_rank_tier
+
+            tier = wire_rank_tier(
+                server=server,
+                schedule=schedule,
+                store=store,
+                endpoints={
+                    r: ep for r, ep in endpoints.items() if r != rank
+                },
+                config=cfg["serve_tier"],
+                cluster_token=cfg["cluster_token"],
+            )
 
         # -- progress accounting (heartbeat payload) -------------------------
         h = hashlib.sha256()          # own-node stream digest (parity tests)
@@ -997,6 +1016,8 @@ def _rank_main(rank: int, cfg: dict) -> None:
             # refusal beyond the window degrades to the PFS fallback —
             # digest-identical either way.
             server.at_step(idx)
+            if tier is not None:
+                tier.at_step(idx)
             transport.at_step(idx, window=idx // window_steps)
             gathered = {
                 node: owned[node].gather_peers(prefetched[(node, idx)][1])
@@ -1076,8 +1097,11 @@ def _rank_main(rank: int, cfg: dict) -> None:
             "window_steps": int(window_steps),
             "max_observed_skew": int(server.max_observed_skew),
             "adoption_boundaries": [int(b) for b in adoption_boundaries],
+            "tenants": server.tenant_stats(),
         })
     finally:
+        if tier is not None:
+            tier.close()
         if readahead is not None:
             readahead.close()
         if server is not None:
@@ -1133,6 +1157,10 @@ class RankResult:
     max_observed_skew: int = 0
     #: window boundaries at which this rank adopted orphaned nodes.
     adoption_boundaries: list[int] = dataclasses.field(default_factory=list)
+    #: tenant-serving counters from this rank's buffer server (empty when
+    #: serving is off): tenant_hits / tenant_peer_reads /
+    #: tenant_pfs_fallbacks / tenant_sheds + a per_tenant breakdown.
+    tenants: dict = dataclasses.field(default_factory=dict)
 
     def window_cursors(self) -> dict[int, list[int]]:
         """Each node's cursor as a ``[window, step-in-window]`` pair."""
@@ -1197,12 +1225,19 @@ class DistributedReport:
             "unknown_source_fallbacks",
         )
         ladder = {k: 0 for k in ladder_keys}
+        tenant_keys = (
+            "tenant_hits", "tenant_peer_reads", "tenant_pfs_fallbacks",
+            "tenant_sheds",
+        )
+        tenant_agg = {k: 0 for k in tenant_keys}
         serving: dict[int, int] = {}
         for r in self.ranks:
             for k in agg_keys:
                 agg[k] += int(r.summary.get(k, 0))
             for k in ladder_keys:
                 ladder[k] += int(r.transport.get(k, 0))
+            for k in tenant_keys:
+                tenant_agg[k] += int(r.tenants.get(k, 0))
             for src, n in r.served_by_source.items():
                 serving[int(src)] = serving.get(int(src), 0) + int(n)
         return {
@@ -1228,6 +1263,7 @@ class DistributedReport:
                 (r.max_observed_skew for r in self.ranks), default=0
             ),
             **ladder,
+            **tenant_agg,
             "served_by_source": {str(k): serving[k] for k in sorted(serving)},
             **agg,
             "ranks": [
@@ -1252,6 +1288,7 @@ class DistributedReport:
                     },
                     "max_observed_skew": r.max_observed_skew,
                     "adoption_boundaries": r.adoption_boundaries,
+                    "tenants": r.tenants,
                     **{k: r.summary.get(k) for k in agg_keys},
                 }
                 for r in self.ranks
@@ -1293,6 +1330,8 @@ def run_distributed(
     suspect_timeout_s: float = 2.0,
     probe_grace_s: float = 2.0,
     retry=None,
+    serve_tier=None,
+    on_tier_ready=None,
 ) -> DistributedReport:
     """Execute ``spec``'s plan as ``spec.num_nodes`` real OS processes.
 
@@ -1320,6 +1359,18 @@ def run_distributed(
     Raises ``TimeoutError`` — naming the pending ranks and their last
     heartbeat ages — only if the run as a whole exceeds ``timeout_s`` even
     after dead ranks are written off.
+
+    Tenant serving (DESIGN.md §12): ``serve_tier`` takes a
+    :class:`~repro.serve.datatier.ServeTierConfig`; every rank then opens
+    its buffer server to the configured tenants, with a shared
+    digest-derived cluster token authenticating server-to-server proxy
+    reads (override via ``serve_tier.cluster_token``).  When
+    ``serve_tier.plan_service`` is set the parent also serves the run's
+    schedule by content hash.  ``on_tier_ready`` is called once, from the
+    parent, the moment the address book has been broadcast — its dict
+    argument carries ``endpoints`` (rank -> buffer-server address),
+    ``plan_digest``, ``cluster_token``, and ``plan_service`` (address or
+    ``None``) — the hook tenant clients attach through mid-run.
     """
     import dataclasses as _dc
 
@@ -1367,6 +1418,30 @@ def run_distributed(
     plan_digest = schedule.artifact_digest()
     cleanup_dir = run_dir if own_dir else None
 
+    cluster_token = None
+    plan_svc = None
+    if serve_tier is not None:
+        serve_tier.validate()
+        # shared by construction, never on the wire in the clear at rest:
+        # every rank derives nothing — the parent mints one token per run
+        # (deterministic from the plan digest unless overridden) and ships
+        # it inside each rank's cfg.
+        cluster_token = (
+            serve_tier.cluster_token
+            if serve_tier.cluster_token is not None
+            else hashlib.sha256(
+                ("solar-tier:" + plan_digest).encode()
+            ).hexdigest()[:32]
+        )
+        if serve_tier.plan_service:
+            from repro.core.planners import PlanCache
+            from repro.serve.datatier import PlanService
+
+            plan_svc = PlanService(
+                PlanCache(os.path.join(run_dir, "plan_cache"))
+            ).start()
+            plan_svc.publish(schedule)
+
     base_retry = retry if retry is not None else RetryPolicy()
     restart_ranks = frozenset(int(r) for r in (restart_ranks or ()))
     coord = _Coordinator(
@@ -1398,6 +1473,8 @@ def run_distributed(
                 "prefetch_depth": prefetch_depth,
                 # per-rank jitter streams stay decorrelated and seeded.
                 "retry": _dc.replace(base_retry, seed=base_retry.seed + rank),
+                "serve_tier": serve_tier,
+                "cluster_token": cluster_token,
             }
             cfgs.append(cfg)
             p = ctx.Process(
@@ -1407,7 +1484,26 @@ def run_distributed(
             p.start()
             procs.append(p)
         deadline = time.monotonic() + timeout_s
+        tier_announced = on_tier_ready is None
         while not coord.wait_done(1.0):
+            if not tier_announced:
+                with coord._cond:
+                    book_out = coord._addrbook_sent
+                    eps = dict(coord.endpoints)
+                if book_out:
+                    # every rank is registered and serving: tenants may
+                    # attach from here on.  Fired once, from the parent —
+                    # clients run concurrently with the training run.
+                    tier_announced = True
+                    on_tier_ready({
+                        "endpoints": eps,
+                        "plan_digest": plan_digest,
+                        "cluster_token": cluster_token,
+                        "plan_service": (
+                            (plan_svc.host, plan_svc.port)
+                            if plan_svc is not None else None
+                        ),
+                    })
             for rank in range(spec.num_nodes):
                 p = procs[rank]
                 if p.exitcode is None:
@@ -1452,6 +1548,8 @@ def run_distributed(
                 p.terminate()
                 p.join(timeout=5.0)
         pending_ages = coord.pending_detail()
+        if plan_svc is not None:
+            plan_svc.close()
         coord.close()
         if cleanup_dir is not None:  # every rank is gone: artifact done
             import shutil
@@ -1506,6 +1604,7 @@ def run_distributed(
                 adoption_boundaries=[
                     int(b) for b in rep.get("adoption_boundaries", ())
                 ],
+                tenants=dict(rep.get("tenants", {})),
             ))
     return DistributedReport(
         num_ranks=spec.num_nodes, ranks=results,

@@ -37,6 +37,25 @@ A server that has not been :meth:`attach`-ed to a mirror yet, or whose
 published step falls outside the guard, is not an error — it answers
 "nothing served" and the requester degrades to PFS reads, the same fallback
 contract as every other failure in the tier.
+
+Beyond the planned trainer traffic, a server can additionally serve
+**tenants** — unplanned consumers (evaluators, inference replicas) reading
+samples by id over ``MSG_ATTACH``/``MSG_READ`` (DESIGN.md §12, enabled via
+:meth:`enable_tenant_serving`).  Tenant reads need none of the step/window
+guards: sample rows are immutable by id, so any currently-resident copy is
+the correct bytes — the guards exist to pin *which step's residency* a
+trainer fetch observes, a notion tenants do not have.  What tenants do get:
+
+  * **admission control** — a deterministic :class:`TokenBucket` per tenant
+    plus one bounded concurrency gate for the whole server; refusals are
+    ``MSG_SHED`` frames with a retry-after hint, never wrong bytes, and
+    never a closed connection;
+  * **strict trainer priority** — tenant reads yield (bounded) to any
+    in-flight or arriving FETCH/FETCHW/delta-replay before touching the
+    mirror lock, so a READ storm cannot stretch the training fast path;
+  * **per-tenant accounting** — hits / peer-reads / PFS-fallbacks / sheds,
+    surfaced through :meth:`tenant_stats` into the launcher's
+    ``DistributedReport``.
 """
 from __future__ import annotations
 
@@ -49,10 +68,76 @@ import numpy as np
 
 from repro.runtime import faults, wire
 
-__all__ = ["BufferServer"]
+__all__ = ["BufferServer", "TokenBucket", "INTERNAL_TENANT"]
 
 #: published step value meaning "serving is paused" (mirror mid-mutation).
 _PAUSED = -1
+
+#: reserved tenant id for server-to-server proxy reads (miss routing): it
+#: authenticates with the cluster token, bypasses per-tenant buckets (the
+#: originating server already admitted the read once), and its frames carry
+#: ``forward=False`` so proxy hops can never loop.
+INTERNAL_TENANT = -1
+
+
+class TokenBucket:
+    """Deterministic token-bucket rate limiter (clock injected by callers).
+
+    ``rate`` is tokens (samples) per second, ``burst`` the bucket depth.
+    :meth:`admit` is a pure function of the ``(n, now)`` call sequence —
+    no hidden clock reads — so seeded tests replay identical admit/shed
+    decisions.  ``rate=None`` disables limiting (always admits).
+    """
+
+    def __init__(self, rate: float | None, burst: float | None = None):
+        self.rate = None if rate is None else float(rate)
+        if self.rate is not None and self.rate <= 0:
+            raise ValueError(f"rate must be > 0 (or None), got {rate!r}")
+        self.burst = (
+            float(burst) if burst is not None
+            else (self.rate if self.rate is not None else 0.0)
+        )
+        self.tokens = self.burst
+        self._last: float | None = None
+
+    def admit(self, n: int, now: float) -> float:
+        """Try to take ``n`` tokens at time ``now``.
+
+        Returns ``0.0`` on admission, else the retry-after hint in seconds
+        (how long until the bucket refills enough for ``n`` tokens).
+        """
+        if self.rate is None:
+            return 0.0
+        if self._last is None:
+            self._last = now
+        elapsed = max(now - self._last, 0.0)
+        self.tokens = min(self.burst, self.tokens + elapsed * self.rate)
+        self._last = now
+        if n <= self.tokens:
+            self.tokens -= n
+            return 0.0
+        return (n - self.tokens) / self.rate
+
+
+class _TenantState:
+    """One tenant's auth token, rate limiter, and serve counters."""
+
+    def __init__(self, tenant: int, token: str, bucket: TokenBucket | None):
+        self.tenant = int(tenant)
+        self.token = str(token)
+        self.bucket = bucket
+        self.hits = 0
+        self.peer_reads = 0
+        self.pfs_fallbacks = 0
+        self.sheds = 0
+
+    def counters(self) -> dict:
+        return {
+            "hits": self.hits,
+            "peer_reads": self.peer_reads,
+            "pfs_fallbacks": self.pfs_fallbacks,
+            "sheds": self.sheds,
+        }
 
 
 class BufferServer:
@@ -108,6 +193,19 @@ class BufferServer:
         self.stale_refusals = 0
         #: largest requester/server skew the windowed guard actually served.
         self.max_observed_skew = 0
+        # -- tenant serving (DESIGN.md §12; off until enable_tenant_serving)
+        self._tenants: dict[int, _TenantState] | None = None
+        self._tenant_lock = threading.Lock()
+        self._tenant_gate: threading.BoundedSemaphore | None = None
+        self._tenant_router = None
+        self._tenant_clock = time.monotonic
+        self._tenant_wait_s = 0.2
+        self._internal_token: str | None = None
+        #: trainer-priority bookkeeping: count of in-flight trainer
+        #: sections (fetch handlers + delta replays); tenant reads wait
+        #: (bounded) for it to hit zero before touching :attr:`guard`.
+        self._prio = threading.Condition()
+        self._trainer_busy = 0
         self._accept_timeout_s = float(accept_timeout_s)
         self._closed = threading.Event()
         self._threads: list[threading.Thread] = []
@@ -182,7 +280,7 @@ class BufferServer:
         ``step`` (or earlier, within the skew window) keep being served
         from the correct snapshot instead of being refused.
         """
-        with self._advanced:
+        with self._trainer_section(), self._advanced:
             self._step = _PAUSED
             sinks: list[tuple[int, list, object]] = []
             if step is not None and self.skew_window > 0 and self._mirror_of:
@@ -229,6 +327,105 @@ class BufferServer:
             self._history.pop(int(node), None)
             self._advanced.notify_all()
 
+    # -- tenant serving (DESIGN.md §12) ----------------------------------------
+
+    def enable_tenant_serving(
+        self,
+        tenants,
+        *,
+        queue_depth: int = 8,
+        internal_token: str | None = None,
+        router=None,
+        clock=None,
+        tenant_wait_s: float = 0.2,
+    ) -> None:
+        """Start answering ``MSG_ATTACH``/``MSG_READ`` for these tenants.
+
+        ``tenants`` is an iterable of objects with ``tenant`` (int id),
+        ``token`` (auth string), and ``rate``/``burst`` (token-bucket
+        parameters; ``rate=None`` = unlimited) — e.g.
+        :class:`repro.serve.datatier.TenantConfig`.  ``queue_depth`` bounds
+        concurrently-processing tenant reads server-wide; reads beyond it
+        are shed, never queued unboundedly.  ``router`` is the miss path:
+        ``router(ids) -> (rows, ok, peer_mask)`` over the ids the local
+        mirrors could not serve (peer proxy first, PFS last — see
+        ``repro.serve.datatier.TierRouter``).  ``internal_token``
+        authenticates :data:`INTERNAL_TENANT` proxy attaches from sibling
+        servers.  ``clock`` injects the bucket clock for deterministic
+        tests.
+        """
+        if queue_depth < 1:
+            raise ValueError(f"queue_depth must be >= 1, got {queue_depth}")
+        states: dict[int, _TenantState] = {}
+        for t in tenants:
+            tid = int(t.tenant)
+            if tid == INTERNAL_TENANT:
+                raise ValueError(
+                    f"tenant id {INTERNAL_TENANT} is reserved for proxy reads"
+                )
+            if tid in states:
+                raise ValueError(f"duplicate tenant id {tid}")
+            rate = getattr(t, "rate", None)
+            burst = getattr(t, "burst", None)
+            bucket = None if rate is None else TokenBucket(rate, burst)
+            states[tid] = _TenantState(tid, t.token, bucket)
+        with self._tenant_lock:
+            self._tenants = states
+            self._tenant_gate = threading.BoundedSemaphore(int(queue_depth))
+            self._tenant_router = router
+            self._internal_token = internal_token
+            if clock is not None:
+                self._tenant_clock = clock
+            self._tenant_wait_s = float(tenant_wait_s)
+
+    def tenant_stats(self) -> dict:
+        """Per-tenant + aggregate serve counters (``DistributedReport``)."""
+        with self._tenant_lock:
+            if not self._tenants:
+                return {}
+            agg = {
+                "tenant_hits": 0, "tenant_peer_reads": 0,
+                "tenant_pfs_fallbacks": 0, "tenant_sheds": 0,
+            }
+            per: dict[str, dict] = {}
+            for tid, st in sorted(self._tenants.items()):
+                c = st.counters()
+                per[str(tid)] = c
+                agg["tenant_hits"] += c["hits"]
+                agg["tenant_peer_reads"] += c["peer_reads"]
+                agg["tenant_pfs_fallbacks"] += c["pfs_fallbacks"]
+                agg["tenant_sheds"] += c["sheds"]
+            return {**agg, "per_tenant": per}
+
+    @contextlib.contextmanager
+    def _trainer_section(self):
+        """Mark a trainer fast-path operation in flight (strict priority):
+        tenant reads park in :meth:`_yield_to_trainers` until none are."""
+        with self._prio:
+            self._trainer_busy += 1
+        try:
+            yield
+        finally:
+            with self._prio:
+                self._trainer_busy -= 1
+                self._prio.notify_all()
+
+    def _yield_to_trainers(self) -> None:
+        """Wait (bounded) until no trainer operation is in flight.
+
+        The bound (:attr:`_tenant_wait_s`) keeps a continuously-busy
+        trainer from starving tenants forever; after it expires the read
+        proceeds and contends on :attr:`guard` normally — the copy-out it
+        performs there is a few microseconds, not a latency cliff.
+        """
+        deadline = time.monotonic() + self._tenant_wait_s
+        with self._prio:
+            while self._trainer_busy > 0 and not self._closed.is_set():
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    return
+                self._prio.wait(timeout=remaining)
+
     # -- serving side ----------------------------------------------------------
 
     def _accept_loop(self) -> None:
@@ -249,6 +446,7 @@ class BufferServer:
 
     def _serve_conn(self, conn: socket.socket) -> None:
         serve_node: int | None = None
+        tenant: int | None = None
         with contextlib.suppress(OSError, wire.WireError), conn:
             conn.settimeout(self._accept_timeout_s * 100)
             while not self._closed.is_set():
@@ -274,6 +472,19 @@ class BufferServer:
                         self._handle_fetchw(conn, payload, serve_node)
                     else:
                         self._handle_fetch(conn, payload, serve_node)
+                elif msg_type == wire.MSG_ATTACH:
+                    tenant = self._handle_attach(conn, payload)
+                    if tenant is None:
+                        return
+                elif msg_type == wire.MSG_READ:
+                    if tenant is None:
+                        wire.send_frame(
+                            conn, wire.MSG_ERROR,
+                            b"READ before ATTACH: authenticate first",
+                        )
+                        return
+                    if not self._handle_read(conn, payload, tenant):
+                        return
                 else:
                     wire.send_frame(
                         conn, wire.MSG_ERROR,
@@ -324,7 +535,7 @@ class BufferServer:
         delay = faults.on_serve()
         if delay > 0:
             time.sleep(delay)  # injected slow-peer latency (chaos harness)
-        with self.guard:
+        with self._trainer_section(), self.guard:
             mirror = (
                 self._mirror_of(serve_node)
                 if self._mirror_of is not None and serve_node in self.serving
@@ -370,7 +581,7 @@ class BufferServer:
         delay = faults.on_serve()
         if delay > 0:
             time.sleep(delay)  # injected slow-peer latency (chaos harness)
-        with self._advanced:
+        with self._trainer_section(), self._advanced:
             deadline = time.monotonic() + self.skew_wait_s
             while (
                 not self._closed.is_set()
@@ -430,3 +641,174 @@ class BufferServer:
         wire.send_frame(
             conn, wire.MSG_ROWS, wire.pack_rows(ok, rows), site="server.rows"
         )
+
+    # -- tenant handlers (DESIGN.md §12) ---------------------------------------
+
+    def _handle_attach(self, conn: socket.socket, payload: bytes) -> int | None:
+        """Authenticate one tenant connection; returns the bound tenant id.
+
+        Refusals mirror the HELLO taxonomy: a disabled server, a bad token,
+        or a geometry disagreement are loud ``MSG_ERROR`` frames and the
+        connection closes — attaching is configuration, not load, so it
+        never sheds.  A client that omits shape/dtype negotiates: the
+        ATTACH_OK echo carries this server's geometry and the client adopts
+        it.
+        """
+        att = wire.unpack_json(payload)
+        with self._tenant_lock:
+            tenants = self._tenants
+        if tenants is None:
+            wire.send_frame(
+                conn, wire.MSG_ERROR,
+                b"tenant serving disabled on this server",
+            )
+            return None
+        try:
+            tid = int(att["tenant"])
+        except (KeyError, TypeError, ValueError):
+            wire.send_frame(
+                conn, wire.MSG_ERROR, b"ATTACH carries no usable tenant id"
+            )
+            return None
+        token = att.get("token")
+        if tid == INTERNAL_TENANT:
+            authorized = (
+                self._internal_token is not None
+                and token == self._internal_token
+            )
+        else:
+            st = tenants.get(tid)
+            authorized = st is not None and token == st.token
+        if not authorized:
+            wire.send_frame(
+                conn, wire.MSG_ERROR,
+                f"tenant auth failed for tenant {tid}".encode(),
+            )
+            return None
+        mine = {"shape": list(self.sample_shape), "dtype": self.dtype.str}
+        if "shape" in att or "dtype" in att:
+            theirs = {
+                "shape": list(att.get("shape", ())),
+                "dtype": att.get("dtype"),
+            }
+            if theirs != mine:
+                wire.send_frame(
+                    conn, wire.MSG_ERROR,
+                    f"geometry mismatch: client expects {theirs}, "
+                    f"server is {mine}".encode(),
+                )
+                return None
+        wire.send_frame(
+            conn, wire.MSG_ATTACH_OK, wire.pack_json({"tenant": tid, **mine})
+        )
+        return tid
+
+    def _handle_read(
+        self, conn: socket.socket, payload: bytes, tenant: int
+    ) -> bool:
+        """Serve one tenant read; returns False when the connection must
+        close (protocol violation), True otherwise — including sheds, which
+        keep the connection alive by design.
+
+        Admission runs first (per-tenant bucket, then the server-wide
+        concurrency gate), then the read yields to any in-flight trainer
+        traffic before touching the mirror lock.  Misses route through the
+        tier router (peer proxy -> PFS) *outside* the mirror lock, and only
+        when the frame's forward flag allows it — proxy hops never forward
+        again, so routing cannot loop.
+        """
+        tid, forward, ids = wire.unpack_read(payload)
+        if tid != tenant:
+            wire.send_frame(
+                conn, wire.MSG_ERROR,
+                f"READ for tenant {tid} on a connection attached as "
+                f"{tenant}".encode(),
+            )
+            return False
+        st: _TenantState | None = None
+        if tenant != INTERNAL_TENANT:
+            with self._tenant_lock:
+                st = (self._tenants or {}).get(tenant)
+            if st is None:
+                wire.send_frame(
+                    conn, wire.MSG_ERROR,
+                    f"tenant {tenant} no longer configured".encode(),
+                )
+                return False
+            if st.bucket is not None:
+                with self._tenant_lock:
+                    retry = st.bucket.admit(ids.size, self._tenant_clock())
+                if retry > 0:
+                    with self._tenant_lock:
+                        st.sheds += 1
+                    wire.send_frame(
+                        conn, wire.MSG_SHED,
+                        wire.pack_shed(retry, "rate_limited"),
+                    )
+                    return True
+        gate = self._tenant_gate
+        if gate is not None and not gate.acquire(blocking=False):
+            # queue depth exhausted: shed now rather than queue unboundedly
+            # behind other tenants — the retry hint is small because a slot
+            # frees as soon as any in-flight read finishes its copy-out.
+            if st is not None:
+                with self._tenant_lock:
+                    st.sheds += 1
+            wire.send_frame(
+                conn, wire.MSG_SHED, wire.pack_shed(0.05, "queue_full")
+            )
+            return True
+        try:
+            self._yield_to_trainers()
+            out, ok = self._tenant_lookup(ids)
+            hits = int(ok.sum())
+            peer = pfs = 0
+            missing = ~ok
+            if missing.any() and forward and self._tenant_router is not None:
+                sel = np.flatnonzero(missing)
+                r_rows, r_ok, r_peer = self._tenant_router(ids[sel])
+                if r_ok.any():
+                    out[sel[r_ok]] = r_rows[r_ok]
+                    ok[sel[r_ok]] = True
+                peer = int((r_ok & r_peer).sum())
+                pfs = int((r_ok & ~r_peer).sum())
+            if st is not None:
+                with self._tenant_lock:
+                    st.hits += hits
+                    st.peer_reads += peer
+                    st.pfs_fallbacks += pfs
+            rows = (
+                out[ok] if ok.any()
+                else np.empty((0,) + self.sample_shape, self.dtype)
+            )
+            wire.send_frame(conn, wire.MSG_ROWS, wire.pack_rows(ok, rows))
+            return True
+        finally:
+            if gate is not None:
+                gate.release()
+
+    def _tenant_lookup(self, ids: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """Copy out every requested row resident in any served mirror.
+
+        No step/window guard on purpose: rows are immutable by id, so any
+        resident copy is the correct bytes; :attr:`guard` is held only for
+        the lookup + copy so a half-applied delta is never observed.
+        """
+        out = np.empty((ids.size,) + self.sample_shape, self.dtype)
+        ok = np.zeros(ids.size, bool)
+        with self.guard:
+            if self._mirror_of is None:
+                return out, ok
+            for node in sorted(self.serving):
+                rest = np.flatnonzero(~ok)
+                if rest.size == 0:
+                    break
+                mirror = self._mirror_of(node)
+                if mirror is None:
+                    continue
+                slots = mirror.lookup(ids[rest])
+                found = slots >= 0
+                if found.any():
+                    out[rest[found]] = mirror.rows(slots[found])
+                    ok[rest[found]] = True
+        return out, ok

@@ -48,6 +48,10 @@ __all__ = [
     "MSG_ERROR",
     "MSG_CTRL",
     "MSG_FETCHW",
+    "MSG_ATTACH",
+    "MSG_ATTACH_OK",
+    "MSG_READ",
+    "MSG_SHED",
     "WireError",
     "TruncatedFrame",
     "ChecksumMismatch",
@@ -64,6 +68,10 @@ __all__ = [
     "unpack_fetchw",
     "pack_rows",
     "unpack_rows",
+    "pack_read",
+    "unpack_read",
+    "pack_shed",
+    "unpack_shed",
 ]
 
 MAGIC = b"SOLw"
@@ -91,10 +99,31 @@ MSG_CTRL = 6
 #: windowed fetch of ``n`` ids from a legacy fetch of ``n + 1`` ids, so the
 #: type byte disambiguates and old frames keep decoding unchanged.
 MSG_FETCHW = 7
+#: tenant -> server: attach a data-tier tenant to this buffer server
+#: (JSON ``{"tenant", "token", "shape"?, "dtype"?}``).  Unlike ``MSG_HELLO``
+#: — which binds a connection to a *node* for planned trainer fetches — an
+#: ATTACH binds it to a *tenant*: an unplanned consumer reading samples by
+#: id, admitted per-tenant and shed under load (DESIGN.md §12).  Geometry is
+#: negotiable: a client that omits shape/dtype adopts the server's from the
+#: ATTACH_OK echo; one that sends them must match exactly.
+MSG_ATTACH = 8
+#: server -> tenant: attach accepted (echoes tenant id + server geometry).
+MSG_ATTACH_OK = 9
+#: tenant -> server: one by-id read (tenant tag + forward flag + sample
+#: ids).  Answered with :data:`MSG_ROWS` (possibly partial), or
+#: :data:`MSG_SHED` when admission refuses.  The forward flag says whether
+#: the server may route misses onward (peer proxy / PFS); proxy-to-proxy
+#: hops always clear it so routing can never loop.
+MSG_READ = 10
+#: server -> tenant: load shed (JSON ``{"retry_after_s", "reason"}``).  The
+#: connection stays open — a shed is admission control doing its job, not a
+#: failure: clients honor the hint and retry, and must *not* charge their
+#: circuit-breaker ladder.
+MSG_SHED = 11
 
 _KNOWN_TYPES = frozenset(
     (MSG_HELLO, MSG_HELLO_OK, MSG_FETCH, MSG_ROWS, MSG_ERROR, MSG_CTRL,
-     MSG_FETCHW)
+     MSG_FETCHW, MSG_ATTACH, MSG_ATTACH_OK, MSG_READ, MSG_SHED)
 )
 
 _HEADER = struct.Struct("!4sBBQ")
@@ -301,6 +330,62 @@ def unpack_fetchw(payload: bytes) -> tuple[int, int, np.ndarray]:
             f"FETCHW declares {n} ids but carries {len(body)} payload bytes"
         )
     return window, step, np.frombuffer(body, dtype="<i8").astype(np.int64)
+
+
+_READ = struct.Struct("!qBq")
+#: retry-after ceiling carried in a SHED frame: JSON cannot carry infinity
+#: and no client should ever sleep longer than this on one hint anyway.
+MAX_RETRY_AFTER_S = 3600.0
+
+
+def pack_read(tenant: int, ids: np.ndarray, *, forward: bool = True) -> bytes:
+    """READ payload: tenant tag + forward flag + wanted sample ids.
+
+    Carries no step or window: tenant reads are unplanned, and sample rows
+    are immutable by id, so *any* currently-resident copy is the correct
+    bytes — the guards that protect trainer snapshot reproducibility do not
+    apply (DESIGN.md §12).  ``forward=False`` marks a proxy hop: the serving
+    side answers from its local mirrors only, so misses can never bounce
+    between servers.
+    """
+    ids = np.ascontiguousarray(np.asarray(ids, dtype="<i8"))
+    return _READ.pack(int(tenant), 1 if forward else 0, ids.size) + ids.tobytes()
+
+
+def unpack_read(payload: bytes) -> tuple[int, bool, np.ndarray]:
+    if len(payload) < _READ.size:
+        raise ProtocolError("short READ payload")
+    tenant, forward, n = _READ.unpack_from(payload)
+    if forward not in (0, 1):
+        raise ProtocolError(f"READ forward flag must be 0/1, got {forward}")
+    body = payload[_READ.size:]
+    if n < 0 or len(body) != n * 8:
+        raise ProtocolError(
+            f"READ declares {n} ids but carries {len(body)} payload bytes"
+        )
+    return tenant, bool(forward), np.frombuffer(body, dtype="<i8").astype(np.int64)
+
+
+def pack_shed(retry_after_s: float, reason: str) -> bytes:
+    """SHED payload: how long the tenant should back off, and why."""
+    retry = float(retry_after_s)
+    if not retry >= 0.0:  # also rejects NaN
+        raise ValueError(f"retry_after_s must be >= 0, got {retry_after_s!r}")
+    return pack_json({
+        "retry_after_s": min(retry, MAX_RETRY_AFTER_S),
+        "reason": str(reason),
+    })
+
+
+def unpack_shed(payload: bytes) -> tuple[float, str]:
+    msg = unpack_json(payload)
+    try:
+        retry = float(msg["retry_after_s"])
+    except (KeyError, TypeError, ValueError) as e:
+        raise ProtocolError(f"malformed SHED payload: {e}") from e
+    if not 0.0 <= retry <= MAX_RETRY_AFTER_S:
+        raise ProtocolError(f"SHED retry_after_s {retry!r} out of range")
+    return retry, str(msg.get("reason", ""))
 
 
 def pack_rows(ok: np.ndarray, rows: np.ndarray) -> bytes:

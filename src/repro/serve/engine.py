@@ -66,3 +66,28 @@ class ServeEngine:
                 rng, sub = jax.random.split(rng)
                 tok = jax.random.categorical(sub, logits).astype(jnp.int32)
         return np.stack(out, axis=1)
+
+    def generate_from_tier(self, client, sample_ids, num_tokens: int, *,
+                           prompt_len: int, greedy: bool = True, rng=None):
+        """Pull ``sample_ids`` through a data-tier client and generate.
+
+        ``client`` is a :class:`~repro.serve.datatier.DataTierClient`
+        (imported lazily — the tier is numpy-only and optional here).  Rows
+        the tier cannot serve are dropped from the batch; returns
+        ``(tokens, served_mask)`` so callers can retry or backfill the
+        unserved ids.  Raises when the tier serves nothing at all.
+        """
+        from repro.serve.datatier import rows_to_prompts
+
+        ids = np.asarray(sample_ids, np.int64)
+        rows, ok = client.read(ids)
+        if not ok.any():
+            raise RuntimeError(
+                f"data tier served none of the {ids.size} requested samples"
+            )
+        prompts = rows_to_prompts(
+            rows[ok], prompt_len, self.cfg.vocab_size
+        )
+        return self.generate(
+            prompts, num_tokens, greedy=greedy, rng=rng
+        ), ok
