@@ -10,13 +10,53 @@ directly comparable.
 """
 from __future__ import annotations
 
+import hashlib
+import json
 import os
+import socket
+import subprocess
 import tempfile
+import time
 
 from repro.core.costmodel import PFSCostModel
 from repro.data import DatasetSpec, StorageBackend, create_store, get_backend, open_store
 
 _STORES: dict = {}
+
+
+def bench_meta(seed: int = 0, config: dict | None = None) -> dict:
+    """Provenance header stamped on every ``BENCH_*.json`` (``_meta`` key).
+
+    Identifies *what* produced a tracking number: the git revision (and
+    whether the tree was dirty), the seed, a hash of the suite's salient
+    config, the host, and a wall-clock timestamp.  Two files with equal
+    ``git_sha``/``seed``/``config_hash`` measured the same experiment.
+    """
+    here = os.path.dirname(os.path.abspath(__file__))
+    sha, dirty = None, None
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "HEAD"], cwd=here,
+            capture_output=True, text=True, timeout=10,
+        ).stdout.strip() or None
+        dirty = bool(subprocess.run(
+            ["git", "status", "--porcelain"], cwd=here,
+            capture_output=True, text=True, timeout=10,
+        ).stdout.strip())
+    except (OSError, subprocess.SubprocessError):
+        pass
+    cfg = config or {}
+    return {
+        "git_sha": sha,
+        "git_dirty": dirty,
+        "seed": int(seed),
+        "config": cfg,
+        "config_hash": hashlib.sha256(
+            json.dumps(cfg, sort_keys=True).encode()
+        ).hexdigest()[:16],
+        "host": socket.gethostname(),
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+    }
 
 
 def get_store(

@@ -28,6 +28,7 @@ from benchmarks import (
     epoch_order,
     loaders,
     numpfs,
+    obs,
     optim_breakdown,
     peer,
     pipeline,
@@ -35,6 +36,8 @@ from benchmarks import (
     serve_tier,
     stream,
 )
+from benchmarks.common import bench_meta
+from repro.obs import log as obs_log
 
 SUITES = {
     "table3": access_patterns.run,      # access-pattern I/O microbenchmark
@@ -54,6 +57,7 @@ SUITES = {
     "chaos": chaos.run,                 # elastic recovery under injected faults
     "stream": stream.run,               # overlapped window planning + ingest rates
     "serve_tier": serve_tier.run,       # multi-tenant reads under live training
+    "obs": obs.run,                     # flight-recorder overhead + parity
 }
 
 
@@ -81,8 +85,11 @@ def main() -> None:
     ap.add_argument("--json-out", default=None,
                     help="write suite results to this JSON file (a single "
                          "suite's result is written unwrapped; multiple "
-                         "suites are keyed by suite name)")
+                         "suites are keyed by suite name; every file "
+                         "carries a ``_meta`` provenance header)")
+    obs_log.add_verbosity_args(ap)
     args = ap.parse_args()
+    obs_log.configure(obs_log.verbosity_from(args))
     names = args.only.split(",") if args.only else list(SUITES)
     print("suite,us_per_call,derived")
     failures = 0
@@ -102,8 +109,14 @@ def main() -> None:
             print(f"_json/skipped,0,{failures} suite(s) failed")
         else:
             payload = collected.get(names[0]) if len(names) == 1 else collected
+            payload = _jsonable(payload)
+            if not isinstance(payload, dict):
+                payload = {"result": payload}
+            # provenance header: which revision/seed/config produced these
+            # tracking numbers (satellite of DESIGN.md §13).
+            payload["_meta"] = bench_meta(config={"suites": sorted(names)})
             with open(args.json_out, "w") as f:
-                json.dump(_jsonable(payload), f, indent=1, sort_keys=True)
+                json.dump(payload, f, indent=1, sort_keys=True)
             print(f"_json/written,0,{args.json_out}")
     if failures:
         raise SystemExit(1)

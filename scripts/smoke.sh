@@ -248,3 +248,73 @@ python "$STREAM_SMOKE"
 # tenant read served from buffer/peer (not all PFS), and zero sheds from
 # these unlimited tenants (a shed storm here means admission misfired).
 python scripts/serve_tier_smoke.py
+
+# Observability smoke (DESIGN.md §13): a traced 2-rank depth-2 run must
+# (a) stay digest-identical to the in-process reference — the recorder
+# observes, it never perturbs; (b) dump traces that survive
+# `repro.obs.report --check` (well-formed spans, monotonic per-thread
+# clocks, barrier time present, nonzero chunk reads, >= 90% of step time
+# accounted); (c) keep the distributed summary()'s key set stable — a
+# golden-set assertion so instrumenting the runtime can never silently
+# rename the counters CI and the benchmarks key on.
+OBS_SMOKE="$(mktemp -t solar_obs_smoke.XXXXXX.py)"
+trap 'rm -f "$DIST_SMOKE" "$CHAOS_SMOKE" "$STREAM_SMOKE" "$OBS_SMOKE"' EXIT
+cat > "$OBS_SMOKE" <<'PY'
+import os
+import sys
+import tempfile
+
+from repro.core.scheduler import SolarConfig
+from repro.data import DatasetSpec, LoaderSpec, create_store
+from repro.runtime import in_process_digests, run_distributed
+
+#: every summary() key PR 10 found; additions are fine (extend the set),
+#: renames/removals are not.
+GOLDEN_SUMMARY_KEYS = {
+    "num_ranks", "dead_ranks", "recovery", "plan_digest",
+    "aggregate_digest", "wall_time_s", "peer_served", "peer_fallbacks",
+    "stale_refusals", "resliced_samples", "resliced_nodes", "rejoins",
+    "false_suspects", "peer_suspicions", "stale_refusal_fallbacks",
+    "max_observed_skew", "latency", "retries", "breaker_opens",
+    "breaker_skips", "escalations", "unknown_source_fallbacks",
+    "tenant_hits", "tenant_peer_reads", "tenant_pfs_fallbacks",
+    "tenant_sheds", "served_by_source", "numPFS", "misses",
+    "remote_fetches", "ranks",
+}
+
+
+def main():
+    trace_dir = sys.argv[1]
+    tmp = tempfile.mkdtemp()
+    path = os.path.join(tmp, "obs_smoke")
+    create_store(
+        path, "binary", spec=DatasetSpec(1024, (8,), "<f4"), fill="arange"
+    ).close()
+    solar = SolarConfig(num_nodes=2, local_batch=16, buffer_size=256, seed=0,
+                        capacity_factor=1.0, enable_peer=True)
+    spec = LoaderSpec(
+        loader="solar", backend="binary", path=path, num_nodes=2,
+        local_batch=16, num_epochs=2, buffer_size=256, collect_data=True,
+        peer_fetch=True, solar=solar, transport="socket", prefetch_depth=2,
+    )
+    report = run_distributed(spec, timeout_s=240.0, trace_dir=trace_dir)
+    assert report.ok, f"dead ranks: {report.dead}"
+    assert report.digests() == in_process_digests(spec), (
+        "tracing perturbed the trained bytes"
+    )
+    summary = report.summary()
+    missing = GOLDEN_SUMMARY_KEYS - set(summary)
+    assert not missing, f"summary() lost golden keys: {sorted(missing)}"
+    assert summary["latency"]["step_count"] > 0, "no step latency recorded"
+    print(f"smoke obs: OK (traced 2 ranks, digest parity, "
+          f"{summary['latency']['step_count']} step spans, "
+          f"summary keys stable)")
+
+
+if __name__ == "__main__":
+    main()
+PY
+OBS_DIR="$(mktemp -d -t solar_obs_trace.XXXXXX)"
+python "$OBS_SMOKE" "$OBS_DIR"
+python -m repro.obs.report "$OBS_DIR" --check
+rm -rf "$OBS_DIR"

@@ -34,6 +34,8 @@ from typing import Iterator, Protocol, runtime_checkable
 
 import numpy as np
 
+from repro.obs import trace as obs_trace
+
 __all__ = [
     "DatasetSpec",
     "StorageBackend",
@@ -289,9 +291,13 @@ class BaseBackend(CoalescingReadsMixin):
         """One physical read: latency injection + the span read + stats."""
         if self._closed:
             raise ValueError(f"store {self.path!r} is closed")
+        tr = obs_trace.get()
+        t0 = tr.t()
         if self.simulated_latency_s > 0.0:
             time.sleep(self.simulated_latency_s)
         arr = self._read_span(start, stop)
+        tr.rec(obs_trace.CHUNK_READ, t0, a=stop - start,
+               b=(stop - start) * self.sample_bytes)
         with self._stats_lock:
             self.trace.append((start, stop - start))
             self.bytes_read += (stop - start) * self.sample_bytes

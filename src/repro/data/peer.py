@@ -45,6 +45,7 @@ from typing import Callable, Mapping, Protocol, Sequence, runtime_checkable
 import numpy as np
 
 from repro.core.plan import PeerFetch
+from repro.obs import trace as obs_trace
 
 __all__ = [
     "AddressBookError",
@@ -449,11 +450,14 @@ class SocketTransport:
             # to the PFS — counted so misconfiguration is visible, not slow.
             self.unknown_source_fallbacks += 1
             return self._fallback(ids.size)
+        tr = obs_trace.get()
         breaker = self._breaker(source)
         if not breaker.allow(time.monotonic()):
             # breaker open: temporary PFS routing, no dial at all.
             self.breaker_skips += 1
+            tr.instant(obs_trace.PEER_BREAKER_SKIP, a=source)
             return self._fallback(ids.size)
+        t0 = tr.t()
         rng = self._rng(source)
         pooled = self._conns.pop(source, None)
         # A pooled connection may have been idled out by the server between
@@ -497,6 +501,7 @@ class SocketTransport:
                         conn.close()
                 if not last:
                     self.retries += 1
+                    tr.instant(obs_trace.PEER_RETRY, a=source, b=i)
                     time.sleep(self.retry.backoff_s(i, rng))
                 continue
             except BaseException:
@@ -506,6 +511,7 @@ class SocketTransport:
                 raise
             self._conns[source] = conn
             breaker.success()
+            tr.rec(obs_trace.PEER_FETCH, t0, a=source, b=0)
             return rows, ok
         if refused_stale:
             # the final word was the peer's window-skew guard refusing —
@@ -514,10 +520,13 @@ class SocketTransport:
             # would open breakers (and suspect healthy ranks) every time
             # ownership moves across a window edge.
             self.stale_refusal_fallbacks += 1
+            tr.rec(obs_trace.PEER_FETCH, t0, a=source, b=1)
             return self._fallback(ids.size)
         # every attempt exhausted: one breaker failure for the whole fetch.
+        tr.rec(obs_trace.PEER_FETCH, t0, a=source, b=2)
         if breaker.failure(time.monotonic()):
             self.breaker_opens += 1
+            tr.instant(obs_trace.PEER_BREAKER_OPEN, a=source)
             if (
                 breaker.opens_in_row >= self.retry.escalate_after
                 and self._escalate is not None
@@ -562,6 +571,8 @@ class PeerExchange:
         if not fetches:
             empty = np.empty(0, np.int64)
             return empty, np.empty((0,) + self.sample_shape, self.dtype), empty
+        tr = obs_trace.get()
+        t0 = tr.t()
         ids = np.asarray([f.sample for f in fetches], np.int64)
         srcs = np.asarray([f.source for f in fetches], np.int64)
         rows = np.empty((ids.size,) + self.sample_shape, self.dtype)
@@ -576,4 +587,5 @@ class PeerExchange:
             )
         self.served += int(ok_all.sum())
         self.fallbacks += int((~ok_all).sum())
+        tr.rec(obs_trace.PEER_GATHER, t0, a=ids.size)
         return ids[ok_all], rows[ok_all], ids[~ok_all]

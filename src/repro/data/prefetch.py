@@ -48,6 +48,8 @@ import threading
 from collections import deque
 from concurrent.futures import ThreadPoolExecutor
 
+from repro.obs import trace as obs_trace
+
 __all__ = ["PrefetchExecutor", "WindowReadAhead"]
 
 _SENTINEL = object()
@@ -205,9 +207,12 @@ class PrefetchExecutor:
         return self._consume(run)
 
     def _consume(self, run: _Run):
+        tr = obs_trace.get()
         try:
             while True:
+                t0 = tr.t()
                 item = run.q.get()
+                tr.rec(obs_trace.PREFETCH_QWAIT, t0)
                 if item is _SENTINEL:
                     break
                 if isinstance(item, _Failure):

@@ -34,6 +34,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
+from repro.obs import log as obs_log
 from repro.data import (
     STRATEGIES,
     DatasetSpec,
@@ -58,6 +59,7 @@ def _add_pipeline_args(ap: argparse.ArgumentParser) -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--plan-cache", default=None,
                     help="directory memoizing compiled plans by config hash")
+    obs_log.add_verbosity_args(ap)
 
 
 def _add_train_args(ap: argparse.ArgumentParser) -> None:
@@ -224,6 +226,13 @@ def _add_distributed_args(ap: argparse.ArgumentParser) -> None:
                          "depth+1 steps and pipeline that many steps of "
                          "chunk reads inside the window (0 = lockstep; "
                          "digests are depth-invariant)")
+    ap.add_argument("--trace-dir", default=None, metavar="DIR",
+                    help="flight recorder (DESIGN.md §13): every rank dumps "
+                         "trace-rank{N}.jsonl + a Chrome trace-event file "
+                         "here; analyze with `python -m repro.obs.report`")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the coordinator's live telemetry "
+                         "time-series + the final summary as one JSON file")
 
 
 def run_distributed_cmd(args) -> None:
@@ -273,6 +282,8 @@ def run_distributed_cmd(args) -> None:
     report = run_distributed(
         spec, schedule=schedule, timeout_s=args.timeout,
         faults=faults, recovery=args.recovery,
+        trace_dir=args.trace_dir, metrics_out=args.metrics_out,
+        verbosity=obs_log.verbosity_from(args),
     )
     out = report.summary()
     if args.verify:
@@ -377,6 +388,7 @@ def _add_stream_args(ap: argparse.ArgumentParser) -> None:
                          "distributed, every rank's slice digest matches "
                          "the in-process reference)")
     ap.add_argument("--timeout", type=float, default=300.0)
+    obs_log.add_verbosity_args(ap)
 
 
 def run_stream_cmd(args) -> None:
@@ -543,6 +555,7 @@ def main(argv=None):
         help="train over a live sample stream: seeded admission, rolling "
              "window plans, deterministic vs an offline replan"))
     args = ap.parse_args(argv)
+    obs_log.configure(obs_log.verbosity_from(args))
     if args.cmd == "plan":
         run_plan(args)
     elif args.cmd == "distributed":

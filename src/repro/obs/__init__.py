@@ -1,0 +1,19 @@
+"""Observability: flight-recorder tracing, metrics, logging (DESIGN.md §13).
+
+* :mod:`repro.obs.trace` — per-thread ring-buffer span tracer (no-op
+  singleton unless enabled; JSONL + Chrome trace-event exports per rank).
+* :mod:`repro.obs.metrics` — counters/gauges/deterministic log2 histograms
+  behind one :class:`~repro.obs.metrics.MetricsRegistry`.
+* :mod:`repro.obs.log` — rank-tagged stdlib logging shared by the CLIs.
+* :mod:`repro.obs.report` — the ``python -m repro.obs.report`` CLI turning
+  trace dumps into a per-step "where did each ms go" breakdown.
+"""
+from repro.obs import log, metrics, trace  # noqa: F401
+from repro.obs.log import configure, get_logger  # noqa: F401
+from repro.obs.metrics import Histogram, MetricsRegistry  # noqa: F401
+from repro.obs.trace import Tracer  # noqa: F401
+
+__all__ = [
+    "log", "metrics", "trace",
+    "configure", "get_logger", "Histogram", "MetricsRegistry", "Tracer",
+]

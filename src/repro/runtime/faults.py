@@ -45,6 +45,8 @@ from typing import Iterable
 
 import numpy as np
 
+from repro.obs import trace as obs_trace
+
 __all__ = [
     "Fault",
     "FaultPlan",
@@ -250,8 +252,9 @@ class ArmedFaults:
     (``kind:site`` -> count) for the rank report.
     """
 
-    def __init__(self, faults: Iterable[Fault], rank: int):
+    def __init__(self, faults: Iterable[Fault], rank: int, seed: int = 0):
         self.rank = int(rank)
+        self.seed = int(seed)
         self.faults = tuple(faults)
         self._calls: dict[str, int] = {}
         self.fired: dict[str, int] = {}
@@ -259,6 +262,17 @@ class ArmedFaults:
     def _tally(self, fault: Fault) -> None:
         key = f"{fault.kind}:{fault.site or fault.step}"
         self.fired[key] = self.fired.get(key, 0) + 1
+        # every firing is also a trace instant (kind + site interned into
+        # the span name; a = the nth-passage/step it fired on, b = the plan
+        # seed) — a chaos run's trace shows each fault next to its latency
+        # effect (ISSUE 10 / DESIGN.md §13).
+        tr = obs_trace.get()
+        if tr.enabled:
+            tr.instant(
+                obs_trace.kind_id(f"fault.{key}"),
+                a=int(fault.nth if fault.nth is not None else fault.step or 0),
+                b=self.seed,
+            )
 
     def _bump(self, site: str) -> int:
         n = self._calls.get(site, 0) + 1
@@ -327,7 +341,7 @@ def arm(plan: FaultPlan | None, rank: int) -> ArmedFaults | None:
     if plan is None:
         _ACTIVE = None
         return None
-    _ACTIVE = ArmedFaults(plan.for_rank(rank), rank)
+    _ACTIVE = ArmedFaults(plan.for_rank(rank), rank, seed=plan.seed)
     return _ACTIVE
 
 

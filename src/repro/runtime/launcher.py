@@ -58,6 +58,7 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import hashlib
+import json
 import multiprocessing
 import os
 import socket
@@ -66,6 +67,7 @@ import threading
 import time
 from typing import Mapping
 
+from repro.obs import log as obs_log, metrics as obs_metrics, trace as obs_trace
 from repro.runtime import wire
 
 __all__ = [
@@ -78,6 +80,13 @@ __all__ = [
 ]
 
 _HOST = "127.0.0.1"
+
+_log = obs_log.get_logger("runtime.launcher")
+
+#: hard cap on retained heartbeat telemetry snapshots (cluster time-series):
+#: at the default 0.2 s beat this is hours of history, and a leaked
+#: heartbeat loop can never grow the coordinator without bound.
+_TELEMETRY_CAP = 200_000
 
 
 class LauncherConfigError(ValueError):
@@ -173,6 +182,10 @@ class _Coordinator:
         #: every window announcement broadcast so far — replayed to late
         #: registrants so no rank can miss a plan segment.
         self.windows_sent: list[dict] = []
+        #: cluster time-series of per-rank metric snapshots piggybacked on
+        #: heartbeats (§13 live telemetry; empty unless ranks send "m").
+        self.telemetry: list[dict] = []
+        self._telemetry_t0 = time.monotonic()
         self._closed = threading.Event()
         self._threads: list[threading.Thread] = []
         self._accept_thread = threading.Thread(
@@ -249,6 +262,15 @@ class _Coordinator:
                             # executing (skew diagnosis under DESIGN.md §11).
                             "window": msg.get("window"),
                         }
+                        m = msg.get("m")
+                        if m and len(self.telemetry) < _TELEMETRY_CAP:
+                            self.telemetry.append({
+                                "t": round(
+                                    time.monotonic() - self._telemetry_t0, 3
+                                ),
+                                "rank": rank,
+                                **{str(k): v for k, v in m.items()},
+                            })
                 elif kind == "suspect":
                     self._peer_suspect(rank, int(msg.get("node", -1)))
                 elif kind == "report":
@@ -286,6 +308,10 @@ class _Coordinator:
             self._conns[rank] = conn
             self.alive.add(rank)
             self.last_msg[rank] = time.monotonic()
+            _log.info(
+                "rank %d registered at %s:%s%s", rank, msg["host"],
+                msg["port"], " (rejoin)" if rejoin else "",
+            )
             if not rejoin:
                 self.joined_at.setdefault(rank, 0)
             if rejoin:
@@ -396,6 +422,10 @@ class _Coordinator:
                     elif age > self.suspect_timeout_s:
                         self.suspected.add(r)
                         self.probes_sent += 1
+                        _log.warning(
+                            "rank %d silent for %.2fs: suspected, probing",
+                            r, age,
+                        )
                         conn = self._conns.get(r)
                         if conn is not None:
                             self._send_ctrl(conn, {"kind": "probe"})
@@ -425,6 +455,7 @@ class _Coordinator:
         self.dead.add(rank)
         self.alive.discard(rank)
         self.suspected.discard(rank)
+        _log.warning("rank %d declared dead (recovery=%s)", rank, self.recovery)
         hb = self.hb_state.get(rank, {})
         if hb.get("agg"):
             # freeze the prefix the dead rank *reported* hashing; anything
@@ -450,6 +481,10 @@ class _Coordinator:
                 "endpoint": list(ep) if ep is not None else None,
             })
             self.resliced_nodes += 1
+            _log.info(
+                "re-slicing node %d (from step %d) onto rank %d",
+                node, from_step, adopter,
+            )
 
     # -- barriers --------------------------------------------------------------
 
@@ -593,6 +628,10 @@ class _ControlClient:
         self.windows: list[dict] = []
         #: bound by the rank loop: () -> (cursors dict, aggregate hex).
         self.progress = None
+        #: optional §13 telemetry hook: () -> a small JSON-safe metric
+        #: snapshot piggybacked on every heartbeat (None = no telemetry,
+        #: heartbeat frames byte-identical to the pre-§13 runtime).
+        self.metrics = None
         self._hb_stop = threading.Event()
         self._hb_pause_until = 0.0
         self._hb_thread: threading.Thread | None = None
@@ -622,12 +661,17 @@ class _ControlClient:
         snap = ({}, None) if self.progress is None else self.progress()
         cursors, agg = snap[0], snap[1]
         window = snap[2] if len(snap) > 2 else None
-        self._send({
+        msg = {
             "kind": "hb",
             "cursors": {str(k): int(v) for k, v in cursors.items()},
             "agg": agg,
             "window": window,
-        })
+        }
+        if self.metrics is not None:
+            m = self.metrics()
+            if m:
+                msg["m"] = m
+        self._send(msg)
 
     def start_heartbeats(self) -> None:
         self._hb_thread = threading.Thread(
@@ -689,6 +733,8 @@ class _ControlClient:
         Returns the release message itself — step-start releases may carry
         ownership ``assignments`` and endpoint updates.
         """
+        tr = obs_trace.get()
+        t0 = tr.t()
         self._send({"kind": "barrier", "name": name})
         while True:
             msg = self._recv()
@@ -697,6 +743,11 @@ class _ControlClient:
             elif msg.get("kind") == "window":
                 self.windows.append(msg)
             elif msg.get("kind") == "release" and msg.get("name") == name:
+                try:
+                    step = int(name.split(":", 1)[1])
+                except (IndexError, ValueError):
+                    step = -1
+                tr.rec(obs_trace.BARRIER_WAIT, t0, a=step)
                 return msg
 
     def wait_window(self, index: int, timeout_s: float | None = None) -> dict:
@@ -756,6 +807,17 @@ def _rank_main(rank: int, cfg: dict) -> None:
     barrier_timeout_s = float(cfg["barrier_timeout_s"])
     depth = max(int(cfg.get("prefetch_depth", 0)), 0)
     window_steps = depth + 1
+    # -- observability (§13): a spawned process starts bare — re-install the
+    # rank-tagged logger and, when the parent asked for a trace, the flight
+    # recorder.  With no "obs" entry every tracer call below is the no-op
+    # singleton and the run is byte-identical to the untraced runtime.
+    obs_cfg = cfg.get("obs") or {}
+    obs_log.configure(int(obs_cfg.get("verbosity", 0)), rank=rank)
+    if obs_cfg.get("trace_dir"):
+        obs_trace.enable(capacity=int(obs_cfg.get("capacity", 65536)))
+    tr = obs_trace.get()
+    step_hist = obs_metrics.Histogram()   # whole rank-loop iteration
+    fetch_hist = obs_metrics.Histogram()  # peer-gather + execute (data path)
     armed = faults_mod.arm(cfg.get("fault_plan"), rank)
     crash_at = armed.crash_step() if armed is not None else None
     if cfg.get("die_at_step") is not None:
@@ -855,6 +917,18 @@ def _rank_main(rank: int, cfg: dict) -> None:
                 return dict(cursors), bytes(agg).hex(), win_state["window"]
 
         ctrl.progress = _progress
+        if obs_cfg.get("telemetry"):
+            def _metrics_snap():
+                # compact on purpose: a heartbeat rides the control plane,
+                # so the live snapshot is quantiles + counts, never buckets.
+                return {
+                    "steps": step_hist.count,
+                    "step_p50_ms": step_hist.quantile_us(0.50) / 1e3,
+                    "step_p95_ms": step_hist.quantile_us(0.95) / 1e3,
+                    "fetch_p95_ms": fetch_hist.quantile_us(0.95) / 1e3,
+                }
+
+            ctrl.metrics = _metrics_snap
         ctrl.start_heartbeats()
 
         #: (node, step) -> the pulled (EpochPlan, NodeStepPlan-slice,
@@ -970,6 +1044,8 @@ def _rank_main(rank: int, cfg: dict) -> None:
         idx = int(resume_step)
         t0 = time.perf_counter()
         while idx < total_steps:
+            tr.set_step(idx)
+            t_step = time.perf_counter()
             win_state["window"] = idx // window_steps
             if idx % window_steps == 0:
                 # Window boundary: the ONLY synchronization point (DESIGN.md
@@ -977,12 +1053,14 @@ def _rank_main(rank: int, cfg: dict) -> None:
                 # publishing — the first pull after a fast-forward restages
                 # the mirror, and peers may fetch the moment the release
                 # lands.
+                t_prime = time.perf_counter()
                 for node in sorted(owned):
                     if pulled[node] <= idx:
                         cep, csp = next(iters[node])
                         prefetched[(node, idx)] = (cep, csp, None)
                         pulled[node] = idx + 1
                 server.at_step(idx)
+                tr.rec(obs_trace.STEP_PRIME, t_prime)
                 release = ctrl.barrier(f"s:{idx}")
                 _apply_release(release, idx)
             if crash_at is not None and idx == crash_at:
@@ -999,6 +1077,7 @@ def _rank_main(rank: int, cfg: dict) -> None:
             # current step's reads stay synchronous (execute_step performs
             # them); only strictly-future steps ride the read-ahead pool.
             horizon = min(total_steps, (idx // window_steps + 1) * window_steps)
+            t_prime = time.perf_counter()
             for node in sorted(owned):
                 tgt = min(idx + 1 + depth, horizon)
                 while pulled[node] < tgt:
@@ -1010,6 +1089,7 @@ def _rank_main(rank: int, cfg: dict) -> None:
                     )
                     prefetched[(node, step_i)] = (cep, csp, futs)
                     pulled[node] = step_i + 1
+            tr.rec(obs_trace.STEP_PRIME, t_prime)
             # Inside the window ranks run skewed: no f: barrier.  The
             # serving side's window-skew guard (history overlay for lag,
             # bounded wait for lead) keeps every fetched byte exact, and a
@@ -1019,10 +1099,13 @@ def _rank_main(rank: int, cfg: dict) -> None:
             if tier is not None:
                 tier.at_step(idx)
             transport.at_step(idx, window=idx // window_steps)
+            t_fetch = time.perf_counter()
             gathered = {
                 node: owned[node].gather_peers(prefetched[(node, idx)][1])
                 for node in sorted(owned)
             }
+            tr.rec(obs_trace.STEP_PEER, t_fetch)
+            t_exec = time.perf_counter()
             with server.mutating(idx):
                 for node in sorted(owned):
                     cep, csp, futs = prefetched.pop((node, idx))
@@ -1041,10 +1124,18 @@ def _rank_main(rank: int, cfg: dict) -> None:
                         # node appears in — but the cursor still advances.
                         with prog_lock:
                             cursors[node] = idx + 1
+            t_done = time.perf_counter()
+            tr.rec(obs_trace.STEP_EXECUTE, t_exec, t_done)
+            fetch_hist.record((t_done - t_fetch) * 1e6)
             # synchronous beat: the coordinator sees this step's cursors
             # and aggregate before the next boundary can re-slice them.
+            t_hb = time.perf_counter()
             with contextlib.suppress(OSError):
                 ctrl.heartbeat()
+            tr.rec(obs_trace.HB_SEND, t_hb)
+            t_end = time.perf_counter()
+            step_hist.record((t_end - t_step) * 1e6)
+            tr.rec(obs_trace.STEP, t_step, t_end)
             idx += 1
         # Closing barrier: without the per-step f: fence a fast rank could
         # tear down its buffer server while a peer up to `depth` steps
@@ -1075,6 +1166,10 @@ def _rank_main(rank: int, cfg: dict) -> None:
                         served_by_source.get(int(k), 0) + int(v)
                     )
         cursors_snap, agg_hex, _ = _progress()
+        reg = obs_metrics.MetricsRegistry()
+        reg.fold("loader", summary)
+        reg.fold("ladder", transport.stats())
+        reg.fold("tenant", server.tenant_stats())
         ctrl.report({
             "rank": rank,
             "digest": h.hexdigest(),
@@ -1098,6 +1193,12 @@ def _rank_main(rank: int, cfg: dict) -> None:
             "max_observed_skew": int(server.max_observed_skew),
             "adoption_boundaries": [int(b) for b in adoption_boundaries],
             "tenants": server.tenant_stats(),
+            "latency": obs_metrics.latency_summary(step_hist, fetch_hist),
+            "latency_hist": {
+                "step_us": step_hist.bucket_dict(),
+                "fetch_us": fetch_hist.bucket_dict(),
+            },
+            "metrics": reg.snapshot(),
         })
     finally:
         if tier is not None:
@@ -1111,6 +1212,10 @@ def _rank_main(rank: int, cfg: dict) -> None:
         store.close()
         ctrl.close()
         faults_mod.disarm()
+        tracer = obs_trace.disable()
+        if tracer is not None and obs_cfg.get("trace_dir"):
+            with contextlib.suppress(OSError):
+                tracer.dump(obs_cfg["trace_dir"], rank=rank)
 
 
 # ---------------------------------------------------------------------------
@@ -1161,6 +1266,14 @@ class RankResult:
     #: serving is off): tenant_hits / tenant_peer_reads /
     #: tenant_pfs_fallbacks / tenant_sheds + a per_tenant breakdown.
     tenants: dict = dataclasses.field(default_factory=dict)
+    #: §13 step/fetch latency quantiles (step_ms_p50/p95/p99, fetch_ms_*).
+    latency: dict = dataclasses.field(default_factory=dict)
+    #: raw log2 histogram buckets (µs) behind ``latency`` — mergeable
+    #: across ranks for the cluster quantiles in ``summary()``.
+    latency_hist: dict = dataclasses.field(default_factory=dict)
+    #: MetricsRegistry snapshot: the rank's loader/ladder/tenant counters
+    #: re-exported under one namespace (``loader.numPFS``, ...).
+    metrics: dict = dataclasses.field(default_factory=dict)
 
     def window_cursors(self) -> dict[int, list[int]]:
         """Each node's cursor as a ``[window, step-in-window]`` pair."""
@@ -1262,6 +1375,7 @@ class DistributedReport:
             "max_observed_skew": max(
                 (r.max_observed_skew for r in self.ranks), default=0
             ),
+            "latency": self._cluster_latency(),
             **ladder,
             **tenant_agg,
             "served_by_source": {str(k): serving[k] for k in sorted(serving)},
@@ -1289,11 +1403,23 @@ class DistributedReport:
                     "max_observed_skew": r.max_observed_skew,
                     "adoption_boundaries": r.adoption_boundaries,
                     "tenants": r.tenants,
+                    "latency": r.latency,
                     **{k: r.summary.get(k) for k in agg_keys},
                 }
                 for r in self.ranks
             ],
         }
+
+    def _cluster_latency(self) -> dict:
+        """Cluster-wide step/fetch quantiles from the mergeable per-rank
+        log2 histograms (§13) — exact bucket merges, not quantile averages."""
+        step = obs_metrics.merge_histograms(
+            r.latency_hist.get("step_us", {}) for r in self.ranks
+        )
+        fetch = obs_metrics.merge_histograms(
+            r.latency_hist.get("fetch_us", {}) for r in self.ranks
+        )
+        return obs_metrics.latency_summary(step, fetch)
 
 
 # ---------------------------------------------------------------------------
@@ -1332,6 +1458,11 @@ def run_distributed(
     retry=None,
     serve_tier=None,
     on_tier_ready=None,
+    trace_dir: str | None = None,
+    trace_capacity: int = 65536,
+    metrics_out: str | None = None,
+    telemetry: bool | None = None,
+    verbosity: int = 0,
 ) -> DistributedReport:
     """Execute ``spec``'s plan as ``spec.num_nodes`` real OS processes.
 
@@ -1371,6 +1502,18 @@ def run_distributed(
     argument carries ``endpoints`` (rank -> buffer-server address),
     ``plan_digest``, ``cluster_token``, and ``plan_service`` (address or
     ``None``) — the hook tenant clients attach through mid-run.
+
+    Observability (DESIGN.md §13): ``trace_dir`` turns on each rank's
+    flight recorder and dumps ``trace-rank{N}.jsonl`` +
+    ``trace-rank{N}.trace.json`` (Chrome trace-event) there at teardown
+    (``trace_capacity`` spans per ring, oldest overwritten);
+    ``metrics_out`` writes the coordinator's heartbeat-borne telemetry
+    time-series plus the final ``summary()`` as one JSON file.
+    ``telemetry`` forces the per-heartbeat metric snapshots on/off
+    (default: on iff ``metrics_out`` is set); ``verbosity`` sets the
+    ranks' structured-log level (0=WARNING, 1=INFO, 2=DEBUG, -1=ERROR).
+    With all of these at their defaults every rank runs the no-op tracer
+    and the run is digest- and counter-identical to an unobserved one.
     """
     import dataclasses as _dc
 
@@ -1442,6 +1585,17 @@ def run_distributed(
             ).start()
             plan_svc.publish(schedule)
 
+    obs_cfg = {
+        "trace_dir": trace_dir,
+        "capacity": int(trace_capacity),
+        "telemetry": bool(
+            telemetry if telemetry is not None else metrics_out is not None
+        ),
+        "verbosity": int(verbosity),
+    }
+    if trace_dir:
+        os.makedirs(trace_dir, exist_ok=True)
+
     base_retry = retry if retry is not None else RetryPolicy()
     restart_ranks = frozenset(int(r) for r in (restart_ranks or ()))
     coord = _Coordinator(
@@ -1475,6 +1629,7 @@ def run_distributed(
                 "retry": _dc.replace(base_retry, seed=base_retry.seed + rank),
                 "serve_tier": serve_tier,
                 "cluster_token": cluster_token,
+                "obs": obs_cfg,
             }
             cfgs.append(cfg)
             p = ctx.Process(
@@ -1605,8 +1760,11 @@ def run_distributed(
                     int(b) for b in rep.get("adoption_boundaries", ())
                 ],
                 tenants=dict(rep.get("tenants", {})),
+                latency=dict(rep.get("latency", {})),
+                latency_hist=dict(rep.get("latency_hist", {})),
+                metrics=dict(rep.get("metrics", {})),
             ))
-    return DistributedReport(
+    report = DistributedReport(
         num_ranks=spec.num_nodes, ranks=results,
         plan_digest=plan_digest, wall_time_s=wall,
         recovery=recovery,
@@ -1616,6 +1774,15 @@ def run_distributed(
         rejoins=coord.rejoins,
         resliced_nodes=coord.resliced_nodes,
     )
+    if metrics_out:
+        # live telemetry time-series (one row per heartbeat snapshot) plus
+        # the final aggregated summary — one self-contained JSON artifact.
+        with open(metrics_out, "w") as f:
+            json.dump(
+                {"telemetry": coord.telemetry, "summary": report.summary()},
+                f, indent=1, sort_keys=True,
+            )
+    return report
 
 
 # ---------------------------------------------------------------------------

@@ -66,6 +66,7 @@ import time
 
 import numpy as np
 
+from repro.obs import trace as obs_trace
 from repro.runtime import faults, wire
 
 __all__ = ["BufferServer", "TokenBucket", "INTERNAL_TENANT"]
@@ -418,13 +419,19 @@ class BufferServer:
         proceeds and contends on :attr:`guard` normally — the copy-out it
         performs there is a few microseconds, not a latency cliff.
         """
+        tr = obs_trace.get()
+        t0 = tr.t()
+        waited = False
         deadline = time.monotonic() + self._tenant_wait_s
         with self._prio:
             while self._trainer_busy > 0 and not self._closed.is_set():
                 remaining = deadline - time.monotonic()
                 if remaining <= 0:
-                    return
+                    break
+                waited = True
                 self._prio.wait(timeout=remaining)
+        if waited:
+            tr.rec(obs_trace.SERVE_TENANT_YIELD, t0)
 
     # -- serving side ----------------------------------------------------------
 
@@ -532,6 +539,8 @@ class BufferServer:
         self, conn: socket.socket, payload: bytes, serve_node: int
     ) -> None:
         step, ids = wire.unpack_fetch(payload)
+        tr = obs_trace.get()
+        t0 = tr.t()
         delay = faults.on_serve()
         if delay > 0:
             time.sleep(delay)  # injected slow-peer latency (chaos harness)
@@ -560,6 +569,7 @@ class BufferServer:
                 )
                 ok = np.zeros(ids.size, bool)
                 rows = np.empty((0,) + self.sample_shape, self.dtype)
+        tr.rec(obs_trace.SERVE_FETCH, t0, a=serve_node, b=ids.size)
         wire.send_frame(
             conn, wire.MSG_ROWS, wire.pack_rows(ok, rows), site="server.rows"
         )
@@ -578,11 +588,15 @@ class BufferServer:
         stale refusal: all-False mask, PFS fallback, never wrong bytes.
         """
         window, step, ids = wire.unpack_fetchw(payload)
+        tr = obs_trace.get()
+        t0 = tr.t()
         delay = faults.on_serve()
         if delay > 0:
             time.sleep(delay)  # injected slow-peer latency (chaos harness)
         with self._trainer_section(), self._advanced:
             deadline = time.monotonic() + self.skew_wait_s
+            t_park = tr.t()
+            parked = False
             while (
                 not self._closed.is_set()
                 and self._mirror_of is not None
@@ -592,7 +606,13 @@ class BufferServer:
                 remaining = deadline - time.monotonic()
                 if remaining <= 0:
                     break
+                parked = True
                 self._advanced.wait(timeout=remaining)
+            if parked:
+                # §11 lead wait: the requester ran ahead and we parked the
+                # serve until the delta replay caught up (or the bound hit).
+                tr.rec(obs_trace.SERVE_SKEW_PARK, t_park, a=serve_node,
+                       b=int(step))
             mirror = (
                 self._mirror_of(serve_node)
                 if self._mirror_of is not None and serve_node in self.serving
@@ -638,6 +658,7 @@ class BufferServer:
                 self.stale_refusals += int(mirror is not None)
                 ok = np.zeros(ids.size, bool)
                 rows = np.empty((0,) + self.sample_shape, self.dtype)
+        tr.rec(obs_trace.SERVE_FETCH, t0, a=serve_node, b=ids.size)
         wire.send_frame(
             conn, wire.MSG_ROWS, wire.pack_rows(ok, rows), site="server.rows"
         )
@@ -741,6 +762,7 @@ class BufferServer:
                 if retry > 0:
                     with self._tenant_lock:
                         st.sheds += 1
+                    obs_trace.get().instant(obs_trace.SERVE_SHED, a=tenant)
                     wire.send_frame(
                         conn, wire.MSG_SHED,
                         wire.pack_shed(retry, "rate_limited"),
@@ -754,6 +776,7 @@ class BufferServer:
             if st is not None:
                 with self._tenant_lock:
                     st.sheds += 1
+            obs_trace.get().instant(obs_trace.SERVE_SHED, a=tenant)
             wire.send_frame(
                 conn, wire.MSG_SHED, wire.pack_shed(0.05, "queue_full")
             )

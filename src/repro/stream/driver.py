@@ -27,10 +27,13 @@ import time
 from repro.core.plan import Schedule
 from repro.data.loaders import stream_digest, update_batch_digest
 from repro.data.pipeline import LoaderSpec, execute
+from repro.obs import log as obs_log
 from repro.stream.ingest import IngestSession, WindowManifest
 from repro.stream.windows import STREAM_STRATEGY, WindowPlanner
 
 __all__ = ["StreamReport", "run_stream"]
+
+_log = obs_log.get_logger("stream.driver")
 
 
 @dataclasses.dataclass
@@ -126,6 +129,10 @@ def run_stream(
     seg0 = planner.plan_window(m0.ids)
     bootstrap_s = time.perf_counter() - t_run
     plan_s = time.perf_counter() - t0
+    _log.info(
+        "window 0 sealed: %d samples (%d fresh), planned in %.3fs",
+        int(m0.ids.size), int(m0.fresh), plan_s,
+    )
     segments = [seg0]
     manifests = [m0]
     window_meta = [
@@ -184,12 +191,22 @@ def run_stream(
                 _plan_next(holder)  # stop-the-world: training stalls here
             else:
                 th.join()
-            blocked_s += time.perf_counter() - tb
+            boundary_wait = time.perf_counter() - tb
+            blocked_s += boundary_wait
             if "error" in holder:
                 raise holder["error"]
             seg = holder.get("segment")
             if seg is None:
+                _log.info(
+                    "stream drained after window %d (%d steps)", k, steps
+                )
                 break
+            _log.debug(
+                "window %d boundary: waited %.3fs on planning "
+                "(%d samples, %d fresh)",
+                k + 1, boundary_wait,
+                holder["meta"]["manifest"], holder["meta"]["fresh"],
+            )
             plan_s += holder["plan_s"]
             segments.append(seg)
             manifests.append(holder["manifest"])

@@ -24,6 +24,8 @@ import time
 import jax
 import numpy as np
 
+from repro.obs import trace as obs_trace
+
 from repro.checkpoint.checkpoint import (
     AsyncCheckpointer,
     latest_checkpoint,
@@ -123,17 +125,21 @@ class Trainer:
         if self.skip_steps and fast_forward is not None:
             fast_forward(self.skip_steps)
             global_step = self.skip_steps
+        tr = obs_trace.get()
         try:
             for sb in source:
                 if global_step < self.skip_steps:
                     global_step += 1
                     continue
+                tr.set_step(global_step)
                 t0 = time.perf_counter()
                 batch = self.make_batch(sb)
                 t1 = time.perf_counter()
+                tr.rec(obs_trace.TRAIN_MAKE_BATCH, t0, t1)
                 self.state, metrics = self.step_fn(self.state, batch)
                 jax.block_until_ready(metrics["loss"])
                 t2 = time.perf_counter()
+                tr.rec(obs_trace.TRAIN_COMPUTE, t1, t2)
                 self.load_time_s += t1 - t0
                 self.compute_time_s += t2 - t1
                 rec = {k: float(np.asarray(v)) for k, v in metrics.items()}
